@@ -1,0 +1,56 @@
+"""Beyond-paper ablations: operating-envelope stress + algorithm variants.
+
+The paper-faithful weight update oscillates when utilization approaches
+capacity (synchronized herd -> overload -> flee; see EXPERIMENTS.md
+§Perf-algorithms). Variants benchmarked at increasing load:
+
+  paper     : Alg 1 verbatim
+  ema       : EMA-damped weight updates (weight_ema=0.7)
+  ucb       : + exploration bonus on the KDE estimate
+  empirical : windowed success *fraction* instead of KDE (prior work [2])
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.continuum import (SimConfig, client_qos_satisfaction,
+                             make_topology, run_sim)
+from repro.core import BanditParams
+
+VARIANTS = {
+    "paper": {},
+    "ema": dict(weight_ema=0.7),
+    "ucb": dict(ucb_coef=0.05),
+    "ema+ucb": dict(weight_ema=0.7, ucb_coef=0.05),
+    "empirical": dict(kde_mode=1),
+}
+SERVICE_TIMES = (0.0055, 0.006, 0.0065)     # 66% / 72% / 78% utilization
+
+
+def beyond_paper_variants():
+    def compute():
+        out = {}
+        topo = make_topology(jax.random.PRNGKey(5), 30, 10)  # collapse-prone
+        rtt = topo.lb_instance_rtt()
+        for st_ in SERVICE_TIMES:
+            cfg = SimConfig(horizon=180.0, service_time=st_)
+            warm = int(60 / cfg.dt)
+            util = 1200 * st_ / 10
+            row = {}
+            for name, kw in VARIANTS.items():
+                params = BanditParams(tau=cfg.tau, rho=cfg.rho,
+                                      window=cfg.window, **kw)
+                o = run_sim("qedgeproxy", rtt, cfg, jax.random.PRNGKey(105),
+                            params=params)
+                row[name] = client_qos_satisfaction(o, cfg.rho, warm)
+            out[f"util_{util:.0%}"] = row
+        return out
+
+    payload, us = timed(compute)
+    derived = " | ".join(
+        f"{k}: " + " ".join(f"{n}={v:.0f}%" for n, v in row.items())
+        for k, row in payload.items())
+    emit("beyond_paper_variants", us, derived, payload)
+    return payload

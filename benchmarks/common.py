@@ -1,0 +1,63 @@
+"""Shared benchmark harness: run the paper's evaluation suite once
+(5 scenarios x 4 strategies, §VII-A6) and hand trajectories to the
+per-figure benches."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.continuum import SimConfig, make_topology, run_sim
+
+SCENARIOS = (1, 2, 3, 4, 5)
+STRATEGIES = (
+    ("qedgeproxy", {}),
+    ("proxy_mity_1.0", dict(alpha=1.0)),
+    ("proxy_mity_0.9", dict(alpha=0.9)),
+    ("dec_sarsa", {}),
+)
+CFG = SimConfig(horizon=180.0)
+WARM = int(60 / CFG.dt)
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/benchmarks")
+
+_cache = {}
+
+
+def strategy_name(label: str) -> str:
+    return "proxy_mity" if label.startswith("proxy_mity") else label
+
+
+def get_suite():
+    """{(scenario, label): SimOutputs} for the full evaluation grid."""
+    if _cache:
+        return _cache
+    for seed in SCENARIOS:
+        topo = make_topology(jax.random.PRNGKey(seed), 30, 10)
+        rtt = topo.lb_instance_rtt()
+        for label, kw in STRATEGIES:
+            outs = run_sim(strategy_name(label), rtt, CFG,
+                           jax.random.PRNGKey(100 + seed), **kw)
+            jax.block_until_ready(outs.rewards)
+            _cache[(seed, label)] = outs
+        _cache[("topo", seed)] = topo
+    return _cache
+
+
+def emit(name: str, us_per_call: float, derived, payload=None):
+    """CSV line per the harness contract + JSON artifact."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if payload is not None:
+        with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+
+
+def timed(fn, *args, repeat=1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

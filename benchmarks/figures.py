@@ -1,0 +1,244 @@
+"""One benchmark per paper figure (Figs 3-11). Each returns a payload
+dict and emits a CSV line; see EXPERIMENTS.md §Paper-validation for the
+side-by-side against the paper's reported numbers."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (CFG, SCENARIOS, STRATEGIES, WARM, emit,
+                               get_suite, timed)
+from repro.continuum import (client_qos_satisfaction, cumulative_regret,
+                             jain_fairness, p90_proc_latency,
+                             per_client_success, per_lb_request_distribution,
+                             request_rate_per_instance, rolling_qos)
+
+
+def fig3_qos_success():
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            vals = [client_qos_satisfaction(suite[(s, label)], CFG.rho, WARM)
+                    for s in SCENARIOS]
+            out[label] = {"per_scenario": vals,
+                          "mean": float(np.mean(vals)),
+                          "std": float(np.std(vals))}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(f"{k}={v['mean']:.1f}%" for k, v in payload.items())
+    emit("fig3_qos_success", us, derived, payload)
+    return payload
+
+
+def fig4_fairness():
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            vals = [jain_fairness(suite[(s, label)], warmup_steps=WARM)
+                    for s in SCENARIOS]
+            out[label] = {"per_scenario": vals,
+                          "mean": float(np.mean(vals))}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(f"{k}={v['mean']:.3f}" for k, v in payload.items())
+    emit("fig4_fairness", us, derived, payload)
+    return payload
+
+
+def fig5_per_client():
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            ratio, present = per_client_success(suite[(1, label)], WARM)
+            r = np.sort(ratio[present])
+            out[label] = {
+                "min": float(r[0]), "p25": float(np.percentile(r, 25)),
+                "median": float(np.median(r)),
+                "clients_below_target": int((r < CFG.rho).sum()),
+                "n_clients": int(r.size),
+            }
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(f"{k}:below={v['clients_below_target']}/{v['n_clients']}"
+                       for k, v in payload.items())
+    emit("fig5_per_client", us, derived, payload)
+    return payload
+
+
+def fig6_rolling_qos():
+    suite = get_suite()
+    win = int(CFG.window / CFG.dt)
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            roll = rolling_qos(suite[(1, label)], win)
+            steady = roll[WARM:].mean()
+            # convergence: first time rolling QoS reaches 95% of steady
+            thresh = 0.95 * steady
+            idx = np.argmax(roll >= thresh)
+            out[label] = {"steady": float(steady),
+                          "convergence_s": float(idx * CFG.dt),
+                          "curve_30s_samples": roll[::50][:40].tolist()}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(
+        f"{k}:steady={v['steady']:.3f}@{v['convergence_s']:.0f}s"
+        for k, v in payload.items())
+    emit("fig6_rolling_qos", us, derived, payload)
+    return payload
+
+
+def fig7_request_distribution():
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            rate = request_rate_per_instance(suite[(1, label)], CFG.dt, WARM)
+            out[label] = {"per_instance_req_s": rate.tolist(),
+                          "max": float(rate.max()), "min": float(rate.min())}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(f"{k}:max={v['max']:.0f}r/s" for k, v in payload.items())
+    emit("fig7_request_distribution", us, derived, payload)
+    return payload
+
+
+def fig8_p90_latency():
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            p90 = p90_proc_latency(suite[(1, label)], WARM)
+            out[label] = {"per_instance_ms": (p90 * 1e3).tolist(),
+                          "max_ms": float(p90.max() * 1e3)}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(f"{k}:maxp90={v['max_ms']:.0f}ms"
+                       for k, v in payload.items())
+    emit("fig8_p90_latency", us, derived, payload)
+    return payload
+
+
+def fig9_single_lb():
+    suite = get_suite()
+    topo = suite[("topo", 1)]
+    inst_nodes = set(np.asarray(topo.instance_nodes).tolist())
+    lb_local = next(i for i in range(30) if i in inst_nodes)
+    lb_remote = next(i for i in range(30) if i not in inst_nodes)
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            o = suite[(1, label)]
+            out[label] = {
+                "lb_with_local": per_lb_request_distribution(
+                    o, lb_local, WARM).tolist(),
+                "lb_without_local": per_lb_request_distribution(
+                    o, lb_remote, WARM).tolist(),
+            }
+            for key in ("lb_with_local", "lb_without_local"):
+                p = np.asarray(out[label][key])
+                nz = p[p > 0]
+                out[label][key + "_entropy"] = float(
+                    -(nz * np.log(nz)).sum())
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(
+        f"{k}:H_local={v['lb_with_local_entropy']:.2f}"
+        f"/H_remote={v['lb_without_local_entropy']:.2f}"
+        for k, v in payload.items())
+    emit("fig9_single_lb", us, derived, payload)
+    return payload
+
+
+def _event_run(event: str):
+    import jax
+    import jax.numpy as jnp
+    from repro.continuum import make_topology, run_sim
+    topo = get_suite()[("topo", 1)]
+    rtt = topo.lb_instance_rtt()
+    T = CFG.num_steps
+    win = int(CFG.window / CFG.dt)
+    out = {}
+    for label, kw in STRATEGIES:
+        from benchmarks.common import strategy_name
+        if event == "surge":
+            n_clients = np.full((T, 30), 2, np.int32)
+            rng = np.random.default_rng(0)
+            n_clients[T // 2:, rng.choice(30, 15, replace=False)] += 2
+            o = run_sim(strategy_name(label), rtt, CFG,
+                        jax.random.PRNGKey(11),
+                        n_clients=jnp.asarray(n_clients), **kw)
+        else:
+            active = np.ones((T, 10), bool)
+            active[T // 2:, 9] = False
+            o = run_sim(strategy_name(label), rtt, CFG,
+                        jax.random.PRNGKey(11),
+                        active=jnp.asarray(active), **kw)
+        roll = rolling_qos(o, win)
+        pre = roll[T // 2 - win:T // 2].mean()
+        dip = roll[T // 2:T // 2 + 3 * win].min()
+        tail = roll[-int(20 / CFG.dt):].mean()
+        # recovery: first time after the event at >= 0.95*tail
+        post = roll[T // 2:]
+        rec_idx = int(np.argmax(post >= 0.95 * tail))
+        out[label] = {"pre": float(pre), "dip": float(dip),
+                      "post_steady": float(tail),
+                      "recovery_s": rec_idx * CFG.dt}
+    return out
+
+
+def fig10_client_surge():
+    payload, us = timed(_event_run, "surge")
+    derived = " ".join(
+        f"{k}:post={v['post_steady']:.2f}@{v['recovery_s']:.0f}s"
+        for k, v in payload.items())
+    emit("fig10_client_surge", us, derived, payload)
+    return payload
+
+
+def fig11_instance_removal():
+    payload, us = timed(_event_run, "removal")
+    derived = " ".join(
+        f"{k}:post={v['post_steady']:.2f}@{v['recovery_s']:.0f}s"
+        for k, v in payload.items())
+    emit("fig11_instance_removal", us, derived, payload)
+    return payload
+
+
+def regret_curve():
+    """§V-E empirics: cumulative regret growth exponent (<1 = sublinear)."""
+    suite = get_suite()
+
+    def compute():
+        out = {}
+        for label, _ in STRATEGIES:
+            reg = cumulative_regret(suite[(1, label)])
+            t = np.arange(1, len(reg) + 1)
+            sl = slice(len(reg) // 4, None)
+            slope = np.polyfit(np.log(t[sl]), np.log(reg[sl] + 1e-9), 1)[0]
+            out[label] = {"total_regret": float(reg[-1]),
+                          "late_growth_exponent": float(slope)}
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(
+        f"{k}:R(T)={v['total_regret']:.0f},exp={v['late_growth_exponent']:.2f}"
+        for k, v in payload.items())
+    emit("regret_curve", us, derived, payload)
+    return payload

@@ -1,0 +1,87 @@
+"""Resource footprint (paper §VII-E) + scale-out cost of the bandit.
+
+The paper reports 0.13 cores / 60 MB per proxy at 40 req/s. Our
+equivalents: µs per routed request (select+record) and µs per
+maintenance step, at the paper's scale (K=30, M=10) and at datacenter
+scale (K=1024 front-ends x M=64 replicas) — the O(K·M·R) vectorized
+state is the 1000+-node story.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import BanditParams, init_state, maintenance, record, select
+
+
+def _bench_scale(K, M, ring=64):
+    p = BanditParams()
+    st = init_state(K, M, p, ring=ring, key=jax.random.PRNGKey(0))
+    rtt = jnp.asarray(np.random.default_rng(0).uniform(0.002, 0.04, (K, M)),
+                      jnp.float32)
+    sel = jax.jit(select)
+    rec = jax.jit(record, static_argnums=1)
+    mnt = jax.jit(maintenance, static_argnums=1)
+
+    # warm up + state with data
+    choice, st, _ = sel(st)
+    lat = rtt[jnp.arange(K), choice] + 0.01
+    st = rec(st, p, choice, lat, jnp.float32(0.0), jnp.ones((K,), bool))
+    st = mnt(st, p, rtt, jnp.float32(1.0))
+    jax.block_until_ready(st.weights)
+
+    def route_once(st, t):
+        choice, st, _ = sel(st)
+        lat = rtt[jnp.arange(K), choice] + 0.01
+        return rec(st, p, choice, lat, t, jnp.ones((K,), bool))
+
+    _, us_route = timed(
+        lambda: jax.block_until_ready(route_once(st, jnp.float32(2.0))),
+        repeat=20)
+    _, us_maint = timed(
+        lambda: jax.block_until_ready(mnt(st, p, rtt, jnp.float32(3.0))),
+        repeat=20)
+    state_mb = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(st)) / 1e6
+    return {"route_us": us_route, "maintenance_us": us_maint,
+            "state_mb": state_mb,
+            "route_us_per_player": us_route / K,
+            "maintenance_us_per_player": us_maint / K}
+
+
+def footprint():
+    payload = {
+        "paper_scale_K30_M10": _bench_scale(30, 10),
+        "datacenter_scale_K1024_M64": _bench_scale(1024, 64),
+    }
+    derived = (
+        f"K30xM10:route={payload['paper_scale_K30_M10']['route_us']:.0f}us,"
+        f"maint={payload['paper_scale_K30_M10']['maintenance_us']:.0f}us;"
+        f"K1024xM64:maint={payload['datacenter_scale_K1024_M64']['maintenance_us']:.0f}us,"
+        f"state={payload['datacenter_scale_K1024_M64']['state_mb']:.0f}MB")
+    emit("footprint", payload["paper_scale_K30_M10"]["route_us"], derived,
+         payload)
+    return payload
+
+
+def kde_hotspot():
+    """µs per fused KDE evaluation (the Alg-1 line-12 hot spot)."""
+    from repro.kernels import ref
+    from repro.kernels.kde import kde_success_prob
+    rng = np.random.default_rng(0)
+    out = {}
+    for rows, R in ((300, 64), (65536, 64)):
+        lat = jnp.asarray(rng.exponential(0.03, (rows, R)), jnp.float32)
+        mask = jnp.asarray(rng.random((rows, R)) < 0.7)
+        bw = jnp.asarray(rng.uniform(1e-3, 1e-2, rows), jnp.float32)
+        f_ref = jax.jit(lambda l, m, b: ref.kde_success_prob(l, m, 0.08, b))
+        jax.block_until_ready(f_ref(lat, mask, bw))
+        _, us = timed(lambda: jax.block_until_ready(f_ref(lat, mask, bw)),
+                      repeat=10)
+        out[f"rows{rows}"] = {"xla_us": us, "us_per_row": us / rows}
+    emit("kde_hotspot", out["rows300"]["xla_us"],
+         f"300rows={out['rows300']['xla_us']:.0f}us "
+         f"65536rows={out['rows65536']['xla_us']:.0f}us", out)
+    return out

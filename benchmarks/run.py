@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract) and writes a
+JSON artifact per benchmark into results/benchmarks/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3_qos_success ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import beyond, figures, footprint
+
+ALL = {
+    # paper §VII figures
+    "fig3_qos_success": figures.fig3_qos_success,
+    "fig4_fairness": figures.fig4_fairness,
+    "fig5_per_client": figures.fig5_per_client,
+    "fig6_rolling_qos": figures.fig6_rolling_qos,
+    "fig7_request_distribution": figures.fig7_request_distribution,
+    "fig8_p90_latency": figures.fig8_p90_latency,
+    "fig9_single_lb": figures.fig9_single_lb,
+    "fig10_client_surge": figures.fig10_client_surge,
+    "fig11_instance_removal": figures.fig11_instance_removal,
+    # theory + footprint (paper §V-E, §VII-E)
+    "regret_curve": figures.regret_curve,
+    "footprint": footprint.footprint,
+    "kde_hotspot": footprint.kde_hotspot,
+    # beyond-paper
+    "beyond_paper_variants": beyond.beyond_paper_variants,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(ALL), default=None)
+    args = ap.parse_args()
+    names = args.only or list(ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            ALL[name]()
+        except Exception as e:  # keep the harness running; report at end
+            failures.append((name, repr(e)))
+            print(f"{name},nan,ERROR {e!r}")
+    if failures:
+        sys.exit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == '__main__':
+    main()

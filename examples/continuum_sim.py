@@ -1,0 +1,49 @@
+"""Reproduce the paper's headline experiment (§VII-B) end to end:
+
+30-node CC, 10 PilotNet-like instances, 120 clients @ 10 req/s,
+(tau=80ms, rho=0.9, W=10s), comparing QEdgeProxy vs proxy-mity (1.0,
+0.9) vs Dec-SARSA — prints the Fig. 3 / Fig. 4 numbers.
+
+  PYTHONPATH=src python examples/continuum_sim.py [--horizon 180]
+"""
+import argparse
+
+import jax
+
+from repro.continuum import (SimConfig, client_qos_satisfaction,
+                             jain_fairness, make_topology, rolling_qos,
+                             run_sim)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--horizon", type=float, default=180.0)
+    ap.add_argument("--scenario", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = SimConfig(horizon=args.horizon)
+    warm = int(60 / cfg.dt)
+    topo = make_topology(jax.random.PRNGKey(args.scenario), 30, 10)
+    rtt = topo.lb_instance_rtt()
+    print(f"topology: 30 nodes, 10 instances on nodes "
+          f"{topo.instance_nodes.tolist()}")
+    print(f"QoS: tau={cfg.tau*1e3:.0f}ms rho={cfg.rho} W={cfg.window}s; "
+          f"120 clients x 10 req/s\n")
+
+    print(f"{'strategy':18s} {'clients>=rho':>12s} {'fairness':>9s} "
+          f"{'steady QoS':>10s}")
+    for label, name, kw in [
+        ("QEdgeProxy", "qedgeproxy", {}),
+        ("proxy-mity 1.0", "proxy_mity", dict(alpha=1.0)),
+        ("proxy-mity 0.9", "proxy_mity", dict(alpha=0.9)),
+        ("Dec-SARSA", "dec_sarsa", {}),
+    ]:
+        outs = run_sim(name, rtt, cfg, jax.random.PRNGKey(7), **kw)
+        sat = client_qos_satisfaction(outs, cfg.rho, warm)
+        fair = jain_fairness(outs, warmup_steps=warm)
+        roll = rolling_qos(outs, int(cfg.window / cfg.dt))[warm:].mean()
+        print(f"{label:18s} {sat:11.1f}% {fair:9.3f} {roll:10.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (atomic, async, elastic-restorable)."""
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,29 @@
+"""Computing-Continuum emulation substrate (paper §VII testbed in JAX)."""
+from repro.continuum.metrics import (
+    client_qos_satisfaction,
+    cumulative_regret,
+    jain_fairness,
+    p90_proc_latency,
+    per_client_success,
+    per_lb_request_distribution,
+    per_lb_rolling_qos,
+    request_rate_per_instance,
+    rolling_qos,
+    variation_budget_emp,
+)
+from repro.continuum.simulator import SimConfig, SimOutputs, run_sim
+from repro.continuum.topology import (
+    Topology,
+    european_rtt_matrix,
+    k_center_placement,
+    make_topology,
+)
+
+__all__ = [
+    "SimConfig", "SimOutputs", "run_sim",
+    "Topology", "european_rtt_matrix", "k_center_placement", "make_topology",
+    "client_qos_satisfaction", "jain_fairness", "rolling_qos",
+    "per_lb_rolling_qos", "per_client_success", "request_rate_per_instance",
+    "p90_proc_latency", "per_lb_request_distribution", "cumulative_regret",
+    "variation_budget_emp",
+]

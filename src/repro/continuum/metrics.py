@@ -1,0 +1,113 @@
+"""Metric extraction from simulator trajectories (paper §VII figures)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.continuum.simulator import SimOutputs
+
+
+def per_client_success(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
+    """(K, C) fraction of each client's requests meeting QoS (Fig. 5)."""
+    r = np.asarray(outs.rewards)[warmup_steps:]
+    m = np.asarray(outs.issued)[warmup_steps:]
+    n = np.maximum(m.sum(0), 1)
+    return (r * m).sum(0) / n, m.sum(0) > 0
+
+
+def client_qos_satisfaction(outs: SimOutputs, rho: float,
+                            warmup_steps: int = 0) -> float:
+    """% of clients whose success ratio >= rho (Fig. 3)."""
+    ratio, present = per_client_success(outs, warmup_steps)
+    ok = (ratio >= rho) & present
+    return 100.0 * ok.sum() / max(present.sum(), 1)
+
+
+def jain_fairness(outs: SimOutputs, reachable: np.ndarray | None = None,
+                  warmup_steps: int = 0) -> float:
+    """Jain's index over per-instance request totals (Fig. 4).
+
+    ``reachable`` optionally restricts to instances inside anyone's QoS
+    reach (the paper's i2 sits outside every node's reach and pins at
+    its host's constant rate).
+    """
+    x = np.asarray(outs.arrivals)[warmup_steps:].sum(0)
+    if reachable is not None:
+        x = x[reachable]
+    s = x.sum()
+    if s <= 0:
+        return 0.0
+    return float(s * s / (len(x) * (x * x).sum()))
+
+
+def rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
+    """(T,) rolling overall QoS success rate (Fig. 6)."""
+    r = (np.asarray(outs.rewards) * np.asarray(outs.issued)).sum((1, 2))
+    n = np.asarray(outs.issued).sum((1, 2)).astype(np.float64)
+    T = len(r)
+    out = np.zeros(T)
+    cs_r = np.concatenate([[0.0], np.cumsum(r)])
+    cs_n = np.concatenate([[0.0], np.cumsum(n)])
+    for t in range(T):
+        lo = max(0, t - window_steps + 1)
+        num = cs_r[t + 1] - cs_r[lo]
+        den = cs_n[t + 1] - cs_n[lo]
+        out[t] = num / max(den, 1.0)
+    return out
+
+
+def per_lb_rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
+    """(T, K) rolling per-LB QoS success rate."""
+    r = (np.asarray(outs.rewards) * np.asarray(outs.issued)).sum(2)   # (T,K)
+    n = np.asarray(outs.issued).sum(2).astype(np.float64)
+    T, K = r.shape
+    out = np.zeros((T, K))
+    cs_r = np.concatenate([np.zeros((1, K)), np.cumsum(r, 0)])
+    cs_n = np.concatenate([np.zeros((1, K)), np.cumsum(n, 0)])
+    for t in range(T):
+        lo = max(0, t - window_steps + 1)
+        num = cs_r[t + 1] - cs_r[lo]
+        den = np.maximum(cs_n[t + 1] - cs_n[lo], 1.0)
+        out[t] = num / den
+    return out
+
+
+def request_rate_per_instance(outs: SimOutputs, dt: float,
+                              warmup_steps: int = 0) -> np.ndarray:
+    """(M,) average req/s per instance (Fig. 7)."""
+    a = np.asarray(outs.arrivals)[warmup_steps:]
+    return a.sum(0) / (a.shape[0] * dt)
+
+
+def p90_proc_latency(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
+    """(M,) p90 of processing latency per instance (Fig. 8)."""
+    proc = np.asarray(outs.proc_lat)[warmup_steps:]
+    m = np.asarray(outs.issued)[warmup_steps:]
+    ch = np.asarray(outs.choices)[warmup_steps:]
+    M = outs.arrivals.shape[1]
+    out = np.zeros(M)
+    for i in range(M):
+        sel = m & (ch == i)
+        vals = proc[sel]
+        out[i] = np.percentile(vals, 90) if vals.size else 0.0
+    return out
+
+
+def per_lb_request_distribution(outs: SimOutputs, lb: int,
+                                warmup_steps: int = 0) -> np.ndarray:
+    """(M,) share of LB `lb`'s requests per instance (Fig. 9)."""
+    m = np.asarray(outs.issued)[warmup_steps:, lb]
+    ch = np.asarray(outs.choices)[warmup_steps:, lb]
+    M = outs.arrivals.shape[1]
+    counts = np.bincount(ch[m], minlength=M).astype(np.float64)
+    return counts / max(counts.sum(), 1.0)
+
+
+def cumulative_regret(outs: SimOutputs) -> np.ndarray:
+    """(T,) system regret sum_k R_k(t) (Eq. 9)."""
+    return np.cumsum(np.asarray(outs.regret).sum(1))
+
+
+def variation_budget_emp(outs: SimOutputs) -> np.ndarray:
+    """(K,) empirical V_k(T) from the true-mu trajectory (Def. 1)."""
+    mu = np.asarray(outs.true_mu)
+    return np.abs(np.diff(mu, axis=0)).max(-1).sum(0)

@@ -1,0 +1,309 @@
+"""Discrete-time CC simulator (paper §VII testbed, fully on-device).
+
+Time advances in steps of ``dt`` (default 100 ms = one client period, so
+every client issues exactly one request per step, matching the paper's
+10 req/s PilotNet clients). Within a step, requests are issued in
+*rounds* (round r = client r of every LB) so that same-round requests
+from different LBs collide on instance queues — the paper's "implicit
+collisions".
+
+Instance model: single-worker queue. A request arriving when the queue
+holds q requests observes processing latency ``(q+1) * s_m * Z`` with
+``Z ~ LogNormal(0, sigma^2)``; the queue drains at ``dt / s_m`` requests
+per step. End-to-end latency is ``rtt[k,m] + proc`` (client↔LB latency
+is negligible per §IV-A; RTTs are fixed Istio-style injected delays).
+
+The *true* per-arm success probability used for oracle regret has the
+closed form ``mu = Phi(ln((tau - rtt)/((q+1) s_m)) / sigma)``.
+
+The whole horizon runs in one ``lax.scan``; strategies are closures
+chosen at trace time (QEdgeProxy / proxy-mity / Dec-SARSA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandit as qb
+from repro.core import baselines as bl
+from repro.core.kde import normal_cdf
+from repro.core.oracle import step_regret
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    dt: float = 0.1                  # step length [s] = client period
+    horizon: float = 300.0           # simulated seconds
+    maint_every: int = 10            # QEdgeProxy decision interval H_d [steps]
+    max_clients: int = 8             # per-LB client slots (rounds per step)
+    service_time: float = 0.0055     # s_m: idle per-request processing [s]
+    # 0.0055 keeps the system well-provisioned (paper §IV-A assumption:
+    # an oracle allocation satisfying tau exists): 1200 req/s demand vs
+    # ~1800 req/s capacity, but any 4-5+ LBs herding on one instance
+    # still overload it — the proxy-mity failure mode.
+    proc_sigma: float = 0.25         # lognormal sigma of processing noise
+    tau: float = 0.080
+    rho: float = 0.9
+    window: float = 10.0
+    ring: int = 64
+    reward_ring: int = 512
+
+    @property
+    def num_steps(self) -> int:
+        return int(round(self.horizon / self.dt))
+
+
+class SimOutputs(NamedTuple):
+    """Per-step trajectories (leading axis T)."""
+    rewards: jax.Array      # (T, K, C) 1/0 QoS success per client slot
+    issued: jax.Array       # (T, K, C) request-issued mask
+    choices: jax.Array      # (T, K, C) selected instance
+    latency: jax.Array      # (T, K, C) end-to-end latency
+    proc_lat: jax.Array     # (T, K, C) processing component
+    arrivals: jax.Array     # (T, M) requests per instance
+    queue: jax.Array        # (T, M) queue length at step start
+    weights: jax.Array      # (T, K, M) routing distribution
+    true_mu: jax.Array      # (T, K, M) oracle success probabilities
+    regret: jax.Array       # (T, K) per-step oracle regret
+    eps: jax.Array          # (T, K) exploration rate (qedgeproxy) or 0
+
+
+def _true_mu(rtt, q, cfg: SimConfig):
+    """Closed-form P(rtt + (q+1) s Z <= tau), Z ~ LogNormal(0, sigma^2)."""
+    margin = (cfg.tau - rtt) / ((q[None, :] + 1.0) * cfg.service_time)
+    safe = jnp.maximum(margin, 1e-9)
+    mu = normal_cdf(jnp.log(safe) / cfg.proc_sigma)
+    return jnp.where(margin > 0, mu, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Strategy adapters: dicts of closures with a common signature.
+# ---------------------------------------------------------------------------
+
+def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int):
+    def init(rtt, active, key):
+        return qb.init_state(K, M, params, cfg.ring, cfg.reward_ring, active,
+                             key=key)
+
+    def select(state, key, t, active):
+        choice, state, valid = qb.select(state)
+        return choice, state
+
+    def record(state, choice, lat, t, mask):
+        return qb.record(state, params, choice, lat, t, mask)
+
+    def maintain(state, rtt, t, lb_mask=None):
+        return qb.maintenance(state, params, rtt, t, lb_mask)
+
+    def on_activity(state, new_active, rtt, t):
+        return qb.sync_active(state, params, new_active)
+
+    def weights(state):
+        return state.weights
+
+    def eps(state):
+        return state.eps
+
+    return dict(init=init, select=select, record=record, maintain=maintain,
+                on_activity=on_activity, weights=weights, eps=eps)
+
+
+def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
+    """Static proximity weights; requests sampled i.i.d. from them
+    (proxy-mity randomizes per request; there is no SWRR state)."""
+
+    class PMState(NamedTuple):
+        weights: jax.Array
+        key: jax.Array
+
+    def init(rtt, active, key):
+        return PMState(bl.proxy_mity_weights(rtt, alpha, active), key)
+
+    def select(state, key, t, active):
+        choice = jax.random.categorical(key, jnp.log(state.weights + 1e-30), axis=-1)
+        return choice, state
+
+    def record(state, choice, lat, t, mask):
+        return state
+
+    def maintain(state, rtt, t, lb_mask=None):
+        return state                     # fixed at initialization (paper)
+
+    def on_activity(state, new_active, rtt, t):
+        return state._replace(weights=bl.proxy_mity_weights(rtt, alpha, new_active))
+
+    def weights(state):
+        return state.weights
+
+    def eps(state):
+        return jnp.zeros((K,), jnp.float32)
+
+    return dict(init=init, select=select, record=record, maintain=maintain,
+                on_activity=on_activity, weights=weights, eps=eps)
+
+
+def dec_sarsa_strategy(params: bl.DecSarsaParams, cfg: SimConfig, K: int, M: int):
+    class DSState(NamedTuple):
+        inner: bl.DecSarsaState
+        active: jax.Array
+        pend_s: jax.Array      # state bucket used for the pending action
+
+    def init(rtt, active, key):
+        return DSState(bl.decsarsa_init(K, M, rtt, params), active,
+                       jnp.zeros((K,), jnp.int32))
+
+    def select(state, key, t, active):
+        choice, s = bl.decsarsa_select(state.inner, params, active, key)
+        return choice, state._replace(pend_s=s, active=active)
+
+    def record(state, choice, lat, t, mask):
+        reward = (lat <= params.tau).astype(jnp.float32)
+        inner = bl.decsarsa_update(
+            state.inner, params, state.pend_s, choice, reward, lat, mask)
+        return state._replace(inner=inner)
+
+    def maintain(state, rtt, t, lb_mask=None):
+        return state
+
+    def on_activity(state, new_active, rtt, t):
+        return state._replace(active=new_active)
+
+    def weights(state):
+        # effective eps-greedy distribution for regret accounting
+        K_, S, M_ = state.inner.q.shape
+        s = state.pend_s
+        qs = state.inner.q[jnp.arange(K_), s]
+        neg = jnp.finfo(qs.dtype).min
+        qs = jnp.where(state.active[None, :], qs, neg)
+        greedy = jax.nn.one_hot(jnp.argmax(qs, -1), M_)
+        actf = state.active.astype(jnp.float32)[None, :]
+        uni = actf / jnp.maximum(actf.sum(-1, keepdims=True), 1.0)
+        e = state.inner.eps[:, None]
+        return (1 - e) * greedy + e * uni
+
+    def eps(state):
+        return state.inner.eps
+
+    return dict(init=init, select=select, record=record, maintain=maintain,
+                on_activity=on_activity, weights=weights, eps=eps)
+
+
+def make_strategy(name: str, cfg: SimConfig, K: int, M: int, **kw):
+    if name == "qedgeproxy":
+        params = kw.get("params") or qb.BanditParams(
+            tau=cfg.tau, rho=cfg.rho, window=cfg.window,
+            **{k: v for k, v in kw.items() if k in qb.BanditParams._fields})
+        return qedgeproxy_strategy(params, cfg, K, M)
+    if name.startswith("proxy_mity"):
+        return proxy_mity_strategy(kw.get("alpha", 1.0), cfg, K, M)
+    if name == "dec_sarsa":
+        params = kw.get("params") or bl.DecSarsaParams(tau=cfg.tau)
+        return dec_sarsa_strategy(params, cfg, K, M)
+    raise ValueError(f"unknown strategy {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Main simulation loop.
+# ---------------------------------------------------------------------------
+
+def run_sim(
+    strategy_name: str,
+    rtt: jax.Array,              # (K, M) LB->instance RTT [s]
+    cfg: SimConfig,
+    key: jax.Array,
+    n_clients: jax.Array | None = None,   # (T, K) i32 active clients per LB
+    active: jax.Array | None = None,      # (T, M) bool instance liveness
+    **strategy_kw,
+) -> SimOutputs:
+    """Run one topology × strategy for the full horizon. jit-compiled."""
+    K, M = rtt.shape
+    T, C = cfg.num_steps, cfg.max_clients
+    if n_clients is None:
+        n_clients = jnp.full((T, K), 4, jnp.int32)
+    if active is None:
+        active = jnp.ones((T, M), bool)
+
+    strat = make_strategy(strategy_name, cfg, K, M, **strategy_kw)
+
+    def run(rtt, n_clients, active, key):
+        k_init, k_phase, k_scan = jax.random.split(key, 3)
+        s0 = strat["init"](rtt, active[0], k_init)
+        q0 = jnp.zeros((M,), jnp.float32)
+        maint_phase = jax.random.randint(
+            k_phase, (K,), 0, cfg.maint_every)   # per-LB timer offset
+
+        def step(carry, xs):
+            state, q, prev_active = carry
+            t_idx, nc, act, k_step = xs
+            t = t_idx.astype(jnp.float32) * cfg.dt
+
+            # --- placement events (paper Alg 3/4 trigger) ---
+            changed = jnp.any(act != prev_active)
+            state = jax.lax.cond(
+                changed,
+                lambda s: strat["on_activity"](s, act, rtt, t),
+                lambda s: s,
+                state)
+
+            # --- maintenance: each LB on its own H_d clock (staggered
+            # phases, matching the asynchronous DaemonSet timers) ---
+            lb_mask = (t_idx % cfg.maint_every) == maint_phase
+            state = strat["maintain"](state, rtt, t, lb_mask)
+
+            mu_true = _true_mu(rtt, q, cfg)              # (K, M) at step start
+            w_now = strat["weights"](state)
+            reg = step_regret(w_now, mu_true, act)
+            q_start = q
+
+            rewards = jnp.zeros((K, C), jnp.float32)
+            issued = jnp.zeros((K, C), bool)
+            choices = jnp.zeros((K, C), jnp.int32)
+            lats = jnp.zeros((K, C), jnp.float32)
+            procs = jnp.zeros((K, C), jnp.float32)
+            arrivals = jnp.zeros((M,), jnp.float32)
+
+            # service is continuous: drain dt/C of capacity per round so
+            # in-step arrivals and departures interleave (a step-end-only
+            # drain would overstate in-step queueing by ~C/2 requests)
+            served_per_round = cfg.dt / (C * cfg.service_time)
+
+            # --- client rounds (unrolled: C is small & static) ---
+            for r in range(C):
+                k_r = jax.random.fold_in(k_step, r)
+                k_sel, k_noise = jax.random.split(k_r)
+                mask = r < nc                              # (K,)
+                choice, state = strat["select"](state, k_sel, t, act)
+                # processing latency: queue seen at arrival (same-round
+                # arrivals at other LBs are approximated as simultaneous)
+                z = jnp.exp(cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
+                q_seen = q[choice]
+                proc = (q_seen + 1.0) * cfg.service_time * z
+                lat = rtt[jnp.arange(K), choice] + proc
+                state = strat["record"](state, choice, lat, t, mask)
+                arr_r = jax.ops.segment_sum(
+                    mask.astype(jnp.float32), choice, num_segments=M)
+                q = jnp.maximum(q + arr_r - served_per_round, 0.0)
+                arrivals = arrivals + arr_r
+                rewards = rewards.at[:, r].set((lat <= cfg.tau).astype(jnp.float32))
+                issued = issued.at[:, r].set(mask)
+                choices = choices.at[:, r].set(choice)
+                lats = lats.at[:, r].set(lat)
+                procs = procs.at[:, r].set(proc)
+
+            out = SimOutputs(
+                rewards=rewards, issued=issued, choices=choices,
+                latency=lats, proc_lat=procs, arrivals=arrivals,
+                queue=q_start, weights=w_now, true_mu=mu_true, regret=reg,
+                eps=strat["eps"](state))
+            return (state, q, act), out
+
+        keys = jax.random.split(k_scan, T)
+        xs = (jnp.arange(T), n_clients, active, keys)
+        (_, _, _), outs = jax.lax.scan(step, (s0, q0, active[0]), xs)
+        return outs
+
+    return jax.jit(run)(rtt, n_clients, active, key)

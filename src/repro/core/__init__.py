@@ -1,0 +1,45 @@
+"""QEdgeProxy core: decentralized MP-MAB QoS-aware load balancing.
+
+The paper's primary contribution (§IV–V) as a composable JAX module:
+KDE-based QoS estimation, QoS-pool maintenance, adaptive epsilon
+exploration, SWRR routing, cooldown, and instance add/remove handling —
+all vectorized over (players, arms) and jittable.
+"""
+from repro.core.bandit import (
+    BanditParams,
+    BanditState,
+    init_state,
+    instance_added,
+    instance_removed,
+    maintenance,
+    record,
+    select,
+    sync_active,
+)
+from repro.core.baselines import (
+    DecSarsaParams,
+    DecSarsaState,
+    decsarsa_init,
+    decsarsa_select,
+    decsarsa_update,
+    proxy_mity_weights,
+)
+from repro.core.kde import (
+    empirical_success_prob,
+    kde_success_prob,
+    masked_quantile,
+    silverman_bandwidth,
+)
+from repro.core.oracle import oracle_weights, step_regret, variation_budget
+from repro.core.swrr import swrr_select
+
+__all__ = [
+    "BanditParams", "BanditState", "init_state", "select", "record",
+    "maintenance", "instance_added", "instance_removed", "sync_active",
+    "DecSarsaParams", "DecSarsaState", "decsarsa_init", "decsarsa_select",
+    "decsarsa_update", "proxy_mity_weights",
+    "kde_success_prob", "empirical_success_prob", "silverman_bandwidth",
+    "masked_quantile",
+    "oracle_weights", "step_regret", "variation_budget",
+    "swrr_select",
+]

@@ -1,0 +1,427 @@
+"""QEdgeProxy MP-MAB core (paper §IV–V, Algorithms 1–4).
+
+Fully decentralized: the state factorizes over players (load balancers);
+no cross-player terms exist anywhere in the update. We still *store* all
+K players in one pytree of (K, M, ...) arrays so the whole fleet updates
+in a single fused XLA program — the decentralization claim is preserved
+because every reduction is over the trailing (per-player) axes only.
+
+State layout (R = ring-buffer capacity per (player, arm)):
+  lat_buf (K,M,R) f32   end-to-end latency samples
+  ts_buf  (K,M,R) f32   sample timestamps (-inf = empty)
+  ptr     (K,M)   i32   ring pointers
+  mu_hat  (K,M)   f32   KDE success-probability estimates
+  weights (K,M)   f32   routing weights (rows sum to 1 over the pool)
+  cw      (K,M)   f32   SWRR current weights
+  eps     (K,)    f32   exploration budget epsilon(t)
+  err     (K,M)   i32   consecutive-error counters (Alg 2 line 5)
+  cooldown_until (K,M) f32
+  active  (M,)    bool  instance liveness (Alg 3/4)
+  in_pool (K,M)   bool  QoS pool membership Q_k(t)
+  explore (K,M)   bool  exploration-pool membership X_k(t)
+  r_buf   (K,Rq)  f32   own-request reward ring (QoS_a degradation test)
+  rts_buf (K,Rq)  f32   reward timestamps
+  rptr    (K,)    i32
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kde as kde_mod
+from repro.core.swrr import swrr_select
+
+
+class BanditParams(NamedTuple):
+    """QoS requirements + algorithm hyperparameters (paper Table I/II)."""
+
+    tau: float = 0.080          # latency threshold [s]
+    rho: float = 0.9            # required success ratio
+    window: float = 10.0        # sliding window W [s]
+    gamma: float = 0.01         # epsilon-decay factor
+    eta: float = 0.01           # score smoothing floor
+    err_thresh: int = 5         # E_t
+    cooldown: float = 10.0      # Delta_cd [s]
+    decay_mode: int = 0         # 0: eps*=(1-gamma)  1: eps*=gamma (literal)
+    kde_mode: int = 0           # 0: KDE  1: empirical fraction (ablation)
+    min_bandwidth: float = 1e-4
+    reset_hysteresis: float = 0.0   # QoS_a drop needed to trigger reset
+    ucb_coef: float = 0.0       # >0 enables beyond-paper UCB bonus
+    unseen_mu: float = -1.0     # <0 => rho - 1e-6 (paper Alg 3 semantics)
+    weight_ema: float = 0.0     # beyond-paper: damp weight jumps
+    # w <- (1-ema)*w_new + ema*w_old. The paper's undamped update can
+    # oscillate near capacity (herd -> overload -> flee); see EXPERIMENTS.md.
+
+
+class BanditState(NamedTuple):
+    lat_buf: jax.Array
+    ts_buf: jax.Array
+    ptr: jax.Array
+    mu_hat: jax.Array
+    weights: jax.Array
+    cw: jax.Array
+    eps: jax.Array
+    err: jax.Array
+    cooldown_until: jax.Array
+    active: jax.Array
+    in_pool: jax.Array
+    explore: jax.Array
+    r_buf: jax.Array
+    rts_buf: jax.Array
+    rptr: jax.Array
+
+    @property
+    def num_players(self) -> int:
+        return self.lat_buf.shape[0]
+
+    @property
+    def num_arms(self) -> int:
+        return self.lat_buf.shape[1]
+
+
+NEG_INF = -1e30
+
+
+def init_state(
+    num_players: int,
+    num_arms: int,
+    params: BanditParams,
+    ring: int = 64,
+    reward_ring: int = 512,
+    active: jax.Array | None = None,
+    key: jax.Array | None = None,
+) -> BanditState:
+    """Paper Alg 1 lines 1–5: uniform weights, eps = 1 - rho.
+
+    ``key`` randomizes the SWRR phase. Real deployments are
+    asynchronous (each LB ticks on its own clock); in a bulk-synchronous
+    simulation identical weights + identical phase would make every
+    player pick the *same* arm each round (herding the paper's testbed
+    cannot exhibit). A random phase offset restores the async behaviour.
+    """
+    K, M, R = num_players, num_arms, ring
+    if active is None:
+        active = jnp.ones((M,), dtype=bool)
+    act = active.astype(jnp.float32)[None, :] * jnp.ones((K, 1), jnp.float32)
+    n_act = jnp.maximum(act.sum(-1, keepdims=True), 1.0)
+    if key is None:
+        cw0 = jnp.zeros((K, M), jnp.float32)
+    else:
+        cw0 = jax.random.uniform(key, (K, M)) / jnp.maximum(n_act, 1.0)
+    return BanditState(
+        lat_buf=jnp.zeros((K, M, R), jnp.float32),
+        ts_buf=jnp.full((K, M, R), NEG_INF, jnp.float32),
+        ptr=jnp.zeros((K, M), jnp.int32),
+        mu_hat=jnp.zeros((K, M), jnp.float32),
+        weights=act / n_act,
+        cw=cw0,
+        eps=jnp.full((K,), 1.0 - params.rho, jnp.float32),
+        err=jnp.zeros((K, M), jnp.int32),
+        cooldown_until=jnp.full((K, M), NEG_INF, jnp.float32),
+        active=active,
+        in_pool=active[None, :] * jnp.ones((K, M), bool),
+        explore=active[None, :] * jnp.ones((K, M), bool),
+        r_buf=jnp.zeros((K, reward_ring), jnp.float32),
+        rts_buf=jnp.full((K, reward_ring), NEG_INF, jnp.float32),
+        rptr=jnp.zeros((K,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Request path (Alg 2): select via SWRR, record feedback, cooldown.
+# ---------------------------------------------------------------------------
+
+def select(state: BanditState):
+    """SWRR selection for every player. Returns (choice, state, valid)."""
+    choice, cw, valid = swrr_select(state.weights, state.cw)
+    return choice, state._replace(cw=cw), valid
+
+
+def record(
+    state: BanditState,
+    params: BanditParams,
+    choice: jax.Array,      # (K,) selected arm per player
+    latency: jax.Array,     # (K,) end-to-end latency [s]
+    t: jax.Array,           # scalar time [s]
+    mask: jax.Array,        # (K,) bool: player actually issued a request
+) -> BanditState:
+    """Record one request per player (Alg 2 lines 4–9), vectorized.
+
+    Masked players leave the state untouched. Repeated calls handle
+    multiple requests per player per step.
+    """
+    K, M, R = state.lat_buf.shape
+    kidx = jnp.arange(K)
+    maskf = mask.astype(jnp.float32)
+    reward = (latency <= params.tau).astype(jnp.float32)
+
+    # --- latency ring write at (k, choice[k], ptr) ---
+    p = state.ptr[kidx, choice]
+    lat_buf = state.lat_buf.at[kidx, choice, p].set(
+        jnp.where(mask, latency, state.lat_buf[kidx, choice, p]))
+    ts_buf = state.ts_buf.at[kidx, choice, p].set(
+        jnp.where(mask, t, state.ts_buf[kidx, choice, p]))
+    ptr = state.ptr.at[kidx, choice].set(
+        jnp.where(mask, (p + 1) % R, p))
+
+    # --- per-player reward ring (for the degradation test) ---
+    rp = state.rptr
+    r_buf = state.r_buf.at[kidx, rp].set(
+        jnp.where(mask, reward, state.r_buf[kidx, rp]))
+    rts_buf = state.rts_buf.at[kidx, rp].set(
+        jnp.where(mask, t, state.rts_buf[kidx, rp]))
+    rptr = jnp.where(mask, (rp + 1) % state.r_buf.shape[1], rp)
+
+    # --- consecutive error count & cooldown (Alg 2 lines 5-9) ---
+    old_err = state.err[kidx, choice]
+    new_err = jnp.where(reward > 0, 0, old_err + 1).astype(jnp.int32)
+    trip = mask & (new_err >= params.err_thresh)
+    err = state.err.at[kidx, choice].set(
+        jnp.where(mask, jnp.where(trip, 0, new_err), old_err))
+    cd = state.cooldown_until.at[kidx, choice].set(
+        jnp.where(trip, t + params.cooldown, state.cooldown_until[kidx, choice]))
+
+    # remove tripped arms from the pool immediately and renormalize
+    tripped_onehot = jax.nn.one_hot(choice, M, dtype=bool) & trip[:, None]
+    in_pool = state.in_pool & ~tripped_onehot
+    w = jnp.where(tripped_onehot, 0.0, state.weights)
+    wsum = w.sum(-1, keepdims=True)
+    # if the tripped arm carried all the weight, spread uniformly over
+    # the arms still in the pool (or all active arms as a last resort)
+    remaining = in_pool & state.active[None, :]
+    rem_any = remaining.any(-1, keepdims=True)
+    fallback = jnp.where(
+        rem_any, remaining,
+        state.active[None, :] & ~tripped_onehot).astype(jnp.float32)
+    fallback = fallback / jnp.maximum(fallback.sum(-1, keepdims=True), 1.0)
+    weights = jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), fallback)
+
+    # a cooled-down arm must not keep winning on stale SWRR credit
+    cw = jnp.where(tripped_onehot, 0.0, state.cw)
+
+    return state._replace(
+        lat_buf=lat_buf, ts_buf=ts_buf, ptr=ptr,
+        r_buf=r_buf, rts_buf=rts_buf, rptr=rptr,
+        err=err, cooldown_until=cd, in_pool=in_pool, weights=weights, cw=cw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Maintenance (Alg 1): pools, KDE estimates, scores, weights, eps schedule.
+# ---------------------------------------------------------------------------
+
+def _rolling_qos(state: BanditState, t, window):
+    """(QoS over [t-W, t), QoS over [t-2W, t-W)) per player."""
+    ts = state.rts_buf
+    cur_m = (ts >= t - window) & (ts < t)
+    prev_m = (ts >= t - 2 * window) & (ts < t - window)
+
+    def mean(mask):
+        n = mask.sum(-1)
+        s = (state.r_buf * mask).sum(-1)
+        return jnp.where(n > 0, s / jnp.maximum(n, 1), 1.0), n
+
+    cur, ncur = mean(cur_m)
+    prev, nprev = mean(prev_m)
+    return cur, prev, ncur, nprev
+
+
+def maintenance(
+    state: BanditState,
+    params: BanditParams,
+    rtt: jax.Array,     # (K, M) current network RTT estimates [s]
+    t: jax.Array,       # scalar time [s]
+    lb_mask: jax.Array | None = None,   # (K,) bool: players updating now
+) -> BanditState:
+    """One decision step of Alg 1 (lines 6–30), vectorized over players.
+
+    ``lb_mask`` restricts the update to a subset of players. Real
+    deployments run each proxy's maintenance timer on its own clock;
+    staggering the decision steps avoids the synchronized-rebalance
+    oscillation a bulk-synchronous update would introduce.
+    """
+    K, M, R = state.lat_buf.shape
+
+    # --- window mask over latency samples ---
+    win = (state.ts_buf >= t - params.window) & (state.ts_buf < t) \
+        & (state.ts_buf > NEG_INF / 2)
+
+    # --- best expected processing latency l^{p*} (line 8 / Alg 3 line 1) ---
+    proc = jnp.maximum(state.lat_buf - rtt[..., None], 0.0)
+    proc_q = kde_mod.masked_quantile(proc, win, params.rho)      # (K, M)
+    big = jnp.finfo(jnp.float32).max
+    any_obs = (win.sum((-1, -2)) > 0)                             # (K,)
+    l_p_star = jnp.where(any_obs, jnp.min(proc_q, axis=-1), 0.0)  # optimistic 0 if no data
+    l_p_star = jnp.where(l_p_star >= big, 0.0, l_p_star)
+
+    # --- feasible set F_k(t) (line 9) ---
+    not_cd = t >= state.cooldown_until
+    feasible = (rtt + l_p_star[:, None] <= params.tau) & not_cd \
+        & state.active[None, :]
+
+    # --- KDE estimates over the window (line 12) ---
+    if params.kde_mode == 0:
+        mu = kde_mod.kde_success_prob(
+            state.lat_buf, win, params.tau, min_bandwidth=params.min_bandwidth)
+    else:
+        mu = kde_mod.empirical_success_prob(state.lat_buf, win, params.tau)
+    n_samples = win.sum(-1)
+    unseen_mu = params.unseen_mu if params.unseen_mu >= 0 else params.rho - 1e-6
+    mu = jnp.where(n_samples > 0, mu, unseen_mu)   # Alg 3: unseen => top explore score
+    if params.ucb_coef > 0.0:                       # beyond-paper option
+        total = jnp.maximum(n_samples.sum(-1, keepdims=True), 1.0)
+        bonus = params.ucb_coef * jnp.sqrt(
+            jnp.log(total) / jnp.maximum(n_samples, 1.0))
+        mu = jnp.clip(mu + jnp.where(n_samples > 0, bonus, 0.0), 0.0, 1.0)
+
+    # --- pools (lines 13-19) ---
+    exploit = feasible & (mu >= params.rho)
+    explore = feasible & (mu < params.rho)
+    in_pool = exploit | explore
+
+    # --- budgets & scores (lines 20-22) ---
+    eps = state.eps
+    s_e = jnp.where(exploit, (mu - params.rho) + params.eta, 0.0)
+    s_x = jnp.where(explore, mu + params.eta, 0.0)
+    sum_e = s_e.sum(-1, keepdims=True)
+    sum_x = s_x.sum(-1, keepdims=True)
+    has_e = sum_e[..., 0] > 0
+    has_x = sum_x[..., 0] > 0
+    # pool budgets; an empty pool donates its budget to the other
+    w_e_budget = jnp.where(has_x, 1.0 - eps, 1.0) * has_e
+    w_x_budget = jnp.where(has_e, eps, 1.0) * has_x
+    w = s_e / jnp.maximum(sum_e, 1e-30) * w_e_budget[:, None] \
+        + s_x / jnp.maximum(sum_x, 1e-30) * w_x_budget[:, None]
+    # fallback: nothing feasible => uniform over active (keep traffic flowing)
+    none = ~(has_e | has_x)
+    uni = state.active.astype(jnp.float32)[None, :]
+    uni = uni / jnp.maximum(uni.sum(-1, keepdims=True), 1.0)
+    weights = jnp.where(none[:, None], uni, w)
+
+    if params.weight_ema > 0.0:     # beyond-paper damping (see above)
+        mixed = (1.0 - params.weight_ema) * weights \
+            + params.weight_ema * state.weights
+        # stay inside the new pool: zero out arms that left it
+        mixed = jnp.where(in_pool | none[:, None], mixed, 0.0)
+        msum = mixed.sum(-1, keepdims=True)
+        weights = jnp.where(msum > 0, mixed / jnp.maximum(msum, 1e-30),
+                            weights)
+
+    # --- exploration schedule (lines 24-29) ---
+    cur, prev, ncur, nprev = _rolling_qos(state, t, params.window)
+    degraded = (ncur > 0) & (nprev > 0) \
+        & (cur < prev - params.reset_hysteresis)
+    if params.decay_mode == 0:
+        eps_next = eps * (1.0 - params.gamma)
+    else:
+        eps_next = eps * params.gamma
+    eps = jnp.where(degraded, 1.0 - params.rho, eps_next)
+
+    # keep SWRR state bounded & consistent with the new pool
+    cw = jnp.where(in_pool | none[:, None], state.cw, 0.0)
+
+    if lb_mask is not None:
+        keep = ~lb_mask
+        mu = jnp.where(keep[:, None], state.mu_hat, mu)
+        weights = jnp.where(keep[:, None], state.weights, weights)
+        cw = jnp.where(keep[:, None], state.cw, cw)
+        eps = jnp.where(keep, state.eps, eps)
+        in_pool = jnp.where(keep[:, None], state.in_pool, in_pool)
+        explore = jnp.where(keep[:, None], state.explore, explore)
+
+    return state._replace(
+        mu_hat=mu, weights=weights, cw=cw, eps=eps,
+        in_pool=in_pool, explore=explore,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Placement events (Alg 3 / Alg 4).
+# ---------------------------------------------------------------------------
+
+def instance_added(
+    state: BanditState,
+    params: BanditParams,
+    m_new: jax.Array,          # scalar arm index
+    rtt: jax.Array,            # (K, M)
+    t: jax.Array,
+) -> BanditState:
+    """Alg 3: activate arm; join pools lazily with weight 0.
+
+    Reachability (l^n + l^{p*} <= tau) is re-checked per player at the
+    next maintenance step; here we clear stale feedback and mark active.
+    """
+    K, M, R = state.lat_buf.shape
+    onehot = jax.nn.one_hot(m_new, M, dtype=bool)
+    return state._replace(
+        active=state.active | onehot,
+        lat_buf=jnp.where(onehot[None, :, None], 0.0, state.lat_buf),
+        ts_buf=jnp.where(onehot[None, :, None], NEG_INF, state.ts_buf),
+        ptr=jnp.where(onehot[None, :], 0, state.ptr),
+        err=jnp.where(onehot[None, :], 0, state.err),
+        cooldown_until=jnp.where(onehot[None, :], NEG_INF, state.cooldown_until),
+        # weight 0 until next maintenance (paper: w_{k,m_new} <- 0)
+        weights=jnp.where(onehot[None, :], 0.0, state.weights),
+        mu_hat=jnp.where(onehot[None, :], params.rho - 1e-6, state.mu_hat),
+    )
+
+
+def sync_active(
+    state: BanditState,
+    params: BanditParams,
+    new_active: jax.Array,     # (M,) bool target liveness
+) -> BanditState:
+    """Vectorized Alg 3 + Alg 4 against a target liveness vector.
+
+    Arms turning OFF are purged and weights renormalized (Alg 4); arms
+    turning ON are reset with weight 0 and optimistic mu (Alg 3). Useful
+    for elastic-scaling events where several replicas change at once.
+    """
+    added = new_active & ~state.active          # (M,)
+    removed = state.active & ~new_active
+    changed = (added | removed)[None, :]        # (K, M) broadcast
+    w = jnp.where(removed[None, :], 0.0, state.weights)
+    wsum = w.sum(-1, keepdims=True)
+    unif = new_active.astype(jnp.float32)[None, :]
+    unif = unif / jnp.maximum(unif.sum(-1, keepdims=True), 1.0)
+    weights = jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), unif)
+    weights = jnp.where(added[None, :], 0.0, weights)   # Alg 3: start at 0
+    return state._replace(
+        active=new_active,
+        in_pool=state.in_pool & ~removed[None, :],
+        explore=state.explore & ~removed[None, :],
+        weights=weights,
+        cw=jnp.where(changed, 0.0, state.cw),
+        lat_buf=jnp.where(changed[..., None], 0.0, state.lat_buf),
+        ts_buf=jnp.where(changed[..., None], NEG_INF, state.ts_buf),
+        ptr=jnp.where(changed, 0, state.ptr),
+        err=jnp.where(changed, 0, state.err),
+        cooldown_until=jnp.where(changed, NEG_INF, state.cooldown_until),
+        mu_hat=jnp.where(added[None, :], params.rho - 1e-6, state.mu_hat),
+    )
+
+
+def instance_removed(state: BanditState, m_rem: jax.Array) -> BanditState:
+    """Alg 4: purge local data for the arm; renormalize weights."""
+    K, M, R = state.lat_buf.shape
+    onehot = jax.nn.one_hot(m_rem, M, dtype=bool)
+    w = jnp.where(onehot[None, :], 0.0, state.weights)
+    wsum = w.sum(-1, keepdims=True)
+    uni = state.active & ~onehot
+    unif = uni.astype(jnp.float32)[None, :]
+    unif = unif / jnp.maximum(unif.sum(-1, keepdims=True), 1.0)
+    weights = jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30), unif)
+    return state._replace(
+        active=state.active & ~onehot,
+        in_pool=state.in_pool & ~onehot[None, :],
+        explore=state.explore & ~onehot[None, :],
+        weights=weights,
+        cw=jnp.where(onehot[None, :], 0.0, state.cw),
+        lat_buf=jnp.where(onehot[None, :, None], 0.0, state.lat_buf),
+        ts_buf=jnp.where(onehot[None, :, None], NEG_INF, state.ts_buf),
+        ptr=jnp.where(onehot[None, :], 0, state.ptr),
+        err=jnp.where(onehot[None, :], 0, state.err),
+        cooldown_until=jnp.where(onehot[None, :], NEG_INF, state.cooldown_until),
+    )

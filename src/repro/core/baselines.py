@@ -1,0 +1,153 @@
+"""Baseline routing strategies the paper compares against (§VII-A5).
+
+* ``proxy_mity_weights`` — Fahs & Pierre [3]: static proximity-biased
+  weights; alpha=1.0 routes everything to the nearest instance, alpha=0.9
+  keeps 10% spread across the rest. Weights are fixed at init (the paper
+  observes they "are fixed at initialization and never updated").
+* ``DecSarsa*`` — Mattia & Beraldi [7] adapted per §VII-A5: each LB is a
+  differential-SARSA agent; state combines a recent-latency bucket with
+  a proximity bucket, actions are instances, reward is the deadline
+  indicator. Per-request eps-greedy updates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# proxy-mity
+# ---------------------------------------------------------------------------
+
+def proxy_mity_weights(
+    rtt: jax.Array,           # (K, M)
+    alpha: float,
+    active: jax.Array | None = None,  # (M,) bool
+) -> jax.Array:
+    """alpha * onehot(nearest active) + (1-alpha) uniform over active."""
+    K, M = rtt.shape
+    if active is None:
+        active = jnp.ones((M,), bool)
+    big = jnp.finfo(rtt.dtype).max
+    masked = jnp.where(active[None, :], rtt, big)
+    nearest = jnp.argmin(masked, axis=-1)
+    onehot = jax.nn.one_hot(nearest, M, dtype=rtt.dtype)
+    actf = active.astype(rtt.dtype)[None, :]
+    uni = actf / jnp.maximum(actf.sum(-1, keepdims=True), 1.0)
+    w = alpha * onehot + (1.0 - alpha) * uni
+    return w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Dec-SARSA
+# ---------------------------------------------------------------------------
+
+N_LOAD_BUCKETS = 4
+
+
+class DecSarsaParams(NamedTuple):
+    beta: float = 0.1          # Q learning rate
+    alpha_r: float = 0.01      # average-reward step (differential SARSA)
+    eps: float = 0.10          # eps-greedy exploration
+    eps_decay: float = 0.999   # per-request decay
+    eps_min: float = 0.01
+    tau: float = 0.080
+    # latency bucket edges relative to tau (state discretization)
+    b1: float = 0.25
+    b2: float = 0.6
+    b3: float = 1.0
+
+
+class DecSarsaState(NamedTuple):
+    q: jax.Array           # (K, S, M) action values
+    rbar: jax.Array        # (K,) average reward estimate
+    prev_s: jax.Array      # (K,) i32 previous state id
+    prev_a: jax.Array      # (K,) i32 previous action
+    has_prev: jax.Array    # (K,) bool
+    last_lat: jax.Array    # (K,) recent-latency EMA (state feature)
+    eps: jax.Array         # (K,) current exploration rate
+
+
+def decsarsa_init(
+    num_players: int, num_arms: int, rtt: jax.Array, params: DecSarsaParams
+) -> DecSarsaState:
+    K, M = num_players, num_arms
+    # optimistic init biased by proximity so early behaviour matches [7]
+    q0 = 0.5 + 0.5 * (1.0 - rtt / jnp.maximum(rtt.max(), 1e-9))
+    q = jnp.broadcast_to(q0[:, None, :], (K, N_LOAD_BUCKETS, M)).astype(jnp.float32)
+    return DecSarsaState(
+        q=jnp.array(q),
+        rbar=jnp.zeros((K,), jnp.float32),
+        prev_s=jnp.zeros((K,), jnp.int32),
+        prev_a=jnp.zeros((K,), jnp.int32),
+        has_prev=jnp.zeros((K,), bool),
+        last_lat=jnp.zeros((K,), jnp.float32),
+        eps=jnp.full((K,), params.eps, jnp.float32),
+    )
+
+
+def _bucket(lat: jax.Array, p: DecSarsaParams) -> jax.Array:
+    rel = lat / p.tau
+    return (
+        (rel > p.b1).astype(jnp.int32)
+        + (rel > p.b2).astype(jnp.int32)
+        + (rel > p.b3).astype(jnp.int32)
+    )
+
+
+def decsarsa_select(
+    state: DecSarsaState,
+    params: DecSarsaParams,
+    active: jax.Array,      # (M,) bool
+    key: jax.Array,
+):
+    """eps-greedy action per player from the current state bucket."""
+    K, S, M = state.q.shape
+    s = _bucket(state.last_lat, params)                     # (K,)
+    qs = state.q[jnp.arange(K), s]                          # (K, M)
+    neg = jnp.finfo(qs.dtype).min
+    qs = jnp.where(active[None, :], qs, neg)
+    greedy = jnp.argmax(qs, axis=-1)
+    ku, kc = jax.random.split(key)
+    # uniform random over active arms
+    gumbel = jax.random.gumbel(kc, (K, M))
+    rand = jnp.argmax(jnp.where(active[None, :], gumbel, neg), axis=-1)
+    explore = jax.random.uniform(ku, (K,)) < state.eps
+    choice = jnp.where(explore, rand, greedy)
+    return choice, s
+
+
+def decsarsa_update(
+    state: DecSarsaState,
+    params: DecSarsaParams,
+    s: jax.Array,          # (K,) state used for the action just taken
+    a: jax.Array,          # (K,) action just taken
+    reward: jax.Array,     # (K,) binary deadline indicator
+    latency: jax.Array,    # (K,) observed latency (next-state feature)
+    mask: jax.Array,       # (K,) request actually issued
+) -> DecSarsaState:
+    """Differential SARSA: Q[s,a] += beta (r - rbar + Q[s',a'] - Q[s,a])."""
+    K, S, M = state.q.shape
+    kidx = jnp.arange(K)
+    last_lat = jnp.where(
+        mask, 0.7 * state.last_lat + 0.3 * latency, state.last_lat)
+    s_next = _bucket(last_lat, params)
+    # on-policy next action = greedy wrt current Q (eps part is noise term)
+    a_next = jnp.argmax(state.q[kidx, s_next], axis=-1)
+
+    q_sa = state.q[kidx, s, a]
+    q_next = state.q[kidx, s_next, a_next]
+    td = reward - state.rbar + q_next - q_sa
+    upd = jnp.where(mask & state.has_prev | mask, params.beta * td, 0.0)
+    q = state.q.at[kidx, s, a].add(upd)
+    rbar = jnp.where(mask, state.rbar + params.alpha_r * (reward - state.rbar),
+                     state.rbar)
+    eps = jnp.where(mask,
+                    jnp.maximum(state.eps * params.eps_decay, params.eps_min),
+                    state.eps)
+    return state._replace(
+        q=q, rbar=rbar, prev_s=s_next, prev_a=a_next,
+        has_prev=state.has_prev | mask, last_lat=last_lat, eps=eps,
+    )

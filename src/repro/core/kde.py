@@ -1,0 +1,88 @@
+"""Kernel Density Estimation of QoS success probabilities (paper §V-A).
+
+The estimate the paper needs is not the density itself but the CDF at
+the latency threshold::
+
+    mu_hat = P(l <= tau) = (1/n) * sum_i Phi((tau - l_i) / h)
+
+with a Gaussian kernel (Phi = standard normal CDF) over the samples in
+the sliding window. Bandwidth defaults to Silverman's rule computed on
+the masked window. ``empirical`` mode (plain fraction below tau) is the
+prior-work [2] estimator, kept for ablation.
+
+The pure-jnp implementation here is the oracle for the Pallas kernel in
+``repro/kernels/kde.py`` (see ``repro/kernels/ops.py`` for dispatch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def normal_cdf(x: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + jax.lax.erf(x * _INV_SQRT2))
+
+
+def silverman_bandwidth(
+    lat: jax.Array, mask: jax.Array, min_bandwidth: float = 1e-4
+) -> jax.Array:
+    """Per-row Silverman bandwidth h = 1.06 * sigma * n^(-1/5).
+
+    ``lat``: (..., R) samples, ``mask``: (..., R) validity. Rows with
+    fewer than 2 samples fall back to ``min_bandwidth``.
+    """
+    m = mask.astype(lat.dtype)
+    n = jnp.maximum(m.sum(-1), 1.0)
+    mean = (lat * m).sum(-1) / n
+    var = ((lat - mean[..., None]) ** 2 * m).sum(-1) / n
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    h = 1.06 * sigma * n ** (-0.2)
+    return jnp.maximum(h, min_bandwidth)
+
+
+def kde_success_prob(
+    lat: jax.Array,
+    mask: jax.Array,
+    tau: float | jax.Array,
+    bandwidth: jax.Array | None = None,
+    min_bandwidth: float = 1e-4,
+) -> jax.Array:
+    """P(latency <= tau) via Gaussian-kernel CDF over masked samples.
+
+    ``lat``: (..., R) latency window, ``mask``: (..., R) validity.
+    Returns (...,) in [0, 1]. Rows with zero valid samples return 0
+    (callers decide the unseen-instance policy — see bandit.py).
+    """
+    if bandwidth is None:
+        bandwidth = silverman_bandwidth(lat, mask, min_bandwidth)
+    m = mask.astype(lat.dtype)
+    n = m.sum(-1)
+    z = (tau - lat) / bandwidth[..., None]
+    contrib = (normal_cdf(z) * m).sum(-1)
+    return jnp.where(n > 0, contrib / jnp.maximum(n, 1.0), 0.0)
+
+
+def empirical_success_prob(
+    lat: jax.Array, mask: jax.Array, tau: float | jax.Array
+) -> jax.Array:
+    """Plain windowed success fraction (the [2] baseline estimator)."""
+    m = mask.astype(lat.dtype)
+    n = m.sum(-1)
+    succ = ((lat <= tau) * m).sum(-1)
+    return jnp.where(n > 0, succ / jnp.maximum(n, 1.0), 0.0)
+
+
+def masked_quantile(x: jax.Array, mask: jax.Array, q: float) -> jax.Array:
+    """q-quantile over masked samples along the last axis.
+
+    Invalid entries are pushed to +inf before sorting; the quantile index
+    is scaled by the per-row valid count. Rows with no samples -> +inf.
+    """
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    xs = jnp.sort(jnp.where(mask, x, big), axis=-1)
+    n = mask.sum(-1)
+    idx = jnp.clip((q * (n - 1)).astype(jnp.int32), 0, x.shape[-1] - 1)
+    val = jnp.take_along_axis(xs, idx[..., None], axis=-1)[..., 0]
+    return jnp.where(n > 0, val, big)

@@ -1,0 +1,38 @@
+"""Oracle weights and regret (paper §IV-D, Eq. 8–9).
+
+The oracle knows the true per-arm success probabilities mu_{k,m}(t)
+(available from the simulator's internal latency model). The oracle
+weight vector w*_k(t) = argmax_w sum_m w_m mu_{k,m}(t) is a one-hot on
+the best arm (the objective is linear in w), so per-step regret is
+``max_m mu - <w, mu>``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def oracle_weights(mu: jax.Array, active: jax.Array | None = None) -> jax.Array:
+    """(K, M) one-hot on argmax_m mu_{k,m} over active arms."""
+    if active is not None:
+        mu = jnp.where(active[None, :], mu, -jnp.inf)
+    best = jnp.argmax(mu, axis=-1)
+    return jax.nn.one_hot(best, mu.shape[-1], dtype=jnp.float32)
+
+
+def step_regret(
+    weights: jax.Array,     # (K, M) learned weights
+    mu: jax.Array,          # (K, M) true success probabilities
+    active: jax.Array | None = None,
+) -> jax.Array:
+    """Per-player instantaneous regret (Eq. 8 summand). Returns (K,)."""
+    mu_eff = jnp.where(active[None, :], mu, -jnp.inf) if active is not None else mu
+    best = jnp.max(mu_eff, axis=-1)
+    got = (weights * jnp.where(jnp.isfinite(mu_eff), mu, 0.0)).sum(-1)
+    return jnp.maximum(best - got, 0.0)
+
+
+def variation_budget(mu_t: jax.Array) -> jax.Array:
+    """V_k(T) (Definition 1) from a (T, K, M) trajectory of true mus."""
+    d = jnp.abs(mu_t[1:] - mu_t[:-1])      # (T-1, K, M)
+    return d.max(-1).sum(0)                 # (K,)

@@ -1,0 +1,34 @@
+"""Smooth Weighted Round Robin (paper §V-B, NGINX-style).
+
+Classic SWRR per player: ``cw += w``; pick ``argmax(cw)``; subtract the
+total weight from the winner. Smooths bursts compared to independent
+sampling. Vectorized over the leading player axis; fully jittable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swrr_select(weights: jax.Array, cw: jax.Array):
+    """One SWRR selection per player (row).
+
+    ``weights``: (K, M) nonnegative routing weights (rows may sum to
+    anything; zero rows fall back to uniform over nothing => arm 0 with
+    a ``valid=False`` flag so callers can drop the request).
+    ``cw``: (K, M) SWRR current-weight state.
+
+    Returns ``(choice (K,), new_cw (K, M), valid (K,))``.
+    """
+    total = weights.sum(-1, keepdims=True)
+    valid = (total[..., 0] > 0)
+    cw = cw + weights
+    # break exact ties deterministically by lower index (argmax does this)
+    choice = jnp.argmax(cw, axis=-1)
+    onehot = jax.nn.one_hot(choice, weights.shape[-1], dtype=cw.dtype)
+    cw = cw - onehot * total
+    return choice, cw, valid
+
+
+def swrr_reset_like(weights: jax.Array) -> jax.Array:
+    return jnp.zeros_like(weights)

@@ -1,0 +1,74 @@
+"""Elastic re-meshing: rebuild the mesh after device loss/gain and
+re-shard live state onto it.
+
+Failure model: a pod (or a data-axis slice) disappears. The runtime
+ 1. builds a new mesh from the surviving devices (shrinking the data
+    axis — the model axis must stay intact since TP shards are not
+    recoverable without a checkpoint),
+ 2. re-device_puts params/optimizer state onto the new mesh (or
+    restores from the last checkpoint via Checkpointer.restore with the
+    new shardings),
+ 3. tells the router (paper Alg 4) so traffic stops flowing to the dead
+    replicas immediately, and
+ 4. resumes; when capacity returns, Alg 3 ramps it back gradually.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding import logical_to_spec, tree_shardings
+
+
+def build_mesh(devices: Sequence, model_axis: int,
+               pod_axis: Optional[int] = None) -> Mesh:
+    """Arrange surviving devices into (pod?, data, model)."""
+    devs = np.asarray(devices)
+    n = devs.size
+    if n % model_axis:
+        raise ValueError(f"{n} devices not divisible by model={model_axis}")
+    rows = n // model_axis
+    if pod_axis:
+        if rows % pod_axis:
+            raise ValueError(f"data rows {rows} not divisible by pod={pod_axis}")
+        shape = (pod_axis, rows // pod_axis, model_axis)
+        names = ("pod", "data", "model")
+    else:
+        shape = (rows, model_axis)
+        names = ("data", "model")
+    return Mesh(devs.reshape(shape), names)
+
+
+def shrink_mesh(mesh: Mesh, lost_data_rows: int) -> Mesh:
+    """Drop the last `lost_data_rows` rows of the data axis."""
+    devs = np.asarray(mesh.devices)
+    names = mesh.axis_names
+    data_idx = names.index("data")
+    keep = devs.shape[data_idx] - lost_data_rows
+    if keep < 1:
+        raise ValueError("cannot shrink data axis below 1")
+    sl = [slice(None)] * devs.ndim
+    sl[data_idx] = slice(0, keep)
+    return Mesh(devs[tuple(sl)], names)
+
+
+def reshard_state(state, axes_tree, new_mesh: Mesh):
+    """device_put every leaf onto the new mesh per its logical axes.
+
+    Works for any pytree whose logical-axes mirror exists (params, opt
+    state, bandit state); data on lost devices must already be
+    replicated or re-readable (params under DP are; purely data-sharded
+    tensors come back from the data pipeline instead).
+    """
+    shardings = tree_shardings(axes_tree, new_mesh)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def surviving_replicas(old_rows: int, new_rows: int):
+    """Replica liveness vector for the router after a shrink (Alg 4)."""
+    alive = np.zeros((old_rows,), bool)
+    alive[:new_rows] = True
+    return alive

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+Layout (per the repo convention): ``<name>.py`` holds the
+``pl.pallas_call`` + BlockSpec kernel, ``ops.py`` the jit'd dispatching
+wrappers, ``ref.py`` the pure-jnp oracles.
+
+Kernels:
+  flash_attention — causal GQA prefill attention (online softmax tiles)
+  decode_attention — one-token GQA attention vs long KV caches
+  ssd             — Mamba-2 chunked state-space scan
+  kde             — the paper's QoS-estimation hot spot, fused CDF-sum
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: GQA decode attention (one token vs a long KV cache).
+
+Decode is bandwidth-bound: the whole KV cache streams HBM->VMEM once per
+step. The grid is (B, Hkv, num_kv_blocks); each step loads one (bk, D)
+K/V tile and updates the online softmax for the G = Hq/Hkv query heads
+of that kv group, so every byte of cache is read exactly once. The
+`length` scalar masks the tail of partially-filled caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, bk, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    live = ik * bk < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (G, bk)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < length
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,            # (B, Hq, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    length: jax.Array,       # (B,) i32 valid cache entries
+    scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, S)
+    pad = (-S) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (S + pad) // bk
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),          # length
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: causal GQA flash attention (prefill path).
+
+Online-softmax tiling (FlashAttention re-thought for TPU): the grid is
+(B, Hq, num_q_blocks, num_kv_blocks) with the kv axis innermost and
+sequential; running max / normalizer / accumulator live in VMEM scratch
+and persist across kv iterations of one q block. Block shapes keep the
+MXU busy ((bq, D) x (D, bk) contractions with D in {64, 128, 256}) and
+the working set (q, k, v tiles + f32 accumulator) well inside VMEM.
+
+Supports GQA (Hq a multiple of Hkv — the kv block index map folds the
+query head onto its kv group) and an optional sliding window, which is
+what bounds gemma3/hymba local layers at 500k context.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are versioned; absent on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = None  # set lazily when running on real TPU
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _COMPILER_PARAMS = None
+
+_NEG = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale, causal, window, bq, bk, nk, seq_len):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip fully-masked blocks (strictly above the causal diagonal /
+    # strictly outside the sliding window)
+    q_lo = iq * bq
+    q_hi = q_lo + bq - 1
+    k_lo = ik * bk
+    k_hi = k_lo + bk - 1
+    live = jnp.asarray(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, bk)
+
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < seq_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, Hq, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: batched KDE success-probability estimation.
+
+The paper's per-decision-step hot spot (§V-F bounds it O(|Q_k|) per LB;
+fleet-wide it is a dense (K·M, R) fused reduction). Each row is one
+(player, arm) sliding window of R latency samples; the kernel computes
+
+    out[r] = (1/n_r) * sum_i mask[r,i] * Phi((tau - lat[r,i]) / h[r])
+
+entirely in VMEM: one row-block tile of (BLOCK_ROWS, R) samples + mask,
+the per-row bandwidths, and the erf-based Gaussian CDF evaluated on the
+VPU. Rows are independent => trivially parallel grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INV_SQRT2 = 0.7071067811865476
+
+BLOCK_ROWS = 256
+
+
+def _kde_kernel(tau_ref, lat_ref, mask_ref, bw_ref, out_ref):
+    lat = lat_ref[...].astype(jnp.float32)          # (BR, R)
+    m = mask_ref[...].astype(jnp.float32)
+    bw = bw_ref[...].astype(jnp.float32)            # (BR, 1)
+    tau = tau_ref[0]
+    z = (tau - lat) / bw
+    cdf = 0.5 * (1.0 + jax.lax.erf(z * _INV_SQRT2))
+    s = jnp.sum(cdf * m, axis=-1, keepdims=True)    # (BR, 1)
+    n = jnp.sum(m, axis=-1, keepdims=True)
+    out_ref[...] = jnp.where(n > 0, s / jnp.maximum(n, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def kde_success_prob(
+    lat: jax.Array,          # (rows, R)
+    mask: jax.Array,         # (rows, R) bool
+    tau: jax.Array | float,  # scalar
+    bandwidth: jax.Array,    # (rows,)
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+) -> jax.Array:
+    rows, R = lat.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        lat = jnp.pad(lat, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        bandwidth = jnp.pad(bandwidth, (0, pad), constant_values=1.0)
+    padded = rows + pad
+    tau_arr = jnp.asarray([tau], jnp.float32)
+
+    out = pl.pallas_call(
+        _kde_kernel,
+        grid=(padded // br,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                   # tau
+            pl.BlockSpec((br, R), lambda i: (i, 0)),              # lat
+            pl.BlockSpec((br, R), lambda i: (i, 0)),              # mask
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),              # bandwidth
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+        interpret=interpret,
+    )(tau_arr, lat, mask.astype(jnp.float32), bandwidth[:, None])
+    return out[:rows, 0]

@@ -1,0 +1,113 @@
+"""jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas path runs; elsewhere (this CPU container, and the
+CPU-hosted dry-run where Mosaic cannot lower) the pure-jnp reference is
+used, with `interpret=True` available for kernel-body validation. The
+two paths are numerically locked by tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kde as _kde
+from repro.kernels import ref
+from repro.kernels import ssd as _ssd
+from repro.kernels import xla_flash
+
+# "auto"  : pallas on TPU else reference
+# "pallas": force pallas (compiled)
+# "interpret": pallas kernel body in interpret mode (CPU validation)
+# "ref"   : force the pure-jnp oracle
+_MODE = "auto"
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "pallas", "interpret", "ref"), mode
+    _MODE = mode
+
+
+def _use_pallas() -> bool | str:
+    if _MODE == "pallas":
+        return True
+    if _MODE == "interpret":
+        return "interpret"
+    if _MODE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, causal: bool = True, window: int | None = None,
+              scale: float | None = None):
+    """Causal GQA attention (prefill). (B,Hq,S,D)x(B,Hkv,S,D) -> (B,Hq,S,D).
+
+    Non-TPU XLA impl selected by REPRO_ATTN_IMPL:
+      blockwise (default) — flash-style tiled online softmax (no S x S
+                            buffer; exact triangular/window block skips)
+      naive               — reference O(S^2) materialization
+    """
+    use = _use_pallas()
+    if use:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=(use == "interpret"))
+    if os.environ.get("REPRO_GQA_IMPL", "") == "repeat" and \
+            k.shape[1] != q.shape[1]:
+        # repeat KV heads to Hq: the grouped einsum's Hkv dim cannot
+        # shard across a TP axis wider than Hkv (XLA falls back to
+        # "involuntary full rematerialization" copies); post-repeat the
+        # head dim shards cleanly. Trades KV gather bytes for clean TP.
+        g = q.shape[1] // k.shape[1]
+        import jax.numpy as _jnp
+        k = _jnp.repeat(k, g, axis=1)
+        v = _jnp.repeat(v, g, axis=1)
+    impl = os.environ.get("REPRO_ATTN_IMPL", "blockwise")
+    if impl == "blockwise" and q.shape[2] > 1024:
+        return xla_flash.attention_blockwise(
+            q, k, v, causal=causal, window=window, scale=scale)
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(q, k, v, length, scale: float | None = None):
+    """One-token GQA attention vs KV cache. (B,Hq,D) -> (B,Hq,D).
+
+    REPRO_DECODE_IMPL: lowcast (default; bf16 operands, f32 accum — no
+    f32 cache copies) | naive (reference casts).
+    """
+    use = _use_pallas()
+    if use:
+        return _dec.decode_attention(
+            q, k, v, length, scale=scale, interpret=(use == "interpret"))
+    if os.environ.get("REPRO_DECODE_IMPL", "lowcast") == "lowcast":
+        return xla_flash.decode_attention_lowcast(q, k, v, length, scale)
+    return ref.decode_attention(q, k, v, length, scale=scale)
+
+
+def ssd(x, dt, A, Bm, Cm, chunk: int = 128):
+    """Mamba-2 SSD over a sequence. (B,S,H,P) -> (B,S,H,P)."""
+    use = _use_pallas()
+    if use:
+        return _ssd.ssd(x, dt, A, Bm, Cm, chunk=chunk,
+                        interpret=(use == "interpret"))
+    return ref.ssd(x, dt, A, Bm, Cm)
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """O(1)-state single-token SSD update (no kernel needed: rank-1)."""
+    return ref.ssd_decode_step(h, x, dt, A, Bm, Cm)
+
+
+def kde_success_prob(lat, mask, tau, bandwidth):
+    """Batched windowed KDE P(l <= tau). (rows,R) -> (rows,)."""
+    use = _use_pallas()
+    if use:
+        return _kde.kde_success_prob(
+            lat, mask, tau, bandwidth, interpret=(use == "interpret"))
+    return ref.kde_success_prob(lat, mask, tau, bandwidth)

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical ground truth: each kernel's test sweeps shapes
+and dtypes and asserts allclose against the function here. They are
+also the XLA fallback path used on non-TPU backends (and for the
+CPU-hosted dry-run, where Mosaic cannot lower).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (prefill): causal GQA with optional sliding window.
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,            # (B, Hq, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Hkv, G, S, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window is not None:
+        mask &= idx[:, None] - idx[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (decode): one query token against a KV cache.
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,            # (B, Hq, D)
+    k: jax.Array,            # (B, Hkv, S, D) cache
+    v: jax.Array,            # (B, Hkv, S, D)
+    length: jax.Array,       # (B,) valid cache entries
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < length[:, None]          # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD: exact sequential recurrence (the semantic definition).
+# ---------------------------------------------------------------------------
+
+def ssd(
+    x: jax.Array,            # (B, S, H, P) inputs per head
+    dt: jax.Array,           # (B, S, H) softplus'd step sizes (>0)
+    A: jax.Array,            # (H,) negative state decay rates
+    Bm: jax.Array,           # (B, S, N) input projections (ngroups=1)
+    Cm: jax.Array,           # (B, S, N) output projections
+) -> jax.Array:
+    """y_t = C_t^T h_t;  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T.
+
+    State h has shape (H, N, P) per batch element. Returns (B, S, H, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def scan_one(b):
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp                  # (H,P) (H,) (N,) (N,)
+            decay = jnp.exp(Af * dtt)              # (H,)
+            h = h * decay[:, None, None] + (
+                dtt[:, None, None] * Bt[None, :, None] * xt[:, None, :])
+            y = jnp.einsum("n,hnp->hp", Ct, h)
+            return h, y
+
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xf[b], dtf[b], Bf[b], Cf[b]))
+        return ys                                   # (S, H, P)
+
+    out = jax.vmap(scan_one)(jnp.arange(Bsz))
+    return out.astype(x.dtype)
+
+
+def ssd_decode_step(
+    h: jax.Array,            # (B, H, N, P) carried state
+    x: jax.Array,            # (B, H, P) current token input
+    dt: jax.Array,           # (B, H)
+    A: jax.Array,            # (H,)
+    Bm: jax.Array,           # (B, N)
+    Cm: jax.Array,           # (B, N)
+):
+    """Single-token SSD update (serving decode). Returns (h', y)."""
+    decay = jnp.exp(A[None, :] * dt)                          # (B, H)
+    h = h * decay[..., None, None] + (
+        dt[..., None, None] * Bm[:, None, :, None] * x[:, :, None, :])
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KDE success probability (the bandit's per-decision hot spot).
+# ---------------------------------------------------------------------------
+
+def kde_success_prob(
+    lat: jax.Array,          # (rows, R) latency windows
+    mask: jax.Array,         # (rows, R) validity
+    tau: float,
+    bandwidth: jax.Array,    # (rows,)
+) -> jax.Array:
+    m = mask.astype(jnp.float32)
+    n = m.sum(-1)
+    z = (tau - lat.astype(jnp.float32)) / bandwidth[:, None]
+    cdf = 0.5 * (1.0 + jax.lax.erf(z * 0.7071067811865476))
+    s = (cdf * m).sum(-1)
+    return jnp.where(n > 0, s / jnp.maximum(n, 1.0), 0.0)

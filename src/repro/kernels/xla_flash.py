@@ -1,0 +1,125 @@
+"""Blockwise (flash-style) attention in pure XLA ops.
+
+The Pallas kernel cannot lower on non-TPU backends, but the *algorithm*
+(online softmax over kv tiles, no S x S materialization) is expressible
+with plain jnp: an unrolled triangular loop over (q block, kv block)
+pairs. This is the production fallback path AND what the CPU-hosted
+dry-run lowers, so the roofline's memory term reflects the tiled
+algorithm rather than a naive O(S^2) buffer. Causal masking skips
+whole blocks exactly (triangular FLOPs, like the kernel); sliding
+windows skip out-of-window blocks (bounds gemma3/hymba local layers).
+
+Numerically locked to ref.attention by tests/test_kernels_xla.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attention_blockwise(
+    q: jax.Array,            # (B, Hq, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block: int = 1024,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    blk = min(block, S)
+    pad = (-S) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    n = Sp // blk
+    qg = q.reshape(B, Hkv, G, Sp, D)
+
+    out_blocks = []
+    for iq in range(n):
+        q_lo = iq * blk
+        qb = qg[:, :, :, q_lo:q_lo + blk]                    # (B,Hkv,G,bq,D)
+        m = jnp.full((B, Hkv, G, blk, 1), _NEG, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, blk, 1), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, blk, D), jnp.float32)
+        for ik in range(n):
+            k_lo = ik * blk
+            if causal and k_lo > q_lo + blk - 1:
+                continue                                     # above diagonal
+            if window is not None and k_lo + blk - 1 <= q_lo - window:
+                continue                                     # out of window
+            kb = k[:, :, k_lo:k_lo + blk]
+            vb = v[:, :, k_lo:k_lo + blk]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            rows = q_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (blk, blk), 0)
+            cols = k_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (blk, blk), 1)
+            mask = cols < S
+            if causal:
+                mask &= cols <= rows
+            if window is not None:
+                mask &= rows - cols < window
+            s = jnp.where(mask, s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32)
+            m = m_new
+        out_blocks.append(acc / jnp.maximum(l, 1e-30))
+    out = jnp.concatenate(out_blocks, axis=3)
+    return out.reshape(B, Hq, Sp, D)[:, :, :S].astype(q.dtype)
+
+
+import os as _os
+
+
+def decode_attention_lowcast(
+    q: jax.Array,            # (B, Hq, D)
+    k: jax.Array,            # (B, Hkv, S, D) cache (bf16/int8-dequanted)
+    v: jax.Array,
+    length: jax.Array,       # (B,)
+    scale: float | None = None,
+) -> jax.Array:
+    """Decode attention without materializing f32 copies of the cache:
+    bf16 operands with f32 accumulation (MXU semantics). Halves the
+    bytes touched per step vs the astype(f32) reference.
+
+    REPRO_DECODE_SHARDED=1 (default) additionally pins the score matrix
+    to the *cache's* layout ("ctx"-sharded seq) so the softmax runs as a
+    distributed flash-decode (tiny max/sum all-reduces + a partial-sum
+    reduction of the (B,Hq,D) output) instead of XLA repartitioning the
+    whole cache through collective-permutes every layer.
+    """
+    from repro.sharding import constrain
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    sharded = _os.environ.get("REPRO_DECODE_SHARDED", "1") == "1"
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32)
+    if sharded:
+        logits = constrain(logits, "batch", None, None, "ctx")
+    valid = jnp.arange(S)[None, :] < length[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    if sharded:
+        p = constrain(p, "batch", None, None, "ctx")
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it sets
+XLA_FLAGS at import time (by design: it must run before jax init).
+"""
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

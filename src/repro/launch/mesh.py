@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh over however many (host) devices tests have."""
+    devs = np.asarray(jax.devices())
+    if pod:
+        need = pod * data * model
+        return Mesh(devs[:need].reshape(pod, data, model),
+                    ("pod", "data", "model"))
+    need = data * model
+    return Mesh(devs[:need].reshape(data, model), ("data", "model"))

@@ -1,0 +1,94 @@
+"""Serving driver: M model replicas behind the QEdgeProxy router.
+
+Each replica is a ServingEngine (on this CPU container they share the
+device but carry distinct emulated network distances + load queues; on a
+real cluster each would be one data-parallel replica group). K
+front-ends issue request microbatches; the router learns per-replica
+QoS success probabilities and SWRR-routes to meet (tau, rho, W).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --replicas 3 --frontends 4 --requests 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import BanditParams
+from repro.models import build_model
+from repro.serving import QEdgeRouter, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--frontends", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=0.5)
+    ap.add_argument("--slow-replica", type=int, default=-1,
+                    help="index of a replica with +tau extra latency")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.smoke or True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.decode_steps
+
+    engines = []
+    for m in range(args.replicas):
+        extra = args.tau if m == args.slow_replica else 0.0
+        engines.append(ServingEngine(model, params, max_len, extra))
+
+    router = QEdgeRouter(
+        args.frontends, args.replicas,
+        BanditParams(tau=args.tau, rho=0.9, window=30.0, cooldown=5.0))
+
+    ok = 0
+    total = 0
+    t_last_maint = time.monotonic()
+    for r in range(args.requests):
+        choices = router.route()
+        lats = np.zeros(args.frontends)
+        for k, m in enumerate(choices):
+            prompt = jax.random.randint(
+                jax.random.PRNGKey(r * 131 + k), (args.batch, args.prompt_len),
+                0, cfg.vocab_size)
+            _, cache, lat_p = engines[m].prefill({"tokens": prompt})
+            lat = lat_p
+            tok = jnp.zeros((args.batch, 1), jnp.int32)
+            for i in range(args.decode_steps):
+                _, cache, lat_d = engines[m].decode(
+                    cache, tok, args.prompt_len + i)
+                lat += lat_d
+            lats[k] = lat
+            total += 1
+            ok += int(lat <= args.tau)
+        router.feedback(choices, lats)
+        if time.monotonic() - t_last_maint > 1.0:
+            router.maintenance()
+            t_last_maint = time.monotonic()
+        if r == args.requests // 2 and args.slow_replica >= 0:
+            print(f"[{r}] weights:\n{router.weights.round(3)}")
+
+    router.maintenance()
+    print(f"QoS success: {ok}/{total} = {100*ok/max(total,1):.1f}% "
+          f"(tau={args.tau}s)")
+    print("final routing weights (frontends x replicas):")
+    print(router.weights.round(3))
+    print("replica QoS estimates:")
+    print(router.qos_estimates.round(3))
+    return router
+
+
+if __name__ == "__main__":
+    main()

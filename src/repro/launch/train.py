@@ -1,0 +1,126 @@
+"""End-to-end training driver.
+
+Defaults run a ~100M-param qwen3-family model for a few hundred steps on
+whatever devices exist (CPU here; the same code path drives the
+production mesh). Features exercised: sharded synthetic data pipeline,
+remat, microbatch accumulation, optional int8 grad compression, async
+checkpointing with restart, and elastic recovery hooks.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.sharding import rule_overrides, tree_shardings
+from repro.training import (adamw, cosine_schedule, make_train_step,
+                            synthetic_batch)
+from repro.training.optimizer import AdamWState
+
+
+def small_mesh():
+    devs = np.asarray(jax.devices())
+    n = devs.size
+    model_ways = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and n >= cand:
+            model_ways = cand
+            break
+    return Mesh(devs.reshape(n // model_ways, model_ways), ("data", "model"))
+
+
+def train_100m_config(base: str = "qwen3-4b"):
+    """~100M-param member of the qwen3 family (train_100m example)."""
+    cfg = get_config(base)
+    return dataclasses.replace(
+        cfg, name=base + "-100m", num_layers=8, d_model=640, num_heads=8,
+        num_kv_heads=4, head_dim=80, d_ff=1536, vocab_size=32768,
+        fsdp=False)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--train-100m", action="store_true",
+                    help="~100M-param example config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.train_100m:
+        cfg = train_100m_config(args.arch)
+    else:
+        cfg = get_config(args.arch, reduced=args.smoke)
+    shape = ShapeConfig("cli", "train", args.seq_len, args.batch)
+    mesh = small_mesh()
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, np.asarray(mesh.devices).shape))}")
+
+    model = build_model(cfg)
+    opt = adamw(cosine_schedule(args.lr, 20, args.steps))
+    step_fn = make_train_step(model, opt, accum_steps=args.accum_steps,
+                              compress_grads=args.compress_grads)
+
+    with mesh:
+        p_axes = model.param_axes()
+        p_shard = tree_shardings(p_axes, mesh)
+        params = jax.jit(
+            lambda k: model.init(k), out_shardings=p_shard
+        )(jax.random.PRNGKey(0))
+        opt_state = jax.jit(opt.init, out_shardings=tree_shardings(
+            AdamWState(step=(), m=p_axes, v=p_axes), mesh))(params)
+
+        start = 0
+        ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        if ckpt and args.resume and ckpt.latest_step() is not None:
+            (params, opt_state), start = ckpt.restore(
+                (params, opt_state),
+                shardings=(p_shard, tree_shardings(
+                    AdamWState(step=(), m=p_axes, v=p_axes), mesh)))
+            print(f"resumed from step {start}")
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        t0 = time.time()
+        losses = []
+        for step in range(start, args.steps):
+            batch = synthetic_batch(cfg, shape, step, mesh)
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                dt = time.time() - t0
+                tok_s = (step - start + 1) * shape.global_batch \
+                    * shape.seq_len / max(dt, 1e-9)
+                print(f"step {step:5d} loss {loss:8.4f} tok/s {tok_s:9.0f}")
+            if ckpt and step and step % args.ckpt_every == 0:
+                ckpt.save(step, (params, opt_state), blocking=False)
+        if ckpt:
+            ckpt.save(args.steps, (params, opt_state), blocking=True)
+        print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: pure-JAX param-pytree models for all assigned archs."""
+from repro.models.model_zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,124 @@
+"""Attention block: GQA with RoPE, optional qk-norm / QKV bias / sliding
+window; full-sequence (train/prefill) and single-token (decode) paths.
+
+The heavy math dispatches through ``repro.kernels.ops`` (Pallas on TPU,
+jnp reference elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L._dense_init(ks[0], (d, qd)),
+        "wk": L._dense_init(ks[1], (d, kvd)),
+        "wv": L._dense_init(ks[2], (d, kvd)),
+        "wo": L._dense_init(ks[3], (qd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def axes_attn(cfg: ModelConfig):
+    a = {
+        "wq": ("embed_fsdp", "heads"),
+        "wk": ("embed_fsdp", "kv_heads"),
+        "wv": ("embed_fsdp", "kv_heads"),
+        "wo": ("heads", "embed_fsdp"),
+    }
+    if cfg.qkv_bias:
+        a["bq"] = ("heads",)
+        a["bk"] = ("kv_heads",)
+        a["bv"] = ("kv_heads",)
+    if cfg.qk_norm:
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return a
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions, dtype, use_rope=True):
+    B = x.shape[0]
+    S = x.shape[1]
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(B, S, Hq, Dh).transpose(0, 2, 1, 3)     # (B,Hq,S,D)
+    k = k.reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, Dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", None, None)
+    k = constrain(k, "batch", "kv_heads", None, None)
+    v = constrain(v, "batch", "kv_heads", None, None)
+    return q, k, v
+
+
+def attn_full(
+    p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, dtype,
+    window: int | None = None, causal: bool = True, use_rope: bool = True,
+):
+    """Full-sequence attention. Returns (out (B,S,d), (k, v) for caching)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, dtype, use_rope)
+    o = ops.attention(q, k, v, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.q_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(dtype))
+    return constrain(out, "batch", None, None), (k, v)
+
+
+def attn_decode(
+    p, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
+    write_idx: jax.Array, dtype, use_rope: bool = True,
+):
+    """One-token attention against a (possibly ring) KV cache.
+
+    x: (B, 1, d); pos: scalar absolute position (for RoPE); write_idx:
+    scalar slot to write (== pos for full caches, pos % W for rings);
+    length: valid cache entries *after* this token is appended.
+    Returns (out (B, 1, d), k_cache', v_cache').
+    """
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.reshape(pos, (1,))
+    q, k, v = _project_qkv(p, cfg, x, positions, dtype, use_rope)  # (B,H,1,D)
+    # move the per-token q/k/v (MBs) into the CACHE's layout instead of
+    # letting XLA move the multi-GB cache into the activations' layout:
+    # "kv_batch" re-points at the TP axis in the hybrid decode layout.
+    q = constrain(q, "kv_batch", None, None, None)
+    k = constrain(k, "kv_batch", None, None, None)
+    v = constrain(v, "kv_batch", None, None, None)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, 0, write_idx, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, 0, write_idx, 0))
+    lengths = jnp.full((B,), length, jnp.int32)
+    o = ops.decode_attention(q[:, :, 0], k_cache.astype(dtype),
+                             v_cache.astype(dtype), lengths)
+    o = constrain(o.reshape(B, cfg.q_dim), "batch", "heads")
+    out = jnp.einsum("bh,hd->bd", o, p["wo"].astype(dtype))
+    return out[:, None, :], k_cache, v_cache

@@ -1,0 +1,111 @@
+"""Shared model building blocks (pure-JAX, param pytrees).
+
+Every ``init_*`` has a mirrored ``axes_*`` returning the same pytree
+structure with logical-axis tuples instead of arrays (consumed by
+``sharding.tree_shardings``); tests assert the structures match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, D) with D even; positions: (S,) or (B,S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    # broadcast over head axis: x is (B, H, S, D), angles (B?, S, half)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (num, dim)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(num)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, tie: bool):
+    ks = jax.random.split(key, 2)
+    # tied: the table is also the unembedding, so keep logits O(1)
+    p = {"tok": _dense_init(ks[0], (vocab, d), scale=d ** -0.5 if tie else 1.0)}
+    if not tie:
+        p["unembed"] = _dense_init(ks[1], (d, vocab))
+    return p
+
+
+def axes_embed(tie: bool):
+    a = {"tok": ("vocab", "embed")}
+    if not tie:
+        a["unembed"] = ("embed", "vocab")
+    return a
+
+
+def embed_tokens(p, tokens: jax.Array, dtype) -> jax.Array:
+    out = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    return constrain(out, "batch", None, None)
+
+
+def unembed(p, x: jax.Array, dtype) -> jax.Array:
+    if "unembed" in p:
+        w = p["unembed"].astype(dtype)
+    else:
+        w = p["tok"].astype(dtype).T
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _dense_init(ks[0], (d, f)),
+        "wg": _dense_init(ks[1], (d, f)),
+        "wo": _dense_init(ks[2], (f, d)),
+    }
+
+
+def axes_mlp():
+    return {"wi": ("embed_fsdp", "ffn"), "wg": ("embed_fsdp", "ffn"),
+            "wo": ("ffn", "embed_fsdp")}
+
+
+def mlp(p, x: jax.Array, dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dtype))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * h
+    h = constrain(h, "batch", None, "ffn")
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(dtype))
+    return constrain(out, "batch", None, None)

@@ -1,0 +1,332 @@
+"""Unified model API: ``build_model(cfg)`` -> ``Model`` with init / loss /
+prefill / decode / cache constructors / dry-run input specs.
+
+Batch layouts per family:
+  LM (dense/moe/ssm/hybrid): {"tokens", "targets"} ints (B, S)
+  VLM: + {"patches"} (B, num_patches, d) stub embeddings; text len = S - P
+  audio (whisper): {"frames"} (B, S//2, d) stub embeddings + token pair
+
+Decode batches: {"token" (B, 1), "pos" scalar} + cache pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM,
+                                ModelConfig, ShapeConfig)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    param_axes: Callable
+    loss: Callable            # (params, batch) -> scalar
+    forward: Callable         # (params, batch) -> logits
+    prefill: Callable         # (params, batch) -> (last logits, cache)
+    decode: Callable          # (params, cache, batch) -> (logits, cache)
+    init_cache: Callable      # (batch_size, cache_len) -> zeros pytree
+    cache_axes: Callable      # (cache_len,) -> logical-axis pytree
+    input_specs: Callable     # (shape) -> (batch specs, batch axes)
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def _cache_len(cfg: ModelConfig, S: int) -> int:
+    if cfg.sliding_window is not None and cfg.local_global_pattern is None:
+        return min(S, cfg.sliding_window)
+    return S
+
+
+# ---------------------------------------------------------------------------
+# Cache constructors (zeros) + logical axes, per family
+# ---------------------------------------------------------------------------
+
+def _kv_zeros(cfg, n_stack, B, S, dtype):
+    shape = tuple(n_stack) + (B, cfg.num_kv_heads, S, cfg.head_dim)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _kv_axes(n_stack_axes):
+    ax = tuple(n_stack_axes) + ("kv_batch", "kv_heads", "ctx", None)
+    return (ax, ax)
+
+
+def _ssm_zeros(cfg, n_stack, B, dtype):
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_state
+    conv = jnp.zeros(tuple(n_stack) + (B, cfg.ssm_conv - 1, conv_dim), dtype)
+    h = jnp.zeros(tuple(n_stack) + (B, cfg.ssm_heads, cfg.ssm_state,
+                                    cfg.ssm_head_dim), jnp.float32)
+    return (conv, h)
+
+
+def _ssm_axes(n_stack_axes):
+    conv_ax = tuple(n_stack_axes) + ("batch", None, "heads")
+    h_ax = tuple(n_stack_axes) + ("batch", "heads", None, None)
+    return (conv_ax, h_ax)
+
+
+def make_init_cache(cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init_cache(B: int, S: int):
+        if cfg.family == AUDIO:
+            L_ = cfg.num_layers
+            sd = min(S, cfg.max_decode_len)
+            k_self, v_self = _kv_zeros(cfg, (L_,), B, sd, dtype)
+            k_x, v_x = _kv_zeros(cfg, (L_,), B, cfg.cross_kv_len, dtype)
+            return (k_self, v_self, k_x, v_x)
+        if cfg.local_global_pattern is not None:
+            nl, ng = cfg.local_global_pattern
+            period = nl + ng
+            G = cfg.num_layers // period
+            tail = cfg.num_layers - G * period
+            Wd = min(S, cfg.sliding_window)
+            c = {
+                "group_local": _kv_zeros(cfg, (G, nl), B, Wd, dtype),
+                "group_global": _kv_zeros(cfg, (G,), B, S, dtype),
+            }
+            if tail:
+                c["tail_local"] = _kv_zeros(cfg, (tail,), B, Wd, dtype)
+            return c
+        L_ = cfg.num_layers
+        Sc = _cache_len(cfg, S)
+        if cfg.family == SSM:
+            return {"layers": _ssm_zeros(cfg, (L_,), B, dtype)}
+        if cfg.family == HYBRID:
+            kv = _kv_zeros(cfg, (L_,), B, Sc, dtype)
+            ssm = _ssm_zeros(cfg, (L_,), B, dtype)
+            return {"layers": kv + ssm}
+        return {"layers": _kv_zeros(cfg, (L_,), B, Sc, dtype)}
+
+    return init_cache
+
+
+def make_cache_axes(cfg: ModelConfig):
+    def cache_axes():
+        if cfg.family == AUDIO:
+            ka = _kv_axes(("layers",))
+            return ka + ka
+        if cfg.local_global_pattern is not None:
+            c = {
+                "group_local": _kv_axes(("groups", "layers")),
+                "group_global": _kv_axes(("groups",)),
+            }
+            nl, ng = cfg.local_global_pattern
+            if cfg.num_layers % (nl + ng):
+                c["tail_local"] = _kv_axes(("layers",))
+            return c
+        if cfg.family == SSM:
+            return {"layers": _ssm_axes(("layers",))}
+        if cfg.family == HYBRID:
+            return {"layers": _kv_axes(("layers",)) + _ssm_axes(("layers",))}
+        return {"layers": _kv_axes(("layers",))}
+
+    return cache_axes
+
+
+# ---------------------------------------------------------------------------
+# Prefill cache post-processing: full K/V -> ring layout for window layers
+# ---------------------------------------------------------------------------
+
+def _to_ring(kv, W):
+    """(..., S, D) full cache -> (..., W, D) ring with slot = t % W."""
+    k, v = kv
+    S = k.shape[-2]
+    if S <= W:
+        pad = [(0, 0)] * k.ndim
+        pad[-2] = (0, W - S)
+        return (jnp.pad(k, pad), jnp.pad(v, pad))
+    sl = [slice(None)] * k.ndim
+    sl[-2] = slice(S - W, S)
+    k, v = k[tuple(sl)], v[tuple(sl)]
+    slots = jnp.arange(S - W, S) % W
+    order = jnp.argsort(slots)
+    return (jnp.take(k, order, axis=-2), jnp.take(v, order, axis=-2))
+
+
+def _pad_seq(kv, max_len):
+    """Grow a full (non-ring) KV cache's seq axis to max_len slots."""
+    k, v = kv
+    S = k.shape[-2]
+    if max_len is None or max_len <= S:
+        return kv
+    pad = [(0, 0)] * k.ndim
+    pad[-2] = (0, max_len - S)
+    return (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+# ---------------------------------------------------------------------------
+# build_model
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    if cfg.family == AUDIO:
+        return _build_whisper(cfg)
+
+    def init(key):
+        return T.init_params(key, cfg)
+
+    def param_axes():
+        return T.param_axes(cfg)
+
+    def _embed_inputs(params, batch):
+        x = L.embed_tokens(params["embed"], batch["tokens"], dtype)
+        if cfg.family == VLM:
+            x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+        return x
+
+    def forward(params, batch, remat=False):
+        x = _embed_inputs(params, batch)
+        h, aux, _ = T.forward(params, cfg, x, collect_cache=False,
+                              remat=remat)
+        return T.logits_from_hidden(params, cfg, h), aux
+
+    def loss(params, batch, remat=True):
+        logits, aux = forward(params, batch, remat=remat)
+        if cfg.family == VLM:   # only text positions carry labels
+            logits = logits[:, cfg.num_patches:]
+        l = _xent(logits, batch["targets"])
+        if cfg.is_moe:
+            l = l + MOE_AUX_WEIGHT * aux
+        return l
+
+    def prefill(params, batch, max_len=None):
+        """max_len reserves decode headroom in the full-attention caches
+        (ring caches are fixed at the window size)."""
+        x = _embed_inputs(params, batch)
+        h, _, caches = T.forward(params, cfg, x, collect_cache=True)
+        logits = T.logits_from_hidden(params, cfg, h[:, -1:])
+        if cfg.local_global_pattern is not None:
+            Wd = cfg.sliding_window
+            caches = {
+                "group_local": _to_ring(caches["group_local"], Wd),
+                "group_global": _pad_seq(caches["group_global"], max_len),
+                **({"tail_local": _to_ring(caches["tail_local"], Wd)}
+                   if "tail_local" in caches else {}),
+            }
+        elif cfg.family == SSM:
+            pass                      # states are O(1); nothing to pad
+        elif cfg.sliding_window is not None:
+            c = caches["layers"]
+            kv = _to_ring(c[:2], cfg.sliding_window)
+            caches = {"layers": kv + tuple(c[2:])}
+        else:
+            c = caches["layers"]
+            caches = {"layers": _pad_seq(c[:2], max_len) + tuple(c[2:])}
+        return logits, caches
+
+    def decode(params, cache, batch):
+        return T.decode_step(params, cfg, cache, batch["token"], batch["pos"])
+
+    init_cache = make_init_cache(cfg)
+    cache_axes = make_cache_axes(cfg)
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == VLM:
+                St = S - cfg.num_patches
+                specs = {
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.num_patches, cfg.d_model), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, St), i32),
+                }
+                axes = {"patches": ("batch", None, None),
+                        "tokens": ("batch", None)}
+                if shape.kind == "train":
+                    specs["targets"] = jax.ShapeDtypeStruct((B, St), i32)
+                    axes["targets"] = ("batch", None)
+            else:
+                specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+                axes = {"tokens": ("batch", None)}
+                if shape.kind == "train":
+                    specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+                    axes["targets"] = ("batch", None)
+            return specs, axes
+        # decode
+        specs = {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((), i32)}
+        axes = {"token": ("batch", None), "pos": ()}
+        return specs, axes
+
+    return Model(cfg, init, param_axes, loss, forward, prefill, decode,
+                 init_cache, cache_axes, input_specs)
+
+
+# ---------------------------------------------------------------------------
+# Whisper wiring
+# ---------------------------------------------------------------------------
+
+def _build_whisper(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return W.init_params(key, cfg)
+
+    def param_axes():
+        return W.param_axes(cfg)
+
+    def forward(params, batch, remat=False):
+        enc = W.encode(params, cfg, batch["frames"])
+        logits, _ = W.decode_full(params, cfg, batch["tokens"], enc)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(params, batch, remat=True):
+        logits, _ = forward(params, batch)
+        return _xent(logits, batch["targets"])
+
+    def prefill(params, batch, max_len=None):
+        enc = W.encode(params, cfg, batch["frames"])
+        logits, caches = W.decode_full(params, cfg, batch["tokens"], enc,
+                                       collect_cache=True)
+        # self-KV -> ring of max_decode_len
+        k_self, v_self, k_x, v_x = caches
+        k_self, v_self = _to_ring((k_self, v_self), cfg.max_decode_len)
+        return logits[:, -1:], (k_self, v_self, k_x, v_x)
+
+    def decode(params, cache, batch):
+        return W.decode_step(params, cfg, cache, batch["token"], batch["pos"])
+
+    init_cache = make_init_cache(cfg)
+    cache_axes = make_cache_axes(cfg)
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        Se = S // 2                       # post-conv frame rate (stub)
+        Sd = min(cfg.max_decode_len, S)
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "frames": jax.ShapeDtypeStruct((B, Se, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, Sd), jnp.int32),
+            }
+            axes = {"frames": ("batch", None, None),
+                    "tokens": ("batch", None)}
+            if shape.kind == "train":
+                specs["targets"] = jax.ShapeDtypeStruct((B, Sd), jnp.int32)
+                axes["targets"] = ("batch", None)
+            return specs, axes
+        specs = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        axes = {"token": ("batch", None), "pos": ()}
+        return specs, axes
+
+    return Model(cfg, init, param_axes, loss, forward, prefill, decode,
+                 init_cache, cache_axes, input_specs)

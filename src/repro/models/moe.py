@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based ragged
+dispatch (capacity-bounded), expert-parallel over the ``model`` axis.
+
+Dense one-hot dispatch would inflate FLOPs by E/k (16x for 128/top-8);
+instead tokens are sorted by expert id and scattered into per-expert
+capacity buffers — compute stays proportional to *active* parameters,
+which is what the MoE rooflines must reflect. Overflowing tokens are
+dropped (standard GShard/Switch semantics) and their share of the
+residual stream falls through the skip connection.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain, current_mesh, get_rules
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L._dense_init(ks[0], (d, E)),
+        "wi": L._dense_init(ks[1], (E, d, f)),
+        "wg": L._dense_init(ks[2], (E, d, f)),
+        "wo": L._dense_init(ks[3], (E, f, d)),
+    }
+
+
+def axes_moe():
+    # experts take the whole TP ("model") axis, so the per-expert ffn dim
+    # must NOT also map to it (one mesh axis per spec); d_model rows get
+    # the FSDP ("data") shard instead.
+    return {
+        "router": ("embed", "experts"),
+        "wi": ("experts", "embed_fsdp", None),
+        "wg": ("experts", "embed_fsdp", None),
+        "wo": ("experts", None, "embed_fsdp"),
+    }
+
+
+def moe(p, cfg: ModelConfig, x: jax.Array, dtype,
+        capacity_factor: float | None = None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)                     # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(0)                                       # (E,)
+    one_hot = jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(1)  # (T, E)
+    ce = one_hot.mean(0) / k
+    aux = E * jnp.sum(me * ce)
+
+    # --- ragged dispatch: sort (token, expert) pairs by expert ---
+    # Slot assignment is *shard-local*: tokens are ranked within their
+    # own (data-shard, expert) bucket and written into that shard's
+    # slice of the capacity axis. A globally-ranked scatter would cross
+    # data shards, which XLA's SPMD partitioner implements by
+    # replicating + all-reducing the whole (E, cap, d) buffer per layer
+    # (TBs of traffic); shard-local slots keep every write local (this
+    # is GShard's per-shard capacity semantics).
+    cap = int(-(-T * k * capacity_factor // E))              # ceil
+    cap = max(8, -(-cap // 8) * 8)
+    flat_e = topi.reshape(-1)                                # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e)                              # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(T * k, dtype=jnp.int32) - starts[se]   # rank in expert
+    keep = slot < cap
+
+    # --- dispatch as GATHER, not scatter -------------------------------
+    # Scattering (T*k, d) activations into the expert-sharded buffer
+    # makes XLA's SPMD partitioner replicate + all-reduce the whole
+    # (E, cap, d) buffer every layer (TBs of collective traffic).
+    # Instead scatter only the tiny int32 *index map* slot->token, then
+    # move the big activations through gathers, which SPMD handles with
+    # one all-gather of the (much smaller) source.
+    tok_of_slot = jnp.zeros((E, cap), jnp.int32)
+    tok_of_slot = tok_of_slot.at[
+        se, jnp.where(keep, slot, cap)].set(st, mode="drop")
+    has_tok = jnp.zeros((E, cap), bool).at[
+        se, jnp.where(keep, slot, cap)].set(True, mode="drop")
+    # replicate the gather SOURCE explicitly: one all-gather of (T, d)
+    # activations per layer; otherwise SPMD partitions the gather by
+    # all-reducing its (E, cap, d) f32 *output* (~10-70 GB/layer).
+    xt_rep = constrain(xt.astype(dtype), None, None)
+    buf = jnp.take(xt_rep, tok_of_slot.reshape(-1), axis=0)
+    buf = buf.reshape(E, cap, d) * has_tok[..., None].astype(dtype)
+    buf = constrain(buf, "experts", None, None)
+
+    # --- expert GEMMs (batched over the expert-parallel axis) ---
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * h
+    h = constrain(h, "experts", None, None)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+    y = constrain(y, "experts", None, None)
+
+    # --- combine: pure gathers, no scatter ------------------------------
+    # token t's k assignments sit at flat positions t*k..t*k+k-1 in the
+    # *unsorted* order, so un-permuting the expert outputs and a
+    # reshape-sum replaces the scatter-add (which SPMD would otherwise
+    # implement as replicate + all-reduce of the (T, d) activations).
+    # replicate this gather's source too (same output-AR pathology as
+    # dispatch; measured A4 vs A5 in EXPERIMENTS.md §Perf)
+    y_flat = constrain(y.reshape(E * cap, d), None, None)
+    gathered = jnp.take(y_flat, se * cap + jnp.minimum(slot, cap - 1),
+                        axis=0)                              # (T*k, d)
+    contrib = gathered * (sw * keep)[:, None].astype(dtype)
+    inv = jnp.argsort(order)                                 # unsort
+    out = jnp.take(contrib, inv, axis=0).reshape(T, k, d).sum(axis=1)
+    out = constrain(out.reshape(B, S, d), "batch", None, None)
+    return out, aux
+
+
+def _dispatch_shards() -> int:
+    """Number of data shards the token axis is split across (1 off-mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    rules = get_rules()
+    n = 1
+    for a in rules.get("batch", ()):
+        n *= mesh.shape.get(a, 1)
+    return max(1, n)

@@ -1,0 +1,140 @@
+"""Mamba-2 (SSD) mixer block [arXiv:2405.21060], ngroups=1.
+
+Full path uses the chunked SSD kernel (``kernels.ops.ssd``); decode is
+the O(1)-state recurrence. The block also exposes its final SSM + conv
+states so serving can hand off prefill -> decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = inner + 2 * N
+    return inner, H, P, N, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    inner, H, P, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": L._dense_init(ks[0], (d, 2 * inner + 2 * N + H)),
+        "conv_w": L._dense_init(ks[1], (cfg.ssm_conv, conv_dim), scale=0.3),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": jnp.zeros((inner,), jnp.float32),
+        "out_proj": L._dense_init(ks[4], (inner, d)),
+    }
+
+
+def axes_ssm():
+    return {
+        "in_proj": ("embed_fsdp", "heads"),
+        "conv_w": ("conv", "heads"),
+        "conv_b": ("heads",),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "norm": ("heads",),
+        "out_proj": ("heads", "embed_fsdp"),
+    }
+
+
+def _split_proj(cfg, proj):
+    inner, H, P, N, _ = _dims(cfg)
+    z = proj[..., :inner]
+    xin = proj[..., inner:2 * inner]
+    Bc = proj[..., 2 * inner:2 * inner + N]
+    Cc = proj[..., 2 * inner + N:2 * inner + 2 * N]
+    dt = proj[..., 2 * inner + 2 * N:]
+    return z, xin, Bc, Cc, dt
+
+
+def ssm_full(p, cfg: ModelConfig, x: jax.Array, dtype,
+             return_state: bool = False):
+    """x: (B, S, d) -> out (B, S, d) [, (conv_state, h_state)]."""
+    B, S, d = x.shape
+    inner, H, P, N, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dtype))
+    z, xin, Bc, Cc, dt_raw = _split_proj(cfg, proj)
+
+    # causal depthwise conv over (x, B, C)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)        # (B,S,conv_dim)
+    ck = cfg.ssm_conv
+    padded = jnp.pad(conv_in, ((0, 0), (ck - 1, 0), (0, 0)))
+    conv = sum(
+        padded[:, i:i + S] * p["conv_w"][i].astype(dtype)
+        for i in range(ck)) + p["conv_b"].astype(dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dtype)
+    xin = conv[..., :inner]
+    Bc = conv[..., inner:inner + N]
+    Cc = conv[..., inner + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    xh = xin.reshape(B, S, H, P)
+    xh = constrain(xh, "batch", None, "heads", None)
+    y = ops.ssd(xh, dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, inner)
+
+    # gated RMSNorm then output projection
+    gate = jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    y = L.rms_norm(y * gate, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dtype))
+    out = constrain(out, "batch", None, None)
+    if not return_state:
+        return out
+
+    # final states for prefill -> decode handoff
+    dtf = dt
+    a = A[None, None, :] * dtf                                # (B,S,H)
+    cum = jnp.cumsum(a, axis=1)
+    w = jnp.exp(cum[:, -1:, :] - cum) * dtf                   # (B,S,H)
+    h = jnp.einsum("bsh,bsn,bshp->bhnp", w, Bc.astype(jnp.float32),
+                   xh.astype(jnp.float32))                    # (B,H,N,P)
+    conv_state = jnp.concatenate(
+        [jnp.zeros((B, ck - 1, conv_dim), dtype), conv_in], axis=1
+    )[:, -(ck - 1):]
+    return out, (conv_state, h)
+
+
+def ssm_decode(p, cfg: ModelConfig, x: jax.Array, conv_state, h_state, dtype):
+    """x: (B, 1, d). Returns (out (B,1,d), conv_state', h_state')."""
+    B = x.shape[0]
+    inner, H, P, N, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dtype))[:, 0]
+    z, xin, Bc, Cc, dt_raw = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)         # (B, conv_dim)
+    ck = cfg.ssm_conv
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)  # (B,ck,C)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(dtype),
+                      p["conv_w"].astype(dtype)) + p["conv_b"].astype(dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dtype)
+    xin = conv[..., :inner]
+    Bc = conv[..., inner:inner + N]
+    Cc = conv[..., inner + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h_state, y = ops.ssd_decode_step(
+        h_state, xin.reshape(B, H, P).astype(jnp.float32), dt, A,
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32))
+    y = y.reshape(B, inner).astype(dtype)
+
+    gate = jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    y = L.rms_norm(y * gate, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(dtype))
+    return out[:, None], window[:, 1:], h_state

@@ -1,0 +1,345 @@
+"""Decoder-only LM assembly for every uniform-stack family
+(dense / moe / ssm / hybrid / vlm-backbone), plus the gemma3 grouped
+local:global stack. Layers are stacked (leading L axis) and executed
+with ``lax.scan`` — one layer's HLO regardless of depth, which keeps
+512-device SPMD compiles tractable and is what a production framework
+does anyway.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DENSE, HYBRID, MOE, SSM, VLM, ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.sharding import constrain
+
+
+def _unroll() -> bool:
+    # full unroll for the dry-run: XLA cost_analysis counts a while
+    # body ONCE, so roofline FLOPs/bytes/collectives need the layer
+    # loop expanded. Runtime code keeps unroll=1 (small HLO).
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Per-layer params
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    fam = cfg.family
+    if fam in (DENSE, MOE, HYBRID, VLM):
+        p["attn"] = A.init_attn(ks[0], cfg)
+    if fam in (SSM, HYBRID):
+        p["ssm"] = S.init_ssm(ks[1], cfg)
+    if fam == HYBRID:
+        p["attn_norm"] = jnp.zeros((d,), jnp.float32)
+        p["ssm_norm"] = jnp.zeros((d,), jnp.float32)
+    if fam == MOE:
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["moe"] = M.init_moe(ks[2], cfg)
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def axes_layer(cfg: ModelConfig):
+    a: Dict[str, Any] = {"ln1": (None,)}
+    fam = cfg.family
+    if fam in (DENSE, MOE, HYBRID, VLM):
+        a["attn"] = A.axes_attn(cfg)
+    if fam in (SSM, HYBRID):
+        a["ssm"] = S.axes_ssm()
+    if fam == HYBRID:
+        a["attn_norm"] = (None,)
+        a["ssm_norm"] = (None,)
+    if fam == MOE:
+        a["ln2"] = (None,)
+        a["moe"] = M.axes_moe()
+    elif cfg.d_ff > 0:
+        a["ln2"] = (None,)
+        a["mlp"] = L.axes_mlp()
+    return a
+
+
+def _stack_axes(tree, extra=("layers",)):
+    """Prepend stacking logical axes to every leaf's axis tuple."""
+    return jax.tree.map(lambda ax: tuple(extra) + tuple(ax), tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def layer_full(lp, cfg: ModelConfig, x, positions, dtype,
+               window: Optional[int], collect_cache: bool):
+    """One layer, full-sequence. Returns (x, (cache_k, cache_v, extras), aux)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+    cache = ()
+    if fam in (DENSE, MOE, VLM):
+        a_out, kv = A.attn_full(lp["attn"], cfg, h, positions, dtype,
+                                window=window)
+        x = x + a_out
+        if collect_cache:
+            cache = kv
+    elif fam == SSM:
+        if collect_cache:
+            s_out, (conv_st, h_st) = S.ssm_full(lp["ssm"], cfg, h, dtype,
+                                                return_state=True)
+            cache = (conv_st, h_st)
+        else:
+            s_out = S.ssm_full(lp["ssm"], cfg, h, dtype)
+        x = x + s_out
+    elif fam == HYBRID:
+        a_out, kv = A.attn_full(lp["attn"], cfg, h, positions, dtype,
+                                window=window)
+        if collect_cache:
+            s_out, (conv_st, h_st) = S.ssm_full(lp["ssm"], cfg, h, dtype,
+                                                return_state=True)
+            cache = kv + (conv_st, h_st)
+        else:
+            s_out = S.ssm_full(lp["ssm"], cfg, h, dtype)
+        a_out = L.rms_norm(a_out, lp["attn_norm"], cfg.rms_eps)
+        s_out = L.rms_norm(s_out, lp["ssm_norm"], cfg.rms_eps)
+        x = x + 0.5 * (a_out + s_out)
+    if fam == MOE:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        m_out, aux = M.moe(lp["moe"], cfg, h2, dtype)
+        x = x + m_out
+    elif cfg.d_ff > 0:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], h2, dtype)
+    return x, cache, aux
+
+
+def layer_decode(lp, cfg: ModelConfig, x, pos, cache, dtype,
+                 window: Optional[int]):
+    """One layer, one token. cache is this layer's slice; returns updated."""
+    fam = cfg.family
+    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+    if fam in (DENSE, MOE, VLM, HYBRID):
+        k_cache, v_cache = cache[0], cache[1]
+        W = k_cache.shape[2]
+        write_idx = pos % W if window is not None else pos
+        length = jnp.minimum(pos + 1, W)
+        a_out, k_cache, v_cache = A.attn_decode(
+            lp["attn"], cfg, h, pos, k_cache, v_cache, length, write_idx,
+            dtype)
+    if fam in (SSM, HYBRID):
+        conv_st, h_st = (cache[-2], cache[-1])
+        s_out, conv_st, h_st = S.ssm_decode(lp["ssm"], cfg, h, conv_st,
+                                            h_st, dtype)
+    if fam in (DENSE, MOE, VLM):
+        x = x + a_out
+        new_cache = (k_cache, v_cache)
+    elif fam == SSM:
+        x = x + s_out
+        new_cache = (conv_st, h_st)
+    else:  # hybrid
+        a_out = L.rms_norm(a_out, lp["attn_norm"], cfg.rms_eps)
+        s_out = L.rms_norm(s_out, lp["ssm_norm"], cfg.rms_eps)
+        x = x + 0.5 * (a_out + s_out)
+        new_cache = (k_cache, v_cache, conv_st, h_st)
+    if fam == MOE:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        m_out, _ = M.moe(lp["moe"], cfg, h2, dtype)
+        x = x + m_out
+    elif cfg.d_ff > 0:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], h2, dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack init (uniform and gemma3-grouped)
+# ---------------------------------------------------------------------------
+
+def _vmap_init(key, cfg, n):
+    return jax.vmap(lambda k: init_layer(k, cfg))(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_layers, k_tail, k_glob = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": L.init_embed(k_embed, cfg.vocab_size, cfg.d_model,
+                              cfg.tie_embeddings),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.local_global_pattern is None:
+        params["layers"] = _vmap_init(k_layers, cfg, cfg.num_layers)
+    else:
+        n_local, n_global = cfg.local_global_pattern
+        period = n_local + n_global
+        n_groups = cfg.num_layers // period
+        n_tail = cfg.num_layers - n_groups * period  # trailing local layers
+        params["group_local"] = jax.vmap(
+            lambda k: _vmap_init(k, cfg, n_local))(
+                jax.random.split(k_layers, n_groups))
+        params["group_global"] = _vmap_init(k_glob, cfg, n_groups)
+        if n_tail:
+            params["tail_local"] = _vmap_init(k_tail, cfg, n_tail)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    axes: Dict[str, Any] = {
+        "embed": L.axes_embed(cfg.tie_embeddings),
+        "final_norm": (None,),
+    }
+    la = axes_layer(cfg)
+    if cfg.local_global_pattern is None:
+        axes["layers"] = _stack_axes(la, ("layers",))
+    else:
+        n_local, n_global = cfg.local_global_pattern
+        period = n_local + n_global
+        n_groups = cfg.num_layers // period
+        n_tail = cfg.num_layers - n_groups * period
+        axes["group_local"] = _stack_axes(la, ("groups", "layers"))
+        axes["group_global"] = _stack_axes(la, ("groups",))
+        if n_tail:
+            axes["tail_local"] = _stack_axes(la, ("layers",))
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_stack(stacked, cfg, x, positions, dtype, window, collect, remat):
+    body = functools.partial(layer_full, cfg=cfg, positions=positions,
+                             dtype=dtype, window=window,
+                             collect_cache=collect)
+
+    def step(carry, lp):
+        x, aux_sum = carry
+        fn = body
+        if remat:
+            fn = jax.checkpoint(
+                lambda lp_, x_: body(lp_, x=x_),
+                policy=jax.checkpoint_policies.nothing_saveable)
+            x2, cache, aux = fn(lp, x)
+        else:
+            x2, cache, aux = body(lp, x=x)
+        return (x2, aux_sum + aux), cache
+
+    (x, aux), caches = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                    stacked, unroll=_unroll())
+    return x, aux, caches
+
+
+def forward(params, cfg: ModelConfig, x_embed: jax.Array,
+            collect_cache: bool = False, remat: bool = False):
+    """Embedded inputs -> (final hidden, aux loss, caches pytree or None)."""
+    B, Sq, d = x_embed.shape
+    dtype = jnp.dtype(cfg.dtype)
+    positions = jnp.arange(Sq)
+    x = x_embed
+    caches: Dict[str, Any] = {}
+    if cfg.local_global_pattern is None:
+        window = cfg.sliding_window
+        x, aux, c = _scan_stack(params["layers"], cfg, x, positions, dtype,
+                                window, collect_cache, remat)
+        caches["layers"] = c
+    else:
+        aux = jnp.zeros((), jnp.float32)
+
+        def group_step(carry, gp):
+            x, aux_sum = carry
+            x, aux_l, c_loc = _scan_stack(
+                gp["local"], cfg, x, positions, dtype,
+                cfg.sliding_window, collect_cache, remat)
+            x, c_glob, aux_g = layer_full(gp["global"], cfg, x, positions,
+                                          dtype, None, collect_cache)
+            return (x, aux_sum + aux_l + aux_g), (c_loc, c_glob)
+
+        gp = {"local": params["group_local"], "global": params["group_global"]}
+        (x, aux), (c_loc, c_glob) = jax.lax.scan(group_step, (x, aux), gp,
+                                                 unroll=_unroll())
+        caches["group_local"] = c_loc
+        caches["group_global"] = c_glob
+        if "tail_local" in params:
+            x, aux_t, c_tail = _scan_stack(
+                params["tail_local"], cfg, x, positions, dtype,
+                cfg.sliding_window, collect_cache, remat)
+            aux = aux + aux_t
+            caches["tail_local"] = c_tail
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, aux, (caches if collect_cache else None)
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: jax.Array):
+    return L.unembed(params["embed"], x, jnp.dtype(cfg.dtype))
+
+
+def lm_forward(params, cfg: ModelConfig, tokens: jax.Array,
+               remat: bool = False, prefix_embeds: jax.Array | None = None):
+    """tokens (B, S) [-> optionally preceded by embeds] -> logits."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    x, aux, _ = forward(params, cfg, x, collect_cache=False, remat=remat)
+    return logits_from_hidden(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path over stacked caches
+# ---------------------------------------------------------------------------
+
+def _scan_decode(stacked, cfg, x, pos, caches, dtype, window):
+    def step(x, inp):
+        lp, cache = inp
+        x, new_cache = layer_decode(lp, cfg, x, pos, cache, dtype, window)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(step, x, (stacked, caches),
+                                 unroll=_unroll())
+    return x, new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token: jax.Array,
+                pos: jax.Array):
+    """token (B, 1) at absolute position pos -> (logits (B,1,V), caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], token, dtype)
+    new_caches = {}
+    if cfg.local_global_pattern is None:
+        x, new_caches["layers"] = _scan_decode(
+            params["layers"], cfg, x, pos, caches["layers"], dtype,
+            cfg.sliding_window)
+    else:
+        def group_step(x, inp):
+            gp, cache = inp
+            x, c_loc = _scan_decode(gp["local"], cfg, x, pos, cache[0],
+                                    dtype, cfg.sliding_window)
+            x, c_glob = layer_decode(gp["global"], cfg, x, pos, cache[1],
+                                     dtype, None)
+            return x, (c_loc, c_glob)
+
+        gp = {"local": params["group_local"], "global": params["group_global"]}
+        x, (c_loc, c_glob) = jax.lax.scan(
+            group_step, x, (gp, (caches["group_local"],
+                                 caches["group_global"])),
+            unroll=_unroll())
+        new_caches["group_local"] = c_loc
+        new_caches["group_global"] = c_glob
+        if "tail_local" in params:
+            x, new_caches["tail_local"] = _scan_decode(
+                params["tail_local"], cfg, x, pos, caches["tail_local"],
+                dtype, cfg.sliding_window)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return logits_from_hidden(params, cfg, x), new_caches

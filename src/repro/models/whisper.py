@@ -1,0 +1,199 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB:
+``input_specs`` provides precomputed frame embeddings at the post-conv
+rate). Sinusoidal positions, bidirectional encoder, causal decoder with
+cross-attention; no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import _stack_axes, _unroll
+from repro.sharding import constrain
+
+
+def init_cross_attn(key, cfg: ModelConfig):
+    return A.init_attn(key, cfg)          # same shapes; bias/qknorm off
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": A.init_attn(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self_attn": A.init_attn(ks[0], cfg),
+        "ln_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross_attn": init_cross_attn(ks[1], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_e, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": L.init_embed(k_e, cfg.vocab_size, cfg.d_model, tie=True),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    attn_ax = A.axes_attn(cfg)
+    enc = {"ln1": (None,), "attn": attn_ax, "ln2": (None,),
+           "mlp": L.axes_mlp()}
+    dec = {"ln1": (None,), "self_attn": attn_ax, "ln_x": (None,),
+           "cross_attn": attn_ax, "ln2": (None,), "mlp": L.axes_mlp()}
+    return {
+        "embed": L.axes_embed(tie=True),
+        "enc_layers": _stack_axes(enc),
+        "enc_norm": (None,),
+        "dec_layers": _stack_axes(dec),
+        "final_norm": (None,),
+    }
+
+
+def _cross_attn_full(p, cfg, x, enc_out, dtype):
+    """Queries from x (B,Sd,d), keys/values from enc_out (B,Se,d)."""
+    B, Sd, _ = x.shape
+    Se = enc_out.shape[1]
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(dtype))
+    q = q.reshape(B, Sd, Hq, Dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, Se, Hkv, Dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Se, Hkv, Dh).transpose(0, 2, 1, 3)
+    if Sd == Se:
+        o = ops.attention(q, k, v, causal=False)
+    else:  # ragged cross shape: grouped-GQA reference path
+        G = Hq // Hkv
+        scale = Dh ** -0.5
+        qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, Sd, Dh)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", jax.nn.softmax(logits, -1),
+                       v.astype(jnp.float32))
+        o = o.reshape(B, Hq, Sd, Dh).astype(dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Sd, cfg.q_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(dtype))
+    return out, (k, v)
+
+
+def _cross_attn_decode(p, cfg, x, k_cache, v_cache, dtype):
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dtype))
+    q = q.reshape(B, 1, Hq, Dh).transpose(0, 2, 1, 3)[:, :, 0]
+    Se = k_cache.shape[2]
+    lengths = jnp.full((B,), Se, jnp.int32)
+    o = ops.decode_attention(q, k_cache.astype(dtype),
+                             v_cache.astype(dtype), lengths)
+    out = jnp.einsum("bh,hd->bd", o.reshape(B, cfg.q_dim),
+                     p["wo"].astype(dtype))
+    return out[:, None]
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array):
+    """frames: (B, Se, d) stub embeddings -> (B, Se, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    Se = frames.shape[1]
+    x = frames.astype(dtype) + L.sinusoidal_positions(
+        Se, cfg.d_model).astype(dtype)[None]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(Se)
+
+    def step(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        a, _ = A.attn_full(lp["attn"], cfg, h, positions, dtype,
+                           causal=False, use_rope=False)
+        x = x + a
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], h, dtype)
+        return x, ()
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"], unroll=_unroll())
+    return L.rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def decode_full(params, cfg: ModelConfig, tokens: jax.Array,
+                enc_out: jax.Array, collect_cache: bool = False):
+    """Teacher-forced decoder pass. Returns (logits, caches or None)."""
+    dtype = jnp.dtype(cfg.dtype)
+    B, Sd = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    x = x + L.sinusoidal_positions(Sd, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(Sd)
+
+    def step(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        a, self_kv = A.attn_full(lp["self_attn"], cfg, h, positions, dtype,
+                                 causal=True, use_rope=False)
+        x = x + a
+        h = L.rms_norm(x, lp["ln_x"], cfg.rms_eps)
+        c, cross_kv = _cross_attn_full(lp["cross_attn"], cfg, h, enc_out,
+                                       dtype)
+        x = x + c
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], h, dtype)
+        ys = (self_kv + cross_kv) if collect_cache else ()
+        return x, ys
+
+    x, caches = jax.lax.scan(step, x, params["dec_layers"],
+                             unroll=_unroll())
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = L.unembed(params["embed"], x, dtype)
+    return logits, (caches if collect_cache else None)
+
+
+def decode_step(params, cfg: ModelConfig, caches, token: jax.Array,
+                pos: jax.Array):
+    """One decoder token vs (self ring + fixed cross) caches."""
+    dtype = jnp.dtype(cfg.dtype)
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, dtype)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        L.sinusoidal_positions(cfg.max_decode_len, cfg.d_model).astype(dtype),
+        pos, 1, axis=0)
+    x = x + pos_emb[None]
+
+    def step(x, inp):
+        lp, cache = inp
+        k_self, v_self, k_cross, v_cross = cache
+        W = k_self.shape[2]
+        length = jnp.minimum(pos + 1, W)
+        h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+        a, k_self, v_self = A.attn_decode(
+            lp["self_attn"], cfg, h, pos, k_self, v_self, length,
+            pos % W, dtype, use_rope=False)
+        x = x + a
+        h = L.rms_norm(x, lp["ln_x"], cfg.rms_eps)
+        x = x + _cross_attn_decode(lp["cross_attn"], cfg, h, k_cross,
+                                   v_cross, dtype)
+        h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], h, dtype)
+        return x, (k_self, v_self, k_cross, v_cross)
+
+    x, new_caches = jax.lax.scan(step, x, (params["dec_layers"], caches),
+                                 unroll=_unroll())
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = L.unembed(params["embed"], x, dtype)
+    return logits, new_caches

@@ -1,0 +1,9 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline import hw
+
+__all__ = ["collective_bytes", "roofline_terms", "model_flops", "hw"]

@@ -1,0 +1,102 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh), all in seconds (EXPERIMENTS.md
+§Roofline):
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (per-chip program)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / ICI_bw
+
+``cost_analysis()`` supplies FLOPs/bytes of the per-device SPMD program.
+Collective bytes are not in cost_analysis: we parse the optimized HLO
+and sum collective operand traffic with per-op multipliers (all-reduce
+moves ~2x its payload per chip in a ring; gather/scatter/a2a/permute
+~1x).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.roofline import hw
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+# an instruction line looks like: "  %name = <shape> opcode(...)"
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|\S+)\s+(?P<op>[\w-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in hw.BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * hw.BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-type collective traffic [bytes] from optimized HLO text."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # opcodes may carry suffixes like all-reduce-start
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):        # async pair: count the start only
+            continue
+        out[base] += _shape_bytes(m.group("shape")) * _COLLECTIVES[base]
+        counts[base] += 1
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    ici_links: int = 4,
+) -> Dict[str, float]:
+    """All three terms in seconds for the per-chip program."""
+    compute = flops / hw.PEAK_FLOPS_BF16
+    memory = hbm_bytes / hw.HBM_BW
+    collective = coll_bytes / (hw.ICI_BW_PER_LINK * ici_links)
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": total,
+    }
+
+
+def model_flops(param_count: float, active_param_count: float,
+                tokens: float, kind: str) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference) with N=active."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_param_count * tokens

@@ -1,0 +1,5 @@
+"""Serving runtime: engines, generation, QEdgeProxy replica routing."""
+from repro.serving.engine import ServingEngine, generate
+from repro.serving.router import QEdgeRouter
+
+__all__ = ["ServingEngine", "generate", "QEdgeRouter"]

@@ -1,0 +1,70 @@
+"""Serving engine: jitted prefill/decode with replica-routed batches.
+
+``ServingEngine`` owns one model replica (params + cache); the
+``QEdgeRouter`` (router.py) distributes microbatches across engines and
+consumes their measured latencies as bandit feedback — see
+examples/serve_routed.py for the full loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+
+class ServingEngine:
+    """Single-replica prefill/decode executor with timing."""
+
+    def __init__(self, model: Model, params, max_len: int,
+                 extra_latency: float = 0.0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.extra_latency = extra_latency    # emulated network distance
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._decode = jax.jit(model.decode)
+        self.queue_depth = 0
+
+    def prefill(self, batch):
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        return logits, cache, time.monotonic() - t0 + self.extra_latency
+
+    def decode(self, cache, token, pos):
+        t0 = time.monotonic()
+        logits, cache = self._decode(
+            self.params, cache, {"token": token, "pos": jnp.int32(pos)})
+        jax.block_until_ready(logits)
+        lat = time.monotonic() - t0 + self.extra_latency
+        return logits, cache, lat
+
+
+def generate(model: Model, params, prompt: jax.Array, steps: int,
+             max_len: Optional[int] = None, greedy: bool = True,
+             key: Optional[jax.Array] = None):
+    """Simple generation loop (prefill + `steps` decode steps)."""
+    B, S = prompt.shape
+    max_len = max_len or (S + steps)
+    logits, cache = model.prefill(params, {"tokens": prompt},
+                                  max_len=max_len)
+    decode = jax.jit(model.decode)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(steps):
+        out.append(tok)
+        logits, cache = decode(params, cache,
+                               {"token": tok, "pos": jnp.int32(S + i)})
+        if greedy or key is None:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1].astype(jnp.float32))[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,99 @@
+"""QEdgeProxy replica router: the paper's technique as the serving
+framework's request scheduler.
+
+Mapping (DESIGN.md §3): *players* = front-end request shards (one per
+ingress/pod), *arms* = data-parallel replica groups on the mesh.
+Rewards stay heterogeneous (front-end <-> replica distance, per-replica
+load) and collisions stay implicit (two front-ends picking the same
+replica lengthen its batch queue) — exactly the paper's MP-MAB.
+
+The router is host-side control plane with jitted state updates; the
+error-count cooldown (Alg 2) doubles as straggler mitigation and the
+instance add/remove handlers (Alg 3/4) as the elastic-scaling hooks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bandit as qb
+
+
+class QEdgeRouter:
+    """Routes request microbatches from K front-ends to M replicas."""
+
+    def __init__(
+        self,
+        num_frontends: int,
+        num_replicas: int,
+        params: Optional[qb.BanditParams] = None,
+        rtt: Optional[np.ndarray] = None,   # (K, M) static distance [s]
+        ring: int = 64,
+        seed: int = 0,
+    ):
+        self.K, self.M = num_frontends, num_replicas
+        self.params = params or qb.BanditParams()
+        self.rtt = jnp.asarray(
+            rtt if rtt is not None else np.zeros((self.K, self.M)),
+            jnp.float32)
+        self.state = qb.init_state(
+            self.K, self.M, self.params, ring=ring,
+            key=jax.random.PRNGKey(seed))
+        self._select = jax.jit(qb.select)
+        self._record = jax.jit(qb.record, static_argnums=1)
+        self._maint = jax.jit(qb.maintenance, static_argnums=1)
+        self._sync = jax.jit(qb.sync_active, static_argnums=1)
+        self.t0 = time.monotonic()
+
+    def _now(self) -> float:
+        return time.monotonic() - self.t0
+
+    # -- request path -------------------------------------------------
+    def route(self) -> np.ndarray:
+        """Pick a replica for each front-end's next microbatch. (K,)"""
+        choice, self.state, _ = self._select(self.state)
+        return np.asarray(choice)
+
+    def feedback(self, choice: Sequence[int], latency: Sequence[float],
+                 mask: Optional[Sequence[bool]] = None):
+        """Report measured per-microbatch latencies (seconds)."""
+        m = (jnp.ones((self.K,), bool) if mask is None
+             else jnp.asarray(mask, bool))
+        self.state = self._record(
+            self.state, self.params, jnp.asarray(choice, jnp.int32),
+            jnp.asarray(latency, jnp.float32), jnp.float32(self._now()), m)
+
+    def maintenance(self):
+        self.state = self._maint(self.state, self.params, self.rtt,
+                                 jnp.float32(self._now()))
+
+    # -- elastic / fault hooks (paper Alg 3/4) ------------------------
+    def replicas_changed(self, active: Sequence[bool]):
+        self.state = self._sync(self.state, self.params,
+                                jnp.asarray(active, bool))
+
+    def replica_failed(self, idx: int):
+        act = np.asarray(self.state.active).copy()
+        act[idx] = False
+        self.replicas_changed(act)
+
+    def replica_joined(self, idx: int):
+        act = np.asarray(self.state.active).copy()
+        act[idx] = True
+        self.replicas_changed(act)
+
+    # -- introspection -------------------------------------------------
+    @property
+    def weights(self) -> np.ndarray:
+        return np.asarray(self.state.weights)
+
+    @property
+    def qos_estimates(self) -> np.ndarray:
+        return np.asarray(self.state.mu_hat)
+
+    def in_cooldown(self) -> np.ndarray:
+        return np.asarray(self.state.cooldown_until > self._now())

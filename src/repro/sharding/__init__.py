@@ -1,0 +1,16 @@
+"""Distribution layer: logical-axis partitioning rules."""
+from repro.sharding.partitioning import (
+    DEFAULT_RULES,
+    constrain,
+    current_mesh,
+    get_rules,
+    logical_to_spec,
+    rule_overrides,
+    set_rules,
+    tree_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "constrain", "current_mesh", "get_rules",
+    "logical_to_spec", "rule_overrides", "set_rules", "tree_shardings",
+]

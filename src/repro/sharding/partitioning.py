@@ -1,0 +1,147 @@
+"""Logical-axis partitioning: one rule table maps model-level axis names
+to mesh axes; models annotate activations/params with logical names only.
+
+Mesh axes (launch/mesh.py):
+  single pod : ("data", "model")            16 x 16 = 256 chips
+  multi-pod  : ("pod", "data", "model")     2 x 16 x 16 = 512 chips
+
+Default rules:
+  batch    -> ("pod", "data")   data parallel across pods and the data axis
+  seq      -> None              (context parallelism opts in via "ctx")
+  ctx      -> ("data",)         long-context KV sequence sharding
+  heads    -> ("model",)        tensor parallel attention
+  kv_heads -> ("model",)
+  ffn      -> ("model",)        tensor parallel MLP
+  experts  -> ("model",)        expert parallel MoE
+  vocab    -> ("model",)        sharded embedding / unembedding
+  embed    -> None | ("data",)  FSDP: weight d_model rows over data axis
+  layers, conv, state, head_dim -> None
+
+Rules are a context-managed global so model code stays mesh-agnostic;
+axes not present in the active mesh are dropped automatically.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "ctx": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "expert_cap": (),
+    "vocab": ("model",),
+    "embed": (),
+    "embed_fsdp": ("data",),
+    "layers": (),
+    "groups": (),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "players": ("data",),       # bandit state scales out over front-ends
+    "arms": (),
+    # decode KV-cache batch axis: defaults to the activation batch
+    # sharding; the hybrid decode layout re-points it at the TP axis so
+    # attention runs against an immovable cache (see launch/dryrun.py)
+    "kv_batch": ("pod", "data"),
+}
+
+_rules: Rules = dict(DEFAULT_RULES)
+
+
+def set_rules(rules: Rules) -> None:
+    global _rules
+    _rules = dict(DEFAULT_RULES)
+    _rules.update(rules)
+
+
+def get_rules() -> Rules:
+    return dict(_rules)
+
+
+@contextlib.contextmanager
+def rule_overrides(**overrides: Tuple[str, ...]):
+    global _rules
+    old = dict(_rules)
+    _rules.update(overrides)
+    try:
+        yield
+    finally:
+        _rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - fallback for older jax
+        m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec for the active mesh.
+
+    Logical axes resolve through the rule table; mesh axes that do not
+    exist in the active mesh are dropped (so the same model code lowers
+    on the 2-axis single-pod and 3-axis multi-pod meshes).
+    """
+    mesh = mesh or current_mesh()
+    names = set(mesh.axis_names) if mesh is not None else set()
+    spec = []
+    used: set = set()        # a mesh axis may appear once per spec;
+    for ax in logical:       # first logical occurrence wins
+        if ax is None:
+            spec.append(None)
+            continue
+        target = _rules.get(ax, ())
+        kept = tuple(a for a in target if a in names and a not in used)
+        used.update(kept)
+        if not kept:
+            spec.append(None)
+        elif len(kept) == 1:
+            spec.append(kept[0])
+        else:
+            spec.append(kept)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op off-mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf: plain tuple of axis names / None (not a
+    NamedTuple, not a tuple of sub-trees)."""
+    return (type(x) is tuple
+            and all(isinstance(t, (str, type(None))) for t in x))
+
+
+def tree_shardings(logical_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        raise ValueError("no active mesh")
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, logical_to_spec(ax, mesh)),
+        logical_tree,
+        is_leaf=is_axes_leaf,
+    )

@@ -1,0 +1,17 @@
+"""Training runtime: optimizer, train step, synthetic data pipeline."""
+from repro.training.data import prefetch_iterator, synthetic_batch
+from repro.training.optimizer import (
+    AdamWState,
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.training.train_step import int8_compress, make_train_step
+
+__all__ = [
+    "adamw", "cosine_schedule", "global_norm", "clip_by_global_norm",
+    "AdamWState", "Optimizer", "make_train_step", "int8_compress",
+    "synthetic_batch", "prefetch_iterator",
+]

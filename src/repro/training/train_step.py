@@ -1,0 +1,77 @@
+"""Training step factory: loss -> grads -> (optional compression) ->
+AdamW, with microbatch gradient accumulation and donated buffers.
+
+Distributed-optimization features:
+  * remat (activation checkpointing) inside the layer scan (models).
+  * microbatch accumulation (`accum_steps`): splits the per-replica
+    batch and lax.scan's the grads — the standard way to fit train_4k
+    global batches while the collective schedule overlaps per-microbatch.
+  * int8 gradient compression (`compress_grads`): quantize/dequantize
+    per-leaf with a per-tensor scale. On a multi-pod mesh the cross-pod
+    ("pod"-axis) all-reduce is the DCN bottleneck; compression emulates
+    the wire format end-to-end so convergence impact is testable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Optimizer
+
+
+def int8_compress(tree):
+    """Per-leaf symmetric int8 quantize -> dequantize (lossy)."""
+    def q(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        return qi.astype(jnp.float32) * scale
+    return jax.tree.map(q, tree)
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    accum_steps: int = 1,
+    compress_grads: bool = False,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=True)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            B = x.shape[0]
+            mb = B // accum_steps
+            return x.reshape(accum_steps, mb, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def step(carry, mb):
+            loss_sum, grad_sum = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            grad_sum = jax.tree.map(jnp.add, grad_sum, g)
+            return (loss_sum + l, grad_sum), ()
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            step, (jnp.zeros((), jnp.float32), zeros), micro)
+        scale = 1.0 / accum_steps
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, grad_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if compress_grads:
+            grads = int8_compress(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss}
+        return params, opt_state, metrics
+
+    return train_step

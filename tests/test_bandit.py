@@ -1,0 +1,137 @@
+"""QEdgeProxy bandit invariants + behaviour (paper Algs 1-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BanditParams, init_state, instance_added,
+                        instance_removed, maintenance, record, select,
+                        sync_active)
+
+P = BanditParams()
+
+
+def _drive(st, params, arm_latency, steps, rtt, maint_every=10, t0=0.0):
+    """Feed deterministic latencies per arm for `steps` requests/LB."""
+    rec = jax.jit(record, static_argnums=1)
+    mnt = jax.jit(maintenance, static_argnums=1)
+    sel = jax.jit(select)
+    K = st.lat_buf.shape[0]
+    for i in range(steps):
+        t = jnp.float32(t0 + i * 0.1)
+        choice, st, _ = sel(st)
+        lat = jnp.asarray(arm_latency)[choice] + rtt[jnp.arange(K), choice]
+        st = rec(st, params, choice, lat, t, jnp.ones((K,), bool))
+        if i % maint_every == maint_every - 1:
+            st = mnt(st, params, rtt, t)
+    return st
+
+
+@pytest.fixture
+def rtt():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.uniform(0.002, 0.02, (3, 4)), jnp.float32)
+
+
+def test_init_invariants(rtt):
+    st = init_state(3, 4, P, ring=16)
+    np.testing.assert_allclose(st.weights.sum(-1), 1.0, atol=1e-6)
+    assert float(st.eps[0]) == pytest.approx(1 - P.rho)
+    assert bool(st.active.all())
+
+
+def test_weights_form_distribution_over_pool(rtt):
+    st = init_state(3, 4, P, ring=32, key=jax.random.PRNGKey(0))
+    st = _drive(st, P, [0.02, 0.03, 0.2, 0.02], 100, rtt)
+    w = np.asarray(st.weights)
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert (w >= -1e-7).all()
+    # weights outside the pool must be zero
+    outside = ~np.asarray(st.in_pool)
+    assert np.abs(w[outside]).max() <= 1e-6
+
+
+def test_converges_to_qos_feasible_arms(rtt):
+    # arm 2 always violates tau; the others never do
+    st = init_state(3, 4, P, ring=32, key=jax.random.PRNGKey(1))
+    st = _drive(st, P, [0.01, 0.01, 0.5, 0.01], 200, rtt)
+    w = np.asarray(st.weights)
+    assert w[:, 2].max() < 0.05
+    mu = np.asarray(st.mu_hat)
+    assert (mu[:, [0, 1, 3]] > 0.9).all()
+    assert (mu[:, 2] < 0.1).all()
+
+
+def test_eps_decays_when_stable(rtt):
+    st = init_state(3, 4, P, ring=32, key=jax.random.PRNGKey(2))
+    st = _drive(st, P, [0.01] * 4, 300, rtt)
+    assert (np.asarray(st.eps) < 1 - P.rho).all()
+
+
+def test_cooldown_trips_after_consecutive_errors(rtt):
+    params = BanditParams(err_thresh=3, cooldown=5.0)
+    st = init_state(1, 2, params, ring=16)
+    rtt1 = jnp.zeros((1, 2), jnp.float32)
+    rec = jax.jit(record, static_argnums=1)
+    # force arm 0 selection by weights
+    st = st._replace(weights=jnp.asarray([[1.0, 0.0]]))
+    for i in range(3):
+        st = rec(st, params, jnp.asarray([0]), jnp.asarray([1.0]),
+                 jnp.float32(i * 0.1), jnp.ones((1,), bool))
+    assert float(st.cooldown_until[0, 0]) > 0.2       # tripped
+    assert not bool(st.in_pool[0, 0])
+    # weights renormalized to the surviving arm
+    np.testing.assert_allclose(np.asarray(st.weights)[0], [0.0, 1.0],
+                               atol=1e-6)
+
+
+def test_instance_removed_renormalizes(rtt):
+    st = init_state(3, 4, P, ring=16)
+    st2 = instance_removed(st, jnp.int32(1))
+    w = np.asarray(st2.weights)
+    assert np.abs(w[:, 1]).max() == 0.0
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert not bool(st2.active[1])
+
+
+def test_instance_added_starts_at_zero_weight(rtt):
+    st = init_state(3, 4, P, ring=16,
+                    active=jnp.asarray([True, True, True, False]))
+    st = _drive(st, P, [0.01, 0.01, 0.01, 0.01], 50, rtt)
+    st2 = instance_added(st, P, jnp.int32(3), rtt, jnp.float32(5.0))
+    assert bool(st2.active[3])
+    assert np.abs(np.asarray(st2.weights)[:, 3]).max() == 0.0
+    # optimistic mu puts it at the top of the exploration pool next maint
+    st3 = maintenance(st2, P, rtt, jnp.float32(5.0))
+    assert (np.asarray(st3.weights)[:, 3] > 0).all()
+
+
+def test_sync_active_matches_individual_events(rtt):
+    st = init_state(3, 4, P, ring=16, key=jax.random.PRNGKey(3))
+    st = _drive(st, P, [0.01] * 4, 60, rtt)
+    target = jnp.asarray([True, False, True, True])
+    a = sync_active(st, P, target)
+    b = instance_removed(st, jnp.int32(1))
+    np.testing.assert_allclose(np.asarray(a.weights),
+                               np.asarray(b.weights), atol=1e-6)
+
+
+def test_eps_resets_on_qos_degradation(rtt):
+    st = init_state(3, 4, P, ring=64, reward_ring=1024,
+                    key=jax.random.PRNGKey(4))
+    st = _drive(st, P, [0.01] * 4, 300, rtt)          # healthy: eps decays
+    eps_before = np.asarray(st.eps).copy()
+    assert (eps_before < 0.09).all()
+    # now everything degrades: rolling QoS drops, eps resets to 1-rho
+    st = _drive(st, P, [0.5] * 4, 300, rtt, t0=30.0)
+    assert (np.asarray(st.eps) >= eps_before - 1e-6).all()
+    assert (np.asarray(st.eps) > 0.05).any()
+
+
+def test_lb_mask_freezes_other_players(rtt):
+    st = init_state(3, 4, P, ring=32, key=jax.random.PRNGKey(5))
+    st = _drive(st, P, [0.01, 0.02, 0.2, 0.01], 100, rtt)
+    mask = jnp.asarray([True, False, False])
+    st2 = maintenance(st, P, rtt, jnp.float32(20.0), lb_mask=mask)
+    np.testing.assert_allclose(np.asarray(st2.weights)[1:],
+                               np.asarray(st.weights)[1:], atol=0)

@@ -1,0 +1,62 @@
+"""proxy-mity + Dec-SARSA baselines (paper §VII-A5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DecSarsaParams, decsarsa_init, decsarsa_select,
+                        decsarsa_update, proxy_mity_weights)
+
+
+def test_proxy_mity_alpha_one_routes_nearest():
+    rtt = jnp.asarray([[0.01, 0.002, 0.05], [0.03, 0.04, 0.001]])
+    w = proxy_mity_weights(rtt, alpha=1.0)
+    np.testing.assert_allclose(np.asarray(w),
+                               [[0, 1, 0], [0, 0, 1]], atol=1e-6)
+
+
+def test_proxy_mity_alpha09_spreads_ten_percent():
+    rtt = jnp.asarray([[0.01, 0.002, 0.05]])
+    w = np.asarray(proxy_mity_weights(rtt, alpha=0.9))
+    assert w[0, 1] == pytest.approx(0.9 + 0.1 / 3, abs=1e-5)
+    assert w[0, 0] == pytest.approx(0.1 / 3, abs=1e-5)
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_proxy_mity_respects_active():
+    rtt = jnp.asarray([[0.001, 0.01, 0.02]])
+    act = jnp.asarray([False, True, True])
+    w = np.asarray(proxy_mity_weights(rtt, 1.0, act))
+    assert w[0, 0] == 0.0 and w[0, 1] == pytest.approx(1.0)
+
+
+def test_decsarsa_learns_to_avoid_failures():
+    K, M = 2, 3
+    rtt = jnp.asarray([[0.01, 0.01, 0.01]] * K)
+    p = DecSarsaParams(tau=0.08, eps=0.2)
+    st = decsarsa_init(K, M, rtt, p)
+    key = jax.random.PRNGKey(0)
+    # arm 2 always violates the deadline, others always meet it
+    for i in range(400):
+        key, sub = jax.random.split(key)
+        a, s = decsarsa_select(st, p, jnp.ones((M,), bool), sub)
+        lat = jnp.where(a == 2, 0.5, 0.01)
+        r = (lat <= p.tau).astype(jnp.float32)
+        st = decsarsa_update(st, p, s, a, r, lat, jnp.ones((K,), bool))
+    q = np.asarray(st.q)
+    # greedy action should not be arm 2 in any state bucket visited
+    greedy = q.argmax(-1)
+    assert (greedy != 2).all()
+
+
+def test_decsarsa_average_reward_tracks():
+    K, M = 1, 2
+    rtt = jnp.zeros((K, M))
+    p = DecSarsaParams()
+    st = decsarsa_init(K, M, rtt, p)
+    for i in range(300):
+        st = decsarsa_update(st, p, jnp.zeros((K,), jnp.int32),
+                             jnp.zeros((K,), jnp.int32),
+                             jnp.ones((K,)), jnp.full((K,), 0.01),
+                             jnp.ones((K,), bool))
+    assert float(st.rbar[0]) > 0.9

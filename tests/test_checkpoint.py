@@ -1,0 +1,66 @@
+"""Checkpointer: round trip, atomicity, GC, async, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+@pytest.fixture
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,))},
+        "step": jnp.int32(7),
+        "nested": [jnp.zeros((2, 2)), jnp.full((3,), 5.0)],
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(10, tree)
+    restored, step = ck.restore(tree)
+    assert step == 10
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 tree, restored)
+
+
+def test_latest_and_gc(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_save(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, tree, blocking=False)
+    ck.wait()
+    restored, step = ck.restore(tree)
+    assert step == 5
+
+
+def test_no_tmp_dirs_left(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_restore_specific_step(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(1, tree)
+    tree2 = jax.tree.map(lambda x: x + 1, tree)
+    ck.save(2, tree2)
+    restored, step = ck.restore(tree, step=1)
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  tree["params"]["w"])
+
+
+def test_restore_missing_raises(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(tree)

@@ -1,0 +1,84 @@
+"""Config registry: exact published numbers + applicability matrix."""
+import pytest
+
+from repro.configs import (ARCH_NAMES, SHAPES, all_cells, get_config,
+                           get_shape, shape_applicable)
+
+PUBLISHED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+}
+
+PARAM_BANDS = {     # billions, generous bands around published sizes
+    "mistral-nemo-12b": (11.5, 13.0),
+    "gemma3-1b": (0.9, 1.1),
+    "qwen2.5-14b": (13.5, 15.5),
+    "qwen3-4b": (3.8, 4.6),
+    "hymba-1.5b": (1.3, 1.6),
+    "qwen3-moe-235b-a22b": (225, 245),
+    "qwen3-moe-30b-a3b": (29, 32),
+    "internvl2-1b": (0.4, 0.6),
+    "whisper-tiny": (0.03, 0.08),
+    "mamba2-1.3b": (1.2, 1.5),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_published_dims(arch):
+    c = get_config(arch)
+    L, d, h, kv, ff, v = PUBLISHED[arch]
+    assert c.num_layers == L and c.d_model == d
+    assert c.num_heads == h and c.num_kv_heads == kv
+    assert c.d_ff == ff and c.vocab_size == v
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_counts_in_band(arch):
+    c = get_config(arch)
+    lo, hi = PARAM_BANDS[arch]
+    n = c.param_count() / 1e9
+    assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    c = get_config("qwen3-moe-235b-a22b")
+    assert c.num_experts == 128 and c.experts_per_token == 8
+    assert 20 <= c.active_param_count() / 1e9 <= 24      # A22B
+
+
+def test_applicability_matrix():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    assert len(runnable) == 33
+    skipped = {(a, s) for a, s, ok, _ in cells if not ok}
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("mamba2-1.3b", "long_500k") not in skipped
+    assert ("hymba-1.5b", "long_500k") not in skipped
+    assert ("gemma3-1b", "long_500k") not in skipped
+
+
+def test_reduced_preserves_family_structure():
+    for arch in ARCH_NAMES:
+        c = get_config(arch)
+        r = get_config(arch, reduced=True)
+        assert r.family == c.family
+        assert r.is_moe == c.is_moe
+        assert (r.local_global_pattern is None) == \
+            (c.local_global_pattern is None)
+        assert r.num_layers <= 2 or c.local_global_pattern
+
+
+def test_shapes_exact():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].kind == "decode"

@@ -1,0 +1,81 @@
+"""KDE estimator unit + property tests (paper §V-A)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import kde
+
+
+def test_normal_cdf_matches_numpy():
+    x = jnp.linspace(-5, 5, 101)
+    from math import erf, sqrt
+    want = np.array([0.5 * (1 + erf(v / sqrt(2))) for v in np.asarray(x)])
+    np.testing.assert_allclose(kde.normal_cdf(x), want, atol=1e-6)
+
+
+def test_kde_success_prob_basic():
+    # all samples well below tau => prob ~ 1; well above => ~ 0
+    lat = jnp.full((1, 16), 0.010)
+    mask = jnp.ones((1, 16), bool)
+    lo = kde.kde_success_prob(lat, mask, tau=0.080)
+    hi = kde.kde_success_prob(lat * 20, mask, tau=0.080)
+    assert float(lo[0]) > 0.99
+    assert float(hi[0]) < 0.01
+
+
+def test_kde_mask_respected():
+    lat = jnp.asarray([[0.01] * 8 + [10.0] * 8])
+    mask = jnp.asarray([[True] * 8 + [False] * 8])
+    p = kde.kde_success_prob(lat, mask, tau=0.08)
+    assert float(p[0]) > 0.99
+
+
+def test_kde_empty_window_returns_zero():
+    lat = jnp.zeros((3, 8))
+    mask = jnp.zeros((3, 8), bool)
+    p = kde.kde_success_prob(lat, mask, tau=0.08)
+    np.testing.assert_array_equal(p, 0.0)
+
+
+def test_empirical_matches_fraction():
+    lat = jnp.asarray([[0.01, 0.02, 0.9, 0.95]])
+    mask = jnp.ones((1, 4), bool)
+    p = kde.empirical_success_prob(lat, mask, 0.08)
+    assert float(p[0]) == pytest.approx(0.5)
+
+
+def test_silverman_positive_and_scales():
+    rng = np.random.default_rng(0)
+    lat = jnp.asarray(rng.normal(0.05, 0.01, (4, 64)), jnp.float32)
+    mask = jnp.ones((4, 64), bool)
+    h = kde.silverman_bandwidth(lat, mask)
+    assert (np.asarray(h) > 0).all()
+    h2 = kde.silverman_bandwidth(lat * 10, mask)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h) * 10, rtol=1e-3)
+
+
+def test_masked_quantile():
+    x = jnp.asarray([[1.0, 5.0, 3.0, 2.0, 4.0, 99.0]])
+    mask = jnp.asarray([[True, True, True, True, True, False]])
+    assert float(kde.masked_quantile(x, mask, 0.0)[0]) == 1.0
+    assert float(kde.masked_quantile(x, mask, 1.0)[0]) == 5.0
+    assert float(kde.masked_quantile(x, mask, 0.5)[0]) == 3.0
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    st.integers(2, 40),
+    st.floats(0.01, 0.2),
+    st.integers(0, 2**31 - 1),
+)
+def test_kde_prob_in_unit_interval_and_monotone_in_tau(n, tau, seed):
+    rng = np.random.default_rng(seed)
+    lat = jnp.asarray(rng.exponential(0.05, (1, n)), jnp.float32)
+    mask = jnp.asarray(rng.random((1, n)) < 0.8)
+    p1 = float(kde.kde_success_prob(lat, mask, tau)[0])
+    p2 = float(kde.kde_success_prob(lat, mask, tau * 2)[0])
+    assert 0.0 <= p1 <= 1.0
+    assert p2 >= p1 - 1e-6          # CDF estimate is monotone in tau

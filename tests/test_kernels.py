@@ -1,0 +1,170 @@
+"""Pallas kernel sweeps: interpret-mode kernel body vs pure-jnp oracle.
+
+Per instructions: sweep shapes/dtypes per kernel, assert_allclose
+against ref.py; hypothesis drives the KDE kernel's input space.
+"""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kde import kde_success_prob
+from repro.kernels.ssd import ssd
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 4, 2, 256, 64),
+    (1, 8, 2, 192, 32),     # ragged: S not a block multiple
+    (2, 4, 1, 256, 64),     # MQA
+    (1, 2, 2, 128, 128),    # MHA, wide head
+    (1, 4, 4, 64, 256),     # gemma3-style head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 96, 1024])
+def test_flash_attention_sliding_window(window):
+    B, Hq, Hkv, S, D = 1, 4, 2, 256, 32
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_noncausal():
+    B, Hq, Hkv, S, D = 1, 2, 2, 128, 32
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 8, 2, 300, 64),
+    (1, 4, 4, 128, 32),
+    (3, 4, 1, 512, 128),
+    (1, 25, 5, 96, 64),     # hymba head counts
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, Hq, Hkv, S, D, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
+    ln = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+    got = decode_attention(q, k, v, ln, block_k=128, interpret=True)
+    want = ref.decode_attention(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_length_masks_tail():
+    B, Hq, Hkv, S, D = 1, 2, 1, 64, 16
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
+    ln = jnp.asarray([10], jnp.int32)
+    got = decode_attention(q, k, v, ln, block_k=32, interpret=True)
+    # poison the tail: result must not change
+    k2 = k.at[:, :, 10:].set(99.0)
+    v2 = v.at[:, :, 10:].set(-99.0)
+    got2 = decode_attention(q, k2, v2, ln, block_k=32, interpret=True)
+    np.testing.assert_allclose(got, got2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,c", [
+    (2, 96, 2, 16, 8, 32),
+    (1, 64, 4, 32, 16, 64),
+    (2, 130, 2, 16, 8, 32),     # S not a chunk multiple
+    (1, 256, 2, 64, 128, 128),  # mamba2-1.3b-like dims
+])
+def test_ssd_sweep(B, S, H, P, N, c):
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
+    got = ssd(x, dt, A, Bm, Cm, chunk=c, interpret=True)
+    want = ref.ssd(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_decode_step_consistent_with_scan():
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.1, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
+    want = ref.ssd(x, dt, A, Bm, Cm)
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    for t in range(S):
+        h, y = ref.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+                                   Cm[:, t])
+        np.testing.assert_allclose(y, want[:, t], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# KDE kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,R", [(8, 16), (300, 64), (1024, 128)])
+def test_kde_kernel_sweep(rows, R):
+    lat = jnp.asarray(RNG.exponential(0.03, (rows, R)), jnp.float32)
+    mask = jnp.asarray(RNG.random((rows, R)) < 0.7)
+    bw = jnp.asarray(RNG.uniform(1e-3, 1e-2, rows), jnp.float32)
+    got = kde_success_prob(lat, mask, 0.08, bw, interpret=True)
+    want = ref.kde_success_prob(lat, mask, 0.08, bw)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 64), st.integers(4, 64),
+       st.floats(0.01, 0.5), st.integers(0, 2**31 - 1))
+def test_kde_kernel_property(rows, R, tau, seed):
+    rng = np.random.default_rng(seed)
+    lat = jnp.asarray(rng.exponential(0.05, (rows, R)), jnp.float32)
+    mask = jnp.asarray(rng.random((rows, R)) < 0.5)
+    bw = jnp.asarray(rng.uniform(1e-4, 1e-1, rows), jnp.float32)
+    got = kde_success_prob(lat, mask, tau, bw, interpret=True)
+    want = ref.kde_success_prob(lat, mask, tau, bw)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    assert ((np.asarray(got) >= 0) & (np.asarray(got) <= 1)).all()

@@ -1,0 +1,186 @@
+"""Per-arch smoke tests (reduced configs, one forward/train step on CPU,
+shape + finiteness assertions) and prefill+decode == full-forward
+equivalence in f32 — the serving-correctness contract.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_shape
+from repro.models import build_model
+
+
+def _batch_for(cfg, model, S=32, B=2, train=True, key=None):
+    key = key or jax.random.PRNGKey(1)
+    if cfg.family == "audio":
+        Sd = min(cfg.max_decode_len, S)
+        b = {"frames": jax.random.normal(key, (B, S // 2, cfg.d_model),
+                                         jnp.float32),
+             "tokens": jax.random.randint(key, (B, Sd), 0, cfg.vocab_size)}
+        if train:
+            b["targets"] = jax.random.randint(key, (B, Sd), 0,
+                                              cfg.vocab_size)
+    elif cfg.family == "vlm":
+        St = S - cfg.num_patches
+        b = {"patches": jax.random.normal(key, (B, cfg.num_patches,
+                                                cfg.d_model), jnp.float32),
+             "tokens": jax.random.randint(key, (B, St), 0, cfg.vocab_size)}
+        if train:
+            b["targets"] = jax.random.randint(key, (B, St), 0,
+                                              cfg.vocab_size)
+    else:
+        b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+        if train:
+            b["targets"] = jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + loss + grad step, outputs finite."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, model, S=32, B=2)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.abs(g.astype(jnp.float32)).sum())
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_axes_mirror_params(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    axes = model.param_axes()
+    from repro.sharding.partitioning import is_axes_leaf
+    s1 = jax.tree.structure(params)
+    s2 = jax.tree.structure(axes, is_leaf=is_axes_leaf)
+    assert s1 == s2
+    # every leaf's axis tuple must match its rank
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=is_axes_leaf)
+    for p, a in zip(flat_p, flat_a):
+        assert len(a) == len(p.shape), (a, p.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_matches_full_forward(arch):
+    S, B = 24, 2
+    over = dict(dtype="float32")
+    cfg0 = get_config(arch, reduced=True)
+    if cfg0.is_moe:
+        over["moe_capacity_factor"] = 8.0     # dropless => exact
+    cfg = dataclasses.replace(cfg0, **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+
+    if cfg.family == "audio":
+        Sd = min(cfg.max_decode_len, S)
+        frames = jax.random.normal(key, (B, S // 2, cfg.d_model), jnp.float32)
+        toks = jax.random.randint(key, (B, Sd), 0, cfg.vocab_size)
+        full, _ = model.forward(params, {"frames": frames, "tokens": toks})
+        _, cache = model.prefill(params,
+                                 {"frames": frames, "tokens": toks[:, :-1]})
+        lg, _ = model.decode(params, cache,
+                             {"token": toks[:, -1:], "pos": jnp.int32(Sd - 1)})
+    elif cfg.family == "vlm":
+        P = cfg.num_patches
+        patches = jax.random.normal(key, (B, P, cfg.d_model), jnp.float32)
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        full, _ = model.forward(params, {"patches": patches, "tokens": toks})
+        _, cache = model.prefill(
+            params, {"patches": patches, "tokens": toks[:, :-1]},
+            max_len=P + S)
+        lg, _ = model.decode(params, cache, {"token": toks[:, -1:],
+                                             "pos": jnp.int32(P + S - 1)})
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        full, _ = model.forward(params, {"tokens": toks})
+        _, cache = model.prefill(params, {"tokens": toks[:, :-1]}, max_len=S)
+        lg, _ = model.decode(params, cache, {"token": toks[:, -1:],
+                                             "pos": jnp.int32(S - 1)})
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_config("gemma3-1b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 26
+    assert kinds.count("global") == 4
+    assert kinds[:6] == ("local",) * 5 + ("global",)
+
+
+def test_sliding_window_limits_attention():
+    """Tokens beyond the window must not influence the output."""
+    cfg = dataclasses.replace(get_config("gemma3-1b", reduced=True),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S = 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0,
+                              cfg.vocab_size)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 7) % cfg.vocab_size)
+    l1, _ = model.forward(params, {"tokens": toks})
+    l2, _ = model.forward(params, {"tokens": toks2})
+    # global layers exist, so late tokens DO differ...
+    assert float(jnp.abs(l1[:, -1] - l2[:, -1]).max()) > 0
+    # ...but a pure-local stack would not: check window masking directly
+    from repro.kernels import ref
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 2, S, 8))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, S, 8))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, S, 8))
+    o1 = ref.attention(q, k, v, causal=True, window=8)
+    k2 = k.at[:, :, 0].set(99.0)
+    v2 = v.at[:, :, 0].set(-99.0)
+    o2 = ref.attention(q, k2, v2, causal=True, window=8)
+    np.testing.assert_allclose(o1[:, :, 9:], o2[:, :, 9:], atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens_when_overloaded():
+    import repro.models.moe as M
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              dtype="float32", moe_capacity_factor=0.1)
+    p = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out_low, _ = M.moe(p, cfg, x, jnp.float32, capacity_factor=0.1)
+    out_high, _ = M.moe(p, cfg, x, jnp.float32, capacity_factor=8.0)
+    # low capacity must actually drop something
+    assert float(jnp.abs(out_low - out_high).max()) > 0
+
+
+def test_moe_dispatch_matches_dense_onehot():
+    """Sort-based ragged dispatch == dense one-hot einsum (dropless)."""
+    import repro.models.moe as M
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              dtype="float32")
+    p = M.init_moe(jax.random.PRNGKey(0), cfg)
+    B, S, d = 2, 8, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    got, _ = M.moe(p, cfg, x, jnp.float32, capacity_factor=16.0)
+
+    # dense reference
+    E, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    h = jnp.einsum("td,edf->tef", xt, p["wi"])
+    g = jnp.einsum("td,edf->tef", xt, p["wg"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, p["wo"])
+    gate = jnp.zeros((xt.shape[0], E)).at[
+        jnp.arange(xt.shape[0])[:, None], topi].set(topv)
+    want = jnp.einsum("te,ted->td", gate, y).reshape(B, S, d)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

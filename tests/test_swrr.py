@@ -1,0 +1,58 @@
+"""SWRR properties: proportional shares + burst smoothness (§V-B)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.swrr import swrr_select
+
+
+def _run(weights, steps):
+    K, M = weights.shape
+    cw = jnp.zeros_like(weights)
+    counts = np.zeros((K, M))
+    fn = jax.jit(swrr_select)
+    for _ in range(steps):
+        c, cw, valid = fn(weights, cw)
+        for k in range(K):
+            counts[k, int(c[k])] += 1
+    return counts
+
+
+def test_proportional_shares():
+    w = jnp.asarray([[0.5, 0.3, 0.2]])
+    counts = _run(w, 1000)
+    np.testing.assert_allclose(counts[0] / 1000, [0.5, 0.3, 0.2], atol=0.01)
+
+
+def test_smoothness_no_bursts():
+    # weight 2/5: classic SWRR never schedules the same arm 3x in a row
+    w = jnp.asarray([[0.4, 0.3, 0.3]])
+    cw = jnp.zeros_like(w)
+    last, run_len, max_run = -1, 0, 0
+    for _ in range(500):
+        c, cw, _ = swrr_select(w, cw)
+        c = int(c[0])
+        run_len = run_len + 1 if c == last else 1
+        last = c
+        max_run = max(max_run, run_len)
+    assert max_run <= 2
+
+
+def test_zero_weights_flagged_invalid():
+    w = jnp.zeros((2, 3))
+    c, cw, valid = swrr_select(w, jnp.zeros_like(w))
+    assert not bool(valid[0]) and not bool(valid[1])
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6),
+       st.integers(200, 400))
+def test_share_error_bounded(ws, steps):
+    w = np.asarray(ws)
+    w = w / w.sum()
+    counts = _run(jnp.asarray(w[None]), steps)
+    # SWRR share error is O(1) per arm, not O(steps)
+    err = np.abs(counts[0] - w * steps)
+    assert (err <= len(ws) + 1).all()

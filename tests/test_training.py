@@ -1,0 +1,84 @@
+"""Training substrate: optimizer math, accumulation equivalence,
+gradient compression, end-to-end convergence on learnable data."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.training import (adamw, clip_by_global_norm, cosine_schedule,
+                            global_norm, int8_compress, make_train_step,
+                            synthetic_batch)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    assert float(global_norm(tree)) == pytest.approx(10.0)
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_reduces_quadratic():
+    opt = adamw(1e-1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_int8_compress_small_relative_error():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 0.01, (256, 64)), jnp.float32)}
+    gq = int8_compress(g)
+    rel = float(jnp.abs(gq["w"] - g["w"]).max() /
+                jnp.abs(g["w"]).max())
+    assert rel < 1.0 / 127 + 1e-3
+
+
+def _loss_after(steps, accum, compress=False, seed=0):
+    cfg = dataclasses.replace(get_config("qwen3-4b", reduced=True),
+                              dtype="float32")
+    model = build_model(cfg)
+    shape = ShapeConfig("t", "train", 64, 8)
+    opt = adamw(cosine_schedule(3e-3, 5, steps), clip_norm=1.0)
+    step_fn = jax.jit(make_train_step(model, opt, accum_steps=accum,
+                                      compress_grads=compress))
+    params = model.init(jax.random.PRNGKey(seed))
+    state = opt.init(params)
+    losses = []
+    for s in range(steps):
+        batch = synthetic_batch(cfg, shape, s)
+        params, state, m = step_fn(params, state, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_training_converges_on_learnable_stream():
+    losses = _loss_after(60, accum=1)
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_accumulation_matches_single_batch():
+    l1 = _loss_after(10, accum=1)
+    l2 = _loss_after(10, accum=2)
+    # same data, same model: losses track closely (not exactly: grad of
+    # mean-of-losses == mean-of-grads here, so they should be very close)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+
+
+def test_compressed_grads_still_converge():
+    losses = _loss_after(60, accum=1, compress=True)
+    assert losses[-1] < losses[0] - 0.5
