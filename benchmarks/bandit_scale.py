@@ -1,0 +1,98 @@
+"""Throughput benchmark: bandit-step rate vs fleet size (the repo's
+first perf trajectory).
+
+The paper's §V-F complexity claim (O(|Q_k|) per decision step) only
+matters if the loop actually scales past the testbed's 30 LBs x 10
+instances, so this sweeps K (players) x M (arms) far beyond it and
+emits steps/sec + µs/step JSON artifacts per cell:
+
+  * ``fused``      — the current simulator hot path: per-round (K, M)
+                     feedback control interleaved with selection, ring
+                     writes deferred to one ``record_rings_batch``
+                     scatter at step end, maintenance gathered to the
+                     ~K/H_d players whose staggered clock fired.
+                     Compile time reported separately (AOT lowering).
+  * ``sequential`` — the pre-refactor step structure (C sequential
+                     record rounds + full-width (K, M, R) sort+KDE
+                     maintenance every step), same trajectories, kept
+                     as the reference point for the speedup column.
+
+The sequential reference is skipped for the largest cells (it is the
+thing being deprecated; its full-width maintenance makes it minutes of
+wall clock at K=1000) unless it fits the time budget.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import compile_all, emit, timed
+from repro.continuum import SimConfig, build_sim_fn
+
+GRID_K = (30, 100, 300, 1000)
+GRID_M = (10, 50)
+SMOKE_GRID_K = (30, 100)
+SMOKE_GRID_M = (10,)
+# Cells that also run the deprecated sequential reference: small, mid
+# and large K*M anchor the speedup trend without paying the reference's
+# full-width maintenance (minutes of wall clock) on every cell.
+SEQ_REF_CELLS = ((30, 10), (100, 50), (300, 50))
+
+
+def _rand_rtt(K, M, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.002, 0.04, (K, M)), jnp.float32)
+
+
+def _lower_cell(K, M, horizon, fused):
+    cfg = SimConfig(horizon=horizon)
+    T = cfg.num_steps
+    rtt = _rand_rtt(K, M)
+    n_clients = jnp.full((T, K), 4, jnp.int32)
+    active = jnp.ones((T, M), bool)
+    key = jax.random.PRNGKey(7)
+    run = jax.jit(build_sim_fn("qedgeproxy", cfg, K, M, fused=fused))
+    lowered = run.lower(rtt, n_clients, active, key)
+    return lowered, (rtt, n_clients, active, key), T
+
+
+def bandit_scale():
+    grid_k = SMOKE_GRID_K if common.SMOKE else GRID_K
+    grid_m = SMOKE_GRID_M if common.SMOKE else GRID_M
+    horizon = 2.0 if common.SMOKE else 10.0     # steady steps/s by ~100 steps
+
+    cells = []          # (name, variant, lowered, args, T)
+    for M in grid_m:
+        for K in grid_k:
+            cells.append((f"K{K}_M{M}", "fused",
+                          *_lower_cell(K, M, horizon, fused=True)))
+            if (K, M) in SEQ_REF_CELLS or common.SMOKE:
+                cells.append((f"K{K}_M{M}", "sequential",
+                              *_lower_cell(K, M, horizon, fused=False)))
+    t0 = time.perf_counter()
+    compiled = compile_all([c[2] for c in cells])
+    compile_wall = time.perf_counter() - t0
+
+    payload = {"compile_wall_s": compile_wall}
+    for (name, variant, _, args, T), exe in zip(cells, compiled):
+        _, us = timed(exe, *args)
+        run_s = us / 1e6
+        payload.setdefault(name, {})[variant] = {
+            "steps": T, "run_s": run_s,
+            "steps_per_s": T / run_s, "us_per_step": us / T}
+    for name, cell in payload.items():
+        if isinstance(cell, dict) and "sequential" in cell:
+            cell["step_speedup"] = (cell["sequential"]["us_per_step"]
+                                    / cell["fused"]["us_per_step"])
+    biggest = f"K{grid_k[-1]}_M{grid_m[-1]}"
+    derived = " ".join(
+        f"{k}={v['fused']['steps_per_s']:.0f}steps/s"
+        + (f"(x{v['step_speedup']:.1f})" if "step_speedup" in v else "")
+        for k, v in payload.items() if isinstance(v, dict))
+    emit("bandit_scale", payload[biggest]["fused"]["us_per_step"], derived,
+         payload)
+    return payload

@@ -1,6 +1,13 @@
 """Shared benchmark harness: run the paper's evaluation suite once
 (5 scenarios x 4 strategies, §VII-A6) and hand trajectories to the
-per-figure benches."""
+per-figure benches.
+
+The scenario axis is vmapped: each strategy's 5 seeds compile and run
+as ONE program (`run_sim_batch`) instead of 5, and compile time is
+measured separately from run time via AOT lowering (the old harness
+conflated them — and stopped the clock before the async dispatch had
+even executed).
+"""
 from __future__ import annotations
 
 import json
@@ -8,9 +15,9 @@ import os
 import time
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
-from repro.continuum import SimConfig, make_topology, run_sim
+from repro.continuum import SimConfig, build_sim_fn, make_topology
 
 SCENARIOS = (1, 2, 3, 4, 5)
 STRATEGIES = (
@@ -19,31 +26,113 @@ STRATEGIES = (
     ("proxy_mity_0.9", dict(alpha=0.9)),
     ("dec_sarsa", {}),
 )
+N_LBS, N_INSTANCES = 30, 10
 CFG = SimConfig(horizon=180.0)
 WARM = int(60 / CFG.dt)
+SMOKE = False
 RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/benchmarks")
 
 _cache = {}
+SUITE_TIMINGS = {}
+_REGISTERED_CACHES = [_cache, SUITE_TIMINGS]
+
+
+def register_cache(d: dict) -> dict:
+    """Register a module-level result cache keyed on the suite config;
+    ``configure()`` clears every registered cache so stale trajectories
+    can't be sliced with the new horizon (e.g. figures._event_cache)."""
+    _REGISTERED_CACHES.append(d)
+    return d
+
+
+def configure(smoke: bool = False) -> None:
+    """Switch the whole suite to a tiny grid (--smoke: a seconds-level
+    correctness gate). Must run before the first get_suite() call."""
+    global SMOKE, CFG, WARM, SCENARIOS
+    SMOKE = smoke
+    if smoke:
+        CFG = SimConfig(horizon=24.0)
+        WARM = int(8 / CFG.dt)
+        SCENARIOS = (1, 2)
+    else:
+        CFG = SimConfig(horizon=180.0)
+        WARM = int(60 / CFG.dt)
+        SCENARIOS = (1, 2, 3, 4, 5)
+    for d in _REGISTERED_CACHES:
+        d.clear()
 
 
 def strategy_name(label: str) -> str:
     return "proxy_mity" if label.startswith("proxy_mity") else label
 
 
+def compile_all(lowered):
+    """Compile a list of AOT-lowered programs, in input order.
+
+    Central choke point for the grid's compile phase: every harness
+    lowers its programs first (cheap tracing) and compiles here, so
+    compile wall-clock is measured apart from run time. Thread-pooled
+    compilation was measured SLOWER than serial on XLA:CPU (the
+    compile path holds the GIL and LLVM already uses internal
+    parallelism), so this stays serial on purpose.
+    """
+    return [l.compile() for l in lowered]
+
+
 def get_suite():
-    """{(scenario, label): SimOutputs} for the full evaluation grid."""
+    """{(scenario, label): SimOutputs} for the full evaluation grid.
+
+    One vmapped program per strategy covers all scenarios; per-strategy
+    compile/run seconds land in SUITE_TIMINGS (emitted by the
+    ``suite_build`` benchmark row).
+    """
     if _cache:
         return _cache
+    topos = {s: make_topology(jax.random.PRNGKey(s), N_LBS, N_INSTANCES)
+             for s in SCENARIOS}
+    rtts = jnp.stack([topos[s].lb_instance_rtt() for s in SCENARIOS])
+    keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in SCENARIOS])
+    T = CFG.num_steps
+    n_clients = jnp.full((T, N_LBS), 4, jnp.int32)
+    active = jnp.ones((T, N_INSTANCES), bool)
+
+    t0 = time.perf_counter()
+    lowered = []
+    for label, kw in STRATEGIES:
+        run = build_sim_fn(strategy_name(label), CFG, N_LBS, N_INSTANCES,
+                           **kw)
+        batched = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))
+        lowered.append(batched.lower(rtts, n_clients, active, keys))
+    compiled = compile_all(lowered)
+    t_compile = time.perf_counter() - t0
+
+    SUITE_TIMINGS["compile_wall_s"] = t_compile      # all 4 programs
+    for (label, kw), exe in zip(STRATEGIES, compiled):
+        t0 = time.perf_counter()
+        outs = exe(rtts, n_clients, active, keys)
+        jax.block_until_ready(outs)
+        t_run = time.perf_counter() - t0
+        SUITE_TIMINGS[label] = {"run_s": t_run,
+                                "scenarios": len(SCENARIOS),
+                                "steps_per_s": len(SCENARIOS) * T / t_run}
+        for i, seed in enumerate(SCENARIOS):
+            _cache[(seed, label)] = jax.tree.map(lambda x: x[i], outs)
     for seed in SCENARIOS:
-        topo = make_topology(jax.random.PRNGKey(seed), 30, 10)
-        rtt = topo.lb_instance_rtt()
-        for label, kw in STRATEGIES:
-            outs = run_sim(strategy_name(label), rtt, CFG,
-                           jax.random.PRNGKey(100 + seed), **kw)
-            jax.block_until_ready(outs.rewards)
-            _cache[(seed, label)] = outs
-        _cache[("topo", seed)] = topo
+        _cache[("topo", seed)] = topos[seed]
     return _cache
+
+
+def suite_build():
+    """Benchmark row for the suite itself: compile vs run seconds per
+    strategy (the old harness timed neither faithfully)."""
+    get_suite()
+    per_label = {k: v for k, v in SUITE_TIMINGS.items() if isinstance(v, dict)}
+    total_run = sum(v["run_s"] for v in per_label.values())
+    derived = (f"compile_wall={SUITE_TIMINGS['compile_wall_s']:.1f}s " +
+               " ".join(f"{k}:run={v['run_s']:.1f}s"
+                        for k, v in per_label.items()))
+    emit("suite_build", total_run * 1e6, derived, SUITE_TIMINGS)
+    return SUITE_TIMINGS
 
 
 def emit(name: str, us_per_call: float, derived, payload=None):
@@ -56,8 +145,13 @@ def emit(name: str, us_per_call: float, derived, payload=None):
 
 
 def timed(fn, *args, repeat=1, **kw):
+    """Wall time per call in µs. Blocks on the result inside the clock:
+    JAX dispatch is async, so returning at dispatch time (the old
+    behaviour) measured the enqueue, not the execution."""
+    out = None
     t0 = time.perf_counter()
     for _ in range(repeat):
         out = fn(*args, **kw)
+        jax.block_until_ready(out)
     dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6

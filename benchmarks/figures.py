@@ -5,8 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (CFG, SCENARIOS, STRATEGIES, WARM, emit,
-                               get_suite, timed)
+from benchmarks import common
+from benchmarks.common import STRATEGIES, emit, get_suite, timed
 from repro.continuum import (client_qos_satisfaction, cumulative_regret,
                              jain_fairness, p90_proc_latency,
                              per_client_success, per_lb_request_distribution,
@@ -19,8 +19,8 @@ def fig3_qos_success():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            vals = [client_qos_satisfaction(suite[(s, label)], CFG.rho, WARM)
-                    for s in SCENARIOS]
+            vals = [client_qos_satisfaction(suite[(s, label)], common.CFG.rho, common.WARM)
+                    for s in common.SCENARIOS]
             out[label] = {"per_scenario": vals,
                           "mean": float(np.mean(vals)),
                           "std": float(np.std(vals))}
@@ -38,8 +38,8 @@ def fig4_fairness():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            vals = [jain_fairness(suite[(s, label)], warmup_steps=WARM)
-                    for s in SCENARIOS]
+            vals = [jain_fairness(suite[(s, label)], warmup_steps=common.WARM)
+                    for s in common.SCENARIOS]
             out[label] = {"per_scenario": vals,
                           "mean": float(np.mean(vals))}
         return out
@@ -56,12 +56,12 @@ def fig5_per_client():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            ratio, present = per_client_success(suite[(1, label)], WARM)
+            ratio, present = per_client_success(suite[(1, label)], common.WARM)
             r = np.sort(ratio[present])
             out[label] = {
                 "min": float(r[0]), "p25": float(np.percentile(r, 25)),
                 "median": float(np.median(r)),
-                "clients_below_target": int((r < CFG.rho).sum()),
+                "clients_below_target": int((r < common.CFG.rho).sum()),
                 "n_clients": int(r.size),
             }
         return out
@@ -75,18 +75,18 @@ def fig5_per_client():
 
 def fig6_rolling_qos():
     suite = get_suite()
-    win = int(CFG.window / CFG.dt)
+    win = int(common.CFG.window / common.CFG.dt)
 
     def compute():
         out = {}
         for label, _ in STRATEGIES:
             roll = rolling_qos(suite[(1, label)], win)
-            steady = roll[WARM:].mean()
+            steady = roll[common.WARM:].mean()
             # convergence: first time rolling QoS reaches 95% of steady
             thresh = 0.95 * steady
             idx = np.argmax(roll >= thresh)
             out[label] = {"steady": float(steady),
-                          "convergence_s": float(idx * CFG.dt),
+                          "convergence_s": float(idx * common.CFG.dt),
                           "curve_30s_samples": roll[::50][:40].tolist()}
         return out
 
@@ -104,7 +104,7 @@ def fig7_request_distribution():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            rate = request_rate_per_instance(suite[(1, label)], CFG.dt, WARM)
+            rate = request_rate_per_instance(suite[(1, label)], common.CFG.dt, common.WARM)
             out[label] = {"per_instance_req_s": rate.tolist(),
                           "max": float(rate.max()), "min": float(rate.min())}
         return out
@@ -121,7 +121,7 @@ def fig8_p90_latency():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            p90 = p90_proc_latency(suite[(1, label)], WARM)
+            p90 = p90_proc_latency(suite[(1, label)], common.WARM)
             out[label] = {"per_instance_ms": (p90 * 1e3).tolist(),
                           "max_ms": float(p90.max() * 1e3)}
         return out
@@ -146,9 +146,9 @@ def fig9_single_lb():
             o = suite[(1, label)]
             out[label] = {
                 "lb_with_local": per_lb_request_distribution(
-                    o, lb_local, WARM).tolist(),
+                    o, lb_local, common.WARM).tolist(),
                 "lb_without_local": per_lb_request_distribution(
-                    o, lb_remote, WARM).tolist(),
+                    o, lb_remote, common.WARM).tolist(),
             }
             for key in ("lb_with_local", "lb_without_local"):
                 p = np.asarray(out[label][key])
@@ -166,40 +166,73 @@ def fig9_single_lb():
     return payload
 
 
-def _event_run(event: str):
+_event_cache = common.register_cache({})
+
+
+def _event_suite():
+    """{(event, label): SimOutputs} for the surge/removal events.
+
+    Both events share every static shape, so each strategy compiles ONE
+    vmapped program with the event axis batched (surge lane varies
+    n_clients, removal lane varies active) instead of one program per
+    (event, strategy) pair.
+    """
+    if _event_cache:
+        return _event_cache
     import jax
     import jax.numpy as jnp
-    from repro.continuum import make_topology, run_sim
+    from benchmarks.common import strategy_name
+    from repro.continuum import build_sim_fn
     topo = get_suite()[("topo", 1)]
     rtt = topo.lb_instance_rtt()
-    T = CFG.num_steps
-    win = int(CFG.window / CFG.dt)
+    T = common.CFG.num_steps
+
+    surge_nc = np.full((T, 30), 2, np.int32)
+    rng = np.random.default_rng(0)
+    surge_nc[T // 2:, rng.choice(30, 15, replace=False)] += 2
+    removal_act = np.ones((T, 10), bool)
+    removal_act[T // 2:, 9] = False
+    n_clients = jnp.stack([jnp.asarray(surge_nc),
+                           jnp.full((T, 30), 4, jnp.int32)])
+    active = jnp.stack([jnp.ones((T, 10), bool), jnp.asarray(removal_act)])
+    key = jax.random.PRNGKey(11)
+
+    # smoke: per-strategy compiles dominate; two strategies gate the path
+    strategies = STRATEGIES[:2] if common.SMOKE else STRATEGIES
+    lowered = []
+    for label, kw in strategies:
+        run = build_sim_fn(strategy_name(label), common.CFG, 30, 10, **kw)
+        batched = jax.jit(jax.vmap(run, in_axes=(None, 0, 0, None)))
+        lowered.append(batched.lower(rtt, n_clients, active, key))
+    for (label, kw), exe in zip(strategies,
+                                common.compile_all(lowered)):
+        outs = exe(rtt, n_clients, active, key)
+        for i, event in enumerate(("surge", "removal")):
+            _event_cache[(event, label)] = jax.tree.map(
+                lambda x: x[i], outs)
+    return _event_cache
+
+
+def _event_run(event: str):
+    suite = _event_suite()
+    T = common.CFG.num_steps
+    win = int(common.CFG.window / common.CFG.dt)
     out = {}
-    for label, kw in STRATEGIES:
-        from benchmarks.common import strategy_name
-        if event == "surge":
-            n_clients = np.full((T, 30), 2, np.int32)
-            rng = np.random.default_rng(0)
-            n_clients[T // 2:, rng.choice(30, 15, replace=False)] += 2
-            o = run_sim(strategy_name(label), rtt, CFG,
-                        jax.random.PRNGKey(11),
-                        n_clients=jnp.asarray(n_clients), **kw)
-        else:
-            active = np.ones((T, 10), bool)
-            active[T // 2:, 9] = False
-            o = run_sim(strategy_name(label), rtt, CFG,
-                        jax.random.PRNGKey(11),
-                        active=jnp.asarray(active), **kw)
+    for (ev, label), o in suite.items():
+        if ev != event:
+            continue
         roll = rolling_qos(o, win)
         pre = roll[T // 2 - win:T // 2].mean()
         dip = roll[T // 2:T // 2 + 3 * win].min()
-        tail = roll[-int(20 / CFG.dt):].mean()
+        # never reach back past the event (smoke horizons are short)
+        tail_steps = min(int(20 / common.CFG.dt), T - T // 2)
+        tail = roll[-tail_steps:].mean()
         # recovery: first time after the event at >= 0.95*tail
         post = roll[T // 2:]
         rec_idx = int(np.argmax(post >= 0.95 * tail))
         out[label] = {"pre": float(pre), "dip": float(dip),
                       "post_steady": float(tail),
-                      "recovery_s": rec_idx * CFG.dt}
+                      "recovery_s": rec_idx * common.CFG.dt}
     return out
 
 

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, timed
 from repro.core import BanditParams, init_state, maintenance, record, select
 
@@ -52,15 +53,17 @@ def _bench_scale(K, M, ring=64):
 
 
 def footprint():
-    payload = {
-        "paper_scale_K30_M10": _bench_scale(30, 10),
-        "datacenter_scale_K1024_M64": _bench_scale(1024, 64),
-    }
+    payload = {"paper_scale_K30_M10": _bench_scale(30, 10)}
+    if not common.SMOKE:
+        payload["datacenter_scale_K1024_M64"] = _bench_scale(1024, 64)
     derived = (
         f"K30xM10:route={payload['paper_scale_K30_M10']['route_us']:.0f}us,"
-        f"maint={payload['paper_scale_K30_M10']['maintenance_us']:.0f}us;"
-        f"K1024xM64:maint={payload['datacenter_scale_K1024_M64']['maintenance_us']:.0f}us,"
-        f"state={payload['datacenter_scale_K1024_M64']['state_mb']:.0f}MB")
+        f"maint={payload['paper_scale_K30_M10']['maintenance_us']:.0f}us")
+    if "datacenter_scale_K1024_M64" in payload:
+        derived += (
+            f";K1024xM64:maint="
+            f"{payload['datacenter_scale_K1024_M64']['maintenance_us']:.0f}us,"
+            f"state={payload['datacenter_scale_K1024_M64']['state_mb']:.0f}MB")
     emit("footprint", payload["paper_scale_K30_M10"]["route_us"], derived,
          payload)
     return payload
@@ -72,7 +75,8 @@ def kde_hotspot():
     from repro.kernels.kde import kde_success_prob
     rng = np.random.default_rng(0)
     out = {}
-    for rows, R in ((300, 64), (65536, 64)):
+    shapes = ((300, 64),) if common.SMOKE else ((300, 64), (65536, 64))
+    for rows, R in shapes:
         lat = jnp.asarray(rng.exponential(0.03, (rows, R)), jnp.float32)
         mask = jnp.asarray(rng.random((rows, R)) < 0.7)
         bw = jnp.asarray(rng.uniform(1e-3, 1e-2, rows), jnp.float32)
@@ -81,7 +85,7 @@ def kde_hotspot():
         _, us = timed(lambda: jax.block_until_ready(f_ref(lat, mask, bw)),
                       repeat=10)
         out[f"rows{rows}"] = {"xla_us": us, "us_per_row": us / rows}
-    emit("kde_hotspot", out["rows300"]["xla_us"],
-         f"300rows={out['rows300']['xla_us']:.0f}us "
-         f"65536rows={out['rows65536']['xla_us']:.0f}us", out)
+    derived = " ".join(f"{k[4:]}rows={v['xla_us']:.0f}us"
+                       for k, v in out.items())
+    emit("kde_hotspot", out["rows300"]["xla_us"], derived, out)
     return out

@@ -4,13 +4,18 @@ Prints ``name,us_per_call,derived`` CSV (harness contract) and writes a
 JSON artifact per benchmark into results/benchmarks/.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3_qos_success ...]
+                                          [--smoke]
+
+``--smoke`` shrinks every benchmark to a tiny horizon/fleet so the full
+harness completes in seconds — a correctness gate to run alongside the
+tier-1 tests, not a source of publishable numbers.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-from benchmarks import beyond, figures, footprint
+from benchmarks import bandit_scale, beyond, common, figures, footprint
 
 ALL = {
     # paper §VII figures
@@ -27,6 +32,9 @@ ALL = {
     "regret_curve": figures.regret_curve,
     "footprint": footprint.footprint,
     "kde_hotspot": footprint.kde_hotspot,
+    # harness + scale-out throughput (perf trajectory)
+    "suite_build": common.suite_build,
+    "bandit_scale": bandit_scale.bandit_scale,
     # beyond-paper
     "beyond_paper_variants": beyond.beyond_paper_variants,
 }
@@ -35,7 +43,11 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=sorted(ALL), default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny horizon/fleet: seconds-level CI gate")
     args = ap.parse_args()
+    if args.smoke:
+        common.configure(smoke=True)
     names = args.only or list(ALL)
     print("name,us_per_call,derived")
     failures = []

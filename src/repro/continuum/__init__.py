@@ -11,7 +11,13 @@ from repro.continuum.metrics import (
     rolling_qos,
     variation_budget_emp,
 )
-from repro.continuum.simulator import SimConfig, SimOutputs, run_sim
+from repro.continuum.simulator import (
+    SimConfig,
+    SimOutputs,
+    build_sim_fn,
+    run_sim,
+    run_sim_batch,
+)
 from repro.continuum.topology import (
     Topology,
     european_rtt_matrix,
@@ -20,7 +26,7 @@ from repro.continuum.topology import (
 )
 
 __all__ = [
-    "SimConfig", "SimOutputs", "run_sim",
+    "SimConfig", "SimOutputs", "run_sim", "run_sim_batch", "build_sim_fn",
     "Topology", "european_rtt_matrix", "k_center_placement", "make_topology",
     "client_qos_satisfaction", "jain_fairness", "rolling_qos",
     "per_lb_rolling_qos", "per_client_success", "request_rate_per_instance",

@@ -18,6 +18,20 @@ closed form ``mu = Phi(ln((tau - rtt)/((q+1) s_m)) / sigma)``.
 
 The whole horizon runs in one ``lax.scan``; strategies are closures
 chosen at trace time (QEdgeProxy / proxy-mity / Dec-SARSA).
+
+Hot-path structure: a strategy that provides ``record_rings`` /
+``record_feedback`` gets the fused step. Rounds still execute in
+order — selection, the queue recursion and the cheap (K, M) feedback
+control (consecutive errors, cooldown trips, weight renormalization)
+stay interleaved, so an in-step trip steers the remaining rounds
+exactly as with sequential ``record`` — but the expensive
+(K, M, R)/(K, Rq) ring-buffer writes are deferred and land in ONE
+fused scatter per step (``repro.core.bandit.record_rings_batch``)
+instead of C sequential scatter rounds. The fused and sequential
+paths are bit-for-bit identical (tests/test_bandit_batch.py).
+Maintenance runs on a fixed-size player group per step (balanced
+staggered clocks), so the O(K·M·R) estimate is paid for ~K/H_d
+players instead of all K.
 """
 from __future__ import annotations
 
@@ -72,9 +86,9 @@ class SimOutputs(NamedTuple):
     eps: jax.Array          # (T, K) exploration rate (qedgeproxy) or 0
 
 
-def _true_mu(rtt, q, cfg: SimConfig):
+def _true_mu(rtt, q, cfg: SimConfig, service_time):
     """Closed-form P(rtt + (q+1) s Z <= tau), Z ~ LogNormal(0, sigma^2)."""
-    margin = (cfg.tau - rtt) / ((q[None, :] + 1.0) * cfg.service_time)
+    margin = (cfg.tau - rtt) / ((q[None, :] + 1.0) * service_time)
     safe = jnp.maximum(margin, 1e-9)
     mu = normal_cdf(jnp.log(safe) / cfg.proc_sigma)
     return jnp.where(margin > 0, mu, 0.0)
@@ -99,6 +113,15 @@ def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int)
     def maintain(state, rtt, t, lb_mask=None):
         return qb.maintenance(state, params, rtt, t, lb_mask)
 
+    def maintain_subset(state, rtt, t, player_idx):
+        return qb.maintenance_subset(state, params, rtt, t, player_idx)
+
+    def record_feedback(state, choice, lat, t, mask):
+        return qb.record_feedback(state, params, choice, lat, t, mask)
+
+    def record_rings(state, choices, lats, t, mask):
+        return qb.record_rings_batch(state, params, choices, lats, t, mask)
+
     def on_activity(state, new_active, rtt, t):
         return qb.sync_active(state, params, new_active)
 
@@ -109,6 +132,8 @@ def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int)
         return state.eps
 
     return dict(init=init, select=select, record=record, maintain=maintain,
+                maintain_subset=maintain_subset,
+                record_feedback=record_feedback, record_rings=record_rings,
                 on_activity=on_activity, weights=weights, eps=eps)
 
 
@@ -130,6 +155,12 @@ def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
     def record(state, choice, lat, t, mask):
         return state
 
+    def record_feedback(state, choice, lat, t, mask):
+        return state                     # stateless per request
+
+    def record_rings(state, choices, lats, t, mask):
+        return state
+
     def maintain(state, rtt, t, lb_mask=None):
         return state                     # fixed at initialization (paper)
 
@@ -143,6 +174,7 @@ def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
         return jnp.zeros((K,), jnp.float32)
 
     return dict(init=init, select=select, record=record, maintain=maintain,
+                record_feedback=record_feedback, record_rings=record_rings,
                 on_activity=on_activity, weights=weights, eps=eps)
 
 
@@ -210,31 +242,50 @@ def make_strategy(name: str, cfg: SimConfig, K: int, M: int, **kw):
 # Main simulation loop.
 # ---------------------------------------------------------------------------
 
-def run_sim(
+def build_sim_fn(
     strategy_name: str,
-    rtt: jax.Array,              # (K, M) LB->instance RTT [s]
     cfg: SimConfig,
-    key: jax.Array,
-    n_clients: jax.Array | None = None,   # (T, K) i32 active clients per LB
-    active: jax.Array | None = None,      # (T, M) bool instance liveness
+    K: int,
+    M: int,
+    fused: bool = True,
     **strategy_kw,
-) -> SimOutputs:
-    """Run one topology × strategy for the full horizon. jit-compiled."""
-    K, M = rtt.shape
+):
+    """Build a traceable ``run(rtt, n_clients, active, key) -> SimOutputs``.
+
+    Exposed separately from ``run_sim`` so harnesses can transform it:
+    benchmarks/common.py vmaps the scenario axis and compiles one
+    program for all seeds of a strategy (``run_sim_batch``).
+
+    ``fused=False`` forces the pre-refactor step structure (C sequential
+    record rounds + full-width maintenance gated only by ``lb_mask``)
+    even for strategies that support the fused path — kept as the
+    reference point for benchmarks/bandit_scale.py.
+    """
     T, C = cfg.num_steps, cfg.max_clients
-    if n_clients is None:
-        n_clients = jnp.full((T, K), 4, jnp.int32)
-    if active is None:
-        active = jnp.ones((T, M), bool)
-
     strat = make_strategy(strategy_name, cfg, K, M, **strategy_kw)
+    batched_record = fused and strat.get("record_rings") is not None
+    subset_maint = fused and strat.get("maintain_subset") is not None
+    n_phases = max(cfg.maint_every, 1)
+    group_size = -(-K // n_phases)      # ceil: players per decision tick
 
-    def run(rtt, n_clients, active, key):
+    def run(rtt, n_clients, active, key, service_time=None):
+        # service_time may be a traced scalar so harnesses can sweep the
+        # utilization axis (benchmarks/beyond.py vmaps it) without one
+        # compile per operating point; None keeps the static default.
+        s_m = cfg.service_time if service_time is None else service_time
         k_init, k_phase, k_scan = jax.random.split(key, 3)
         s0 = strat["init"](rtt, active[0], k_init)
         q0 = jnp.zeros((M,), jnp.float32)
-        maint_phase = jax.random.randint(
-            k_phase, (K,), 0, cfg.maint_every)   # per-LB timer offset
+        # Staggered H_d clocks (asynchronous DaemonSet timers): a random
+        # permutation split into H_d balanced groups. Fixed group size
+        # is what lets maintenance gather exactly the rows due now
+        # instead of running the O(K*M*R) estimate for all K every step;
+        # sentinel K pads the last group (dropped on scatter).
+        perm = jax.random.permutation(k_phase, K).astype(jnp.int32)
+        pad = n_phases * group_size - K
+        groups = jnp.concatenate(
+            [perm, jnp.full((pad,), K, jnp.int32)]).reshape(
+                n_phases, group_size)
 
         def step(carry, xs):
             state, q, prev_active = carry
@@ -249,50 +300,94 @@ def run_sim(
                 lambda s: s,
                 state)
 
-            # --- maintenance: each LB on its own H_d clock (staggered
-            # phases, matching the asynchronous DaemonSet timers) ---
-            lb_mask = (t_idx % cfg.maint_every) == maint_phase
-            state = strat["maintain"](state, rtt, t, lb_mask)
+            # --- maintenance: only the player group whose clock fires ---
+            group = groups[t_idx % n_phases]
+            if subset_maint:
+                state = strat["maintain_subset"](state, rtt, t, group)
+            else:
+                lb_mask = jnp.zeros((K,), bool).at[group].set(
+                    True, mode="drop")
+                state = strat["maintain"](state, rtt, t, lb_mask)
 
-            mu_true = _true_mu(rtt, q, cfg)              # (K, M) at step start
+            mu_true = _true_mu(rtt, q, cfg, s_m)         # (K, M) at step start
             w_now = strat["weights"](state)
             reg = step_regret(w_now, mu_true, act)
             q_start = q
 
-            rewards = jnp.zeros((K, C), jnp.float32)
-            issued = jnp.zeros((K, C), bool)
-            choices = jnp.zeros((K, C), jnp.int32)
-            lats = jnp.zeros((K, C), jnp.float32)
-            procs = jnp.zeros((K, C), jnp.float32)
-            arrivals = jnp.zeros((M,), jnp.float32)
-
+            mask_all = jnp.arange(C)[None, :] < nc[:, None]        # (K, C)
             # service is continuous: drain dt/C of capacity per round so
             # in-step arrivals and departures interleave (a step-end-only
             # drain would overstate in-step queueing by ~C/2 requests)
-            served_per_round = cfg.dt / (C * cfg.service_time)
+            served_per_round = cfg.dt / (C * s_m)
 
-            # --- client rounds (unrolled: C is small & static) ---
-            for r in range(C):
-                k_r = jax.random.fold_in(k_step, r)
-                k_sel, k_noise = jax.random.split(k_r)
-                mask = r < nc                              # (K,)
-                choice, state = strat["select"](state, k_sel, t, act)
-                # processing latency: queue seen at arrival (same-round
-                # arrivals at other LBs are approximated as simultaneous)
-                z = jnp.exp(cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
-                q_seen = q[choice]
-                proc = (q_seen + 1.0) * cfg.service_time * z
-                lat = rtt[jnp.arange(K), choice] + proc
-                state = strat["record"](state, choice, lat, t, mask)
-                arr_r = jax.ops.segment_sum(
-                    mask.astype(jnp.float32), choice, num_segments=M)
-                q = jnp.maximum(q + arr_r - served_per_round, 0.0)
-                arrivals = arrivals + arr_r
-                rewards = rewards.at[:, r].set((lat <= cfg.tau).astype(jnp.float32))
-                issued = issued.at[:, r].set(mask)
-                choices = choices.at[:, r].set(choice)
-                lats = lats.at[:, r].set(lat)
-                procs = procs.at[:, r].set(proc)
+            if batched_record:
+                # --- fused request path: rounds still run in order
+                # (selection and the cheap (K, M) feedback control stay
+                # interleaved, so in-step cooldown trips steer the
+                # remaining rounds exactly like sequential `record`),
+                # but the expensive (K, M, R)/(K, Rq) ring writes are
+                # deferred and land in ONE fused scatter per step.
+                # Bit-for-bit vs the sequential fallback below
+                # (tests/test_bandit_batch.py locks it).
+                ch_rounds, lat_rounds, proc_rounds = [], [], []
+                arrivals = jnp.zeros((M,), jnp.float32)
+                for r in range(C):      # unrolled: C is small & static
+                    k_r = jax.random.fold_in(k_step, r)
+                    k_sel, k_noise = jax.random.split(k_r)
+                    mask = mask_all[:, r]
+                    choice, state = strat["select"](state, k_sel, t, act)
+                    z = jnp.exp(
+                        cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
+                    q_seen = q[choice]
+                    proc = (q_seen + 1.0) * s_m * z
+                    lat = rtt[jnp.arange(K), choice] + proc
+                    state = strat["record_feedback"](state, choice, lat,
+                                                     t, mask)
+                    arr_r = jax.ops.segment_sum(
+                        mask.astype(jnp.float32), choice, num_segments=M)
+                    q = jnp.maximum(q + arr_r - served_per_round, 0.0)
+                    arrivals = arrivals + arr_r
+                    ch_rounds.append(choice)
+                    lat_rounds.append(lat)
+                    proc_rounds.append(proc)
+                choices = jnp.stack(ch_rounds, 1)                  # (K, C)
+                lats = jnp.stack(lat_rounds, 1)
+                procs = jnp.stack(proc_rounds, 1)
+                state = strat["record_rings"](state, choices, lats, t,
+                                              mask_all)
+                rewards = (lats <= cfg.tau).astype(jnp.float32)
+                issued = mask_all
+            else:
+                # --- sequential fallback: the strategy reads its own
+                # per-request state between rounds (Dec-SARSA) ---
+                rewards = jnp.zeros((K, C), jnp.float32)
+                issued = jnp.zeros((K, C), bool)
+                choices = jnp.zeros((K, C), jnp.int32)
+                lats = jnp.zeros((K, C), jnp.float32)
+                procs = jnp.zeros((K, C), jnp.float32)
+                arrivals = jnp.zeros((M,), jnp.float32)
+
+                for r in range(C):      # unrolled: C is small & static
+                    k_r = jax.random.fold_in(k_step, r)
+                    k_sel, k_noise = jax.random.split(k_r)
+                    mask = r < nc                              # (K,)
+                    choice, state = strat["select"](state, k_sel, t, act)
+                    z = jnp.exp(
+                        cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
+                    q_seen = q[choice]
+                    proc = (q_seen + 1.0) * s_m * z
+                    lat = rtt[jnp.arange(K), choice] + proc
+                    state = strat["record"](state, choice, lat, t, mask)
+                    arr_r = jax.ops.segment_sum(
+                        mask.astype(jnp.float32), choice, num_segments=M)
+                    q = jnp.maximum(q + arr_r - served_per_round, 0.0)
+                    arrivals = arrivals + arr_r
+                    rewards = rewards.at[:, r].set(
+                        (lat <= cfg.tau).astype(jnp.float32))
+                    issued = issued.at[:, r].set(mask)
+                    choices = choices.at[:, r].set(choice)
+                    lats = lats.at[:, r].set(lat)
+                    procs = procs.at[:, r].set(proc)
 
             out = SimOutputs(
                 rewards=rewards, issued=issued, choices=choices,
@@ -306,4 +401,51 @@ def run_sim(
         (_, _, _), outs = jax.lax.scan(step, (s0, q0, active[0]), xs)
         return outs
 
+    return run
+
+
+def run_sim(
+    strategy_name: str,
+    rtt: jax.Array,              # (K, M) LB->instance RTT [s]
+    cfg: SimConfig,
+    key: jax.Array,
+    n_clients: jax.Array | None = None,   # (T, K) i32 active clients per LB
+    active: jax.Array | None = None,      # (T, M) bool instance liveness
+    **strategy_kw,
+) -> SimOutputs:
+    """Run one topology × strategy for the full horizon. jit-compiled."""
+    K, M = rtt.shape
+    T = cfg.num_steps
+    if n_clients is None:
+        n_clients = jnp.full((T, K), 4, jnp.int32)
+    if active is None:
+        active = jnp.ones((T, M), bool)
+    run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
     return jax.jit(run)(rtt, n_clients, active, key)
+
+
+def run_sim_batch(
+    strategy_name: str,
+    rtts: jax.Array,             # (S, K, M) one RTT matrix per scenario
+    cfg: SimConfig,
+    keys: jax.Array,             # (S, 2) one PRNG key per scenario
+    n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
+    active: jax.Array | None = None,      # (T, M), shared across scenarios
+    **strategy_kw,
+) -> SimOutputs:
+    """Vmap the scenario axis: one compiled program for all S seeds.
+
+    Returns SimOutputs with a leading (S,) axis on every field. The
+    evaluation grid's per-strategy seeds share every static shape, so
+    batching them removes S-1 compilations and lets XLA overlap the
+    scenario lanes.
+    """
+    S, K, M = rtts.shape
+    T = cfg.num_steps
+    if n_clients is None:
+        n_clients = jnp.full((T, K), 4, jnp.int32)
+    if active is None:
+        active = jnp.ones((T, M), bool)
+    run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
+    return jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
+        rtts, n_clients, active, keys)

@@ -12,7 +12,11 @@ from repro.core.bandit import (
     instance_added,
     instance_removed,
     maintenance,
+    maintenance_subset,
     record,
+    record_batch,
+    record_feedback,
+    record_rings_batch,
     select,
     sync_active,
 )
@@ -35,7 +39,9 @@ from repro.core.swrr import swrr_select
 
 __all__ = [
     "BanditParams", "BanditState", "init_state", "select", "record",
-    "maintenance", "instance_added", "instance_removed", "sync_active",
+    "record_batch", "record_feedback", "record_rings_batch",
+    "maintenance", "maintenance_subset",
+    "instance_added", "instance_removed", "sync_active",
     "DecSarsaParams", "DecSarsaState", "decsarsa_init", "decsarsa_select",
     "decsarsa_update", "proxy_mity_weights",
     "kde_success_prob", "empirical_success_prob", "silverman_bandwidth",

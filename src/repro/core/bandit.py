@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import kde as kde_mod
 from repro.core.swrr import swrr_select
+from repro.kernels import ops as kernel_ops
 
 
 class BanditParams(NamedTuple):
@@ -139,42 +140,19 @@ def select(state: BanditState):
     return choice, state._replace(cw=cw), valid
 
 
-def record(
+def _record_control(
     state: BanditState,
     params: BanditParams,
-    choice: jax.Array,      # (K,) selected arm per player
-    latency: jax.Array,     # (K,) end-to-end latency [s]
-    t: jax.Array,           # scalar time [s]
-    mask: jax.Array,        # (K,) bool: player actually issued a request
+    choice: jax.Array,      # (K,)
+    reward: jax.Array,      # (K,) 1/0 QoS outcome
+    t: jax.Array,
+    mask: jax.Array,        # (K,)
 ) -> BanditState:
-    """Record one request per player (Alg 2 lines 4–9), vectorized.
-
-    Masked players leave the state untouched. Repeated calls handle
-    multiple requests per player per step.
-    """
+    """Error/cooldown/pool/weight part of one record round (Alg 2
+    lines 5-9). Touches only (K, M) fields — the (K, M, R) ring writes
+    live in ``record`` / ``record_batch``."""
     K, M, R = state.lat_buf.shape
     kidx = jnp.arange(K)
-    maskf = mask.astype(jnp.float32)
-    reward = (latency <= params.tau).astype(jnp.float32)
-
-    # --- latency ring write at (k, choice[k], ptr) ---
-    p = state.ptr[kidx, choice]
-    lat_buf = state.lat_buf.at[kidx, choice, p].set(
-        jnp.where(mask, latency, state.lat_buf[kidx, choice, p]))
-    ts_buf = state.ts_buf.at[kidx, choice, p].set(
-        jnp.where(mask, t, state.ts_buf[kidx, choice, p]))
-    ptr = state.ptr.at[kidx, choice].set(
-        jnp.where(mask, (p + 1) % R, p))
-
-    # --- per-player reward ring (for the degradation test) ---
-    rp = state.rptr
-    r_buf = state.r_buf.at[kidx, rp].set(
-        jnp.where(mask, reward, state.r_buf[kidx, rp]))
-    rts_buf = state.rts_buf.at[kidx, rp].set(
-        jnp.where(mask, t, state.rts_buf[kidx, rp]))
-    rptr = jnp.where(mask, (rp + 1) % state.r_buf.shape[1], rp)
-
-    # --- consecutive error count & cooldown (Alg 2 lines 5-9) ---
     old_err = state.err[kidx, choice]
     new_err = jnp.where(reward > 0, 0, old_err + 1).astype(jnp.int32)
     trip = mask & (new_err >= params.err_thresh)
@@ -202,10 +180,143 @@ def record(
     cw = jnp.where(tripped_onehot, 0.0, state.cw)
 
     return state._replace(
-        lat_buf=lat_buf, ts_buf=ts_buf, ptr=ptr,
-        r_buf=r_buf, rts_buf=rts_buf, rptr=rptr,
         err=err, cooldown_until=cd, in_pool=in_pool, weights=weights, cw=cw,
     )
+
+
+def record(
+    state: BanditState,
+    params: BanditParams,
+    choice: jax.Array,      # (K,) selected arm per player
+    latency: jax.Array,     # (K,) end-to-end latency [s]
+    t: jax.Array,           # scalar time [s]
+    mask: jax.Array,        # (K,) bool: player actually issued a request
+) -> BanditState:
+    """Record one request per player (Alg 2 lines 4–9), vectorized.
+
+    Masked players leave the state untouched. Repeated calls handle
+    multiple requests per player per step; ``record_batch`` ingests all
+    of them in one fused scatter instead.
+    """
+    K, M, R = state.lat_buf.shape
+    kidx = jnp.arange(K)
+    reward = (latency <= params.tau).astype(jnp.float32)
+
+    # --- latency ring write at (k, choice[k], ptr) ---
+    p = state.ptr[kidx, choice]
+    lat_buf = state.lat_buf.at[kidx, choice, p].set(
+        jnp.where(mask, latency, state.lat_buf[kidx, choice, p]))
+    ts_buf = state.ts_buf.at[kidx, choice, p].set(
+        jnp.where(mask, t, state.ts_buf[kidx, choice, p]))
+    ptr = state.ptr.at[kidx, choice].set(
+        jnp.where(mask, (p + 1) % R, p))
+
+    # --- per-player reward ring (for the degradation test) ---
+    rp = state.rptr
+    r_buf = state.r_buf.at[kidx, rp].set(
+        jnp.where(mask, reward, state.r_buf[kidx, rp]))
+    rts_buf = state.rts_buf.at[kidx, rp].set(
+        jnp.where(mask, t, state.rts_buf[kidx, rp]))
+    rptr = jnp.where(mask, (rp + 1) % state.r_buf.shape[1], rp)
+
+    state = state._replace(
+        lat_buf=lat_buf, ts_buf=ts_buf, ptr=ptr,
+        r_buf=r_buf, rts_buf=rts_buf, rptr=rptr)
+    return _record_control(state, params, choice, reward, t, mask)
+
+
+def record_feedback(
+    state: BanditState,
+    params: BanditParams,
+    choice: jax.Array,      # (K,)
+    latency: jax.Array,     # (K,)
+    t: jax.Array,
+    mask: jax.Array,        # (K,)
+) -> BanditState:
+    """Control half of one record round: err/cooldown/pool/weights but
+    NO ring writes. Pair with ``record_rings_batch`` — the simulator
+    interleaves this with selection (so in-step trips still steer the
+    remaining rounds, exactly like sequential ``record``) and defers
+    the expensive (K, M, R) scatters to one fused write per step."""
+    reward = (latency <= params.tau).astype(jnp.float32)
+    return _record_control(state, params, choice, reward, t, mask)
+
+
+def record_rings_batch(
+    state: BanditState,
+    params: BanditParams,
+    choices: jax.Array,     # (K, C) selected arm per player per round
+    latencies: jax.Array,   # (K, C) end-to-end latency [s]
+    t: jax.Array,           # scalar time [s] (shared by the batch)
+    mask: jax.Array,        # (K, C) bool: request actually issued
+) -> BanditState:
+    """Ring-buffer half of ``record_batch``: all C requests' latency /
+    timestamp / reward samples land in one fused scatter.
+
+    Ring slots are computed with per-(player, arm) offset arithmetic —
+    the j-th masked write of the batch to arm m lands at
+    ``(ptr + j) % R`` — so the C rounds of (K, M, R)/(K, Rq) scatters
+    collapse to one. Writes that a later same-slot write of the same
+    batch would overwrite are dropped up front, keeping scatter indices
+    unique (deterministic). Final buffer contents are bit-for-bit what
+    C sequential ``record`` calls leave behind; control flow
+    (err/trips/weights) is NOT applied here.
+    """
+    K, M, R = state.lat_buf.shape
+    C = choices.shape[1]
+    Rq = state.r_buf.shape[1]
+    kk = jnp.broadcast_to(jnp.arange(K)[:, None], (K, C))
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (K, C))
+    reward = (latencies <= params.tau).astype(jnp.float32)
+    maski = mask.astype(jnp.int32)
+
+    # --- latency rings: offset arithmetic over per-(k, arm) ranks ---
+    onehot = (choices[..., None] == jnp.arange(M)) & mask[..., None]
+    cnt = jnp.cumsum(onehot.astype(jnp.int32), axis=1)        # inclusive
+    total = cnt[:, -1, :]                                     # (K, M)
+    rank = jnp.take_along_axis(                               # exclusive
+        cnt - onehot.astype(jnp.int32), choices[..., None], axis=2)[..., 0]
+    p0 = jnp.take_along_axis(state.ptr, choices, axis=1)      # (K, C)
+    slot = (p0 + rank) % R
+    tot_c = jnp.take_along_axis(total, choices, axis=1)
+    keep = mask & (rank >= tot_c - R)       # drop within-batch overwrites
+    slot = jnp.where(keep, slot, R)         # out of bounds => dropped
+    lat_buf = state.lat_buf.at[kk, choices, slot].set(latencies, mode="drop")
+    ts_buf = state.ts_buf.at[kk, choices, slot].set(t_arr, mode="drop")
+    ptr = (state.ptr + total) % R
+
+    # --- per-player reward ring ---
+    crank = jnp.cumsum(maski, axis=1) - maski                 # (K, C)
+    totk = maski.sum(1)                                       # (K,)
+    rslot = (state.rptr[:, None] + crank) % Rq
+    keep_r = mask & (crank >= totk[:, None] - Rq)
+    rslot = jnp.where(keep_r, rslot, Rq)
+    r_buf = state.r_buf.at[kk, rslot].set(reward, mode="drop")
+    rts_buf = state.rts_buf.at[kk, rslot].set(t_arr, mode="drop")
+    rptr = (state.rptr + totk) % Rq
+
+    return state._replace(
+        lat_buf=lat_buf, ts_buf=ts_buf, ptr=ptr,
+        r_buf=r_buf, rts_buf=rts_buf, rptr=rptr)
+
+
+def record_batch(
+    state: BanditState,
+    params: BanditParams,
+    choices: jax.Array,     # (K, C)
+    latencies: jax.Array,   # (K, C)
+    t: jax.Array,
+    mask: jax.Array,        # (K, C)
+) -> BanditState:
+    """Ingest all C requests of a step: one fused ring scatter plus an
+    in-order replay of the cheap (K, M) control flow. Bit-for-bit
+    equal to C sequential ``record`` calls (tests/test_bandit_batch.py).
+    """
+    state = record_rings_batch(state, params, choices, latencies, t, mask)
+    for c in range(choices.shape[1]):   # C is small & static; (K, M) ops
+        state = record_feedback(
+            state, params, choices[:, c], latencies[:, c], t, mask[:, c])
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -248,9 +359,23 @@ def maintenance(
     win = (state.ts_buf >= t - params.window) & (state.ts_buf < t) \
         & (state.ts_buf > NEG_INF / 2)
 
+    # --- fused per-(player, arm) window stats: Silverman-bandwidth KDE
+    # success probability (line 12) + rho-quantile of the processing
+    # component (line 8). One VMEM pass on TPU (kernels/kde.py), the
+    # bit-identical jnp composition elsewhere (kernels/ref.py). ---
+    if params.kde_mode == 0:
+        mu_flat, proc_q_flat = kernel_ops.bandit_maintenance_stats(
+            state.lat_buf.reshape(K * M, R), win.reshape(K * M, R),
+            rtt.reshape(K * M), params.tau, params.rho,
+            min_bandwidth=params.min_bandwidth)
+        mu = mu_flat.reshape(K, M)
+        proc_q = proc_q_flat.reshape(K, M)
+    else:
+        proc = jnp.maximum(state.lat_buf - rtt[..., None], 0.0)
+        proc_q = kde_mod.masked_quantile(proc, win, params.rho)   # (K, M)
+        mu = kde_mod.empirical_success_prob(state.lat_buf, win, params.tau)
+
     # --- best expected processing latency l^{p*} (line 8 / Alg 3 line 1) ---
-    proc = jnp.maximum(state.lat_buf - rtt[..., None], 0.0)
-    proc_q = kde_mod.masked_quantile(proc, win, params.rho)      # (K, M)
     big = jnp.finfo(jnp.float32).max
     any_obs = (win.sum((-1, -2)) > 0)                             # (K,)
     l_p_star = jnp.where(any_obs, jnp.min(proc_q, axis=-1), 0.0)  # optimistic 0 if no data
@@ -260,13 +385,6 @@ def maintenance(
     not_cd = t >= state.cooldown_until
     feasible = (rtt + l_p_star[:, None] <= params.tau) & not_cd \
         & state.active[None, :]
-
-    # --- KDE estimates over the window (line 12) ---
-    if params.kde_mode == 0:
-        mu = kde_mod.kde_success_prob(
-            state.lat_buf, win, params.tau, min_bandwidth=params.min_bandwidth)
-    else:
-        mu = kde_mod.empirical_success_prob(state.lat_buf, win, params.tau)
     n_samples = win.sum(-1)
     unseen_mu = params.unseen_mu if params.unseen_mu >= 0 else params.rho - 1e-6
     mu = jnp.where(n_samples > 0, mu, unseen_mu)   # Alg 3: unseen => top explore score
@@ -334,6 +452,46 @@ def maintenance(
     return state._replace(
         mu_hat=mu, weights=weights, cw=cw, eps=eps,
         in_pool=in_pool, explore=explore,
+    )
+
+
+def maintenance_subset(
+    state: BanditState,
+    params: BanditParams,
+    rtt: jax.Array,         # (K, M)
+    t: jax.Array,
+    player_idx: jax.Array,  # (P,) i32 players due now; >= K entries = padding
+) -> BanditState:
+    """Alg 1 for a fixed-size subset of players; everyone else frozen.
+
+    The state factorizes over players, so gather → maintenance →
+    scatter commits exactly what ``maintenance(..., lb_mask)`` would for
+    the same players, at ~P/K of the O(K·M·R) estimate+sort cost. The
+    simulator's staggered decision clocks touch only ~K/H_d players per
+    step, which is where the saving lands. ``player_idx`` entries must
+    be unique (scatter rows would race otherwise); padding uses K.
+    """
+    K = state.lat_buf.shape[0]
+    safe = jnp.minimum(player_idx, K - 1)
+
+    sub = state._replace(
+        lat_buf=state.lat_buf[safe], ts_buf=state.ts_buf[safe],
+        ptr=state.ptr[safe], mu_hat=state.mu_hat[safe],
+        weights=state.weights[safe], cw=state.cw[safe], eps=state.eps[safe],
+        err=state.err[safe], cooldown_until=state.cooldown_until[safe],
+        in_pool=state.in_pool[safe], explore=state.explore[safe],
+        r_buf=state.r_buf[safe], rts_buf=state.rts_buf[safe],
+        rptr=state.rptr[safe])                  # active is (M,): shared
+    out = maintenance(sub, params, rtt[safe], t)
+
+    tgt = jnp.where(player_idx < K, player_idx, K)      # drop padding rows
+    return state._replace(
+        mu_hat=state.mu_hat.at[tgt].set(out.mu_hat, mode="drop"),
+        weights=state.weights.at[tgt].set(out.weights, mode="drop"),
+        cw=state.cw.at[tgt].set(out.cw, mode="drop"),
+        eps=state.eps.at[tgt].set(out.eps, mode="drop"),
+        in_pool=state.in_pool.at[tgt].set(out.in_pool, mode="drop"),
+        explore=state.explore.at[tgt].set(out.explore, mode="drop"),
     )
 
 

@@ -1,14 +1,22 @@
-"""Pallas TPU kernel: batched KDE success-probability estimation.
+"""Pallas TPU kernels: batched KDE estimation + fused Alg-1 maintenance.
 
 The paper's per-decision-step hot spot (§V-F bounds it O(|Q_k|) per LB;
 fleet-wide it is a dense (K·M, R) fused reduction). Each row is one
-(player, arm) sliding window of R latency samples; the kernel computes
+(player, arm) sliding window of R latency samples.
+
+``kde_success_prob`` computes only the CDF sum
 
     out[r] = (1/n_r) * sum_i mask[r,i] * Phi((tau - lat[r,i]) / h[r])
 
-entirely in VMEM: one row-block tile of (BLOCK_ROWS, R) samples + mask,
-the per-row bandwidths, and the erf-based Gaussian CDF evaluated on the
-VPU. Rows are independent => trivially parallel grid.
+against precomputed bandwidths. ``fused_maintenance`` goes further and
+does the whole per-row maintenance estimate in a single VMEM pass:
+Silverman bandwidth (masked mean/var), the Gaussian-CDF success
+probability at tau, AND the masked rho-quantile of the processing
+component max(lat - rtt, 0) — previously three separate XLA ops with a
+full (rows, R) sort. The quantile is rank-selected in-register (R
+compare/accumulate sweeps over the row, stable-sort tie-break by lane
+index), so nothing ever leaves VMEM between the three estimates. Rows
+are independent => trivially parallel grid.
 """
 from __future__ import annotations
 
@@ -68,3 +76,94 @@ def kde_success_prob(
         interpret=interpret,
     )(tau_arr, lat, mask.astype(jnp.float32), bandwidth[:, None])
     return out[:rows, 0]
+
+
+def _maintenance_kernel(scal_ref, lat_ref, mask_ref, rtt_ref,
+                        mu_ref, q_ref):
+    lat = lat_ref[...].astype(jnp.float32)          # (BR, R)
+    m = mask_ref[...].astype(jnp.float32)
+    rtt = rtt_ref[...].astype(jnp.float32)          # (BR, 1)
+    tau, rho, min_bw = scal_ref[0], scal_ref[1], scal_ref[2]
+    BR, R = lat.shape
+
+    # --- Silverman bandwidth h = 1.06 * sigma * n^(-1/5) ---
+    n = jnp.sum(m, axis=-1, keepdims=True)          # (BR, 1)
+    nc = jnp.maximum(n, 1.0)
+    mean = jnp.sum(lat * m, axis=-1, keepdims=True) / nc
+    var = jnp.sum((lat - mean) ** 2 * m, axis=-1, keepdims=True) / nc
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    h = jnp.maximum(1.06 * sigma * nc ** (-0.2), min_bw)
+
+    # --- Gaussian-CDF success probability at tau ---
+    z = (tau - lat) / h
+    cdf = 0.5 * (1.0 + jax.lax.erf(z * _INV_SQRT2))
+    s = jnp.sum(cdf * m, axis=-1, keepdims=True)
+    mu_ref[...] = jnp.where(n > 0, s / nc, 0.0)
+
+    # --- masked rho-quantile of proc = max(lat - rtt, 0) ---
+    # Rank selection instead of a sort: rank[i] = #{j : x_j < x_i or
+    # (x_j == x_i and j < i)} reproduces a stable ascending sort's
+    # position exactly, and the target rank is the quantile index.
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    proc = jnp.where(m > 0, jnp.maximum(lat - rtt, 0.0), big)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (BR, R), 1)
+    tgt = jnp.clip((rho * (n - 1.0)).astype(jnp.int32), 0, R - 1)  # (BR, 1)
+
+    def body(j, acc):
+        xj = jax.lax.dynamic_slice_in_dim(proc, j, 1, axis=1)      # (BR, 1)
+        before = (xj < proc) | ((xj == proc) & (j < lane))
+        return acc + before.astype(jnp.int32)
+
+    rank = jax.lax.fori_loop(0, R, body, jnp.zeros((BR, R), jnp.int32))
+    sel = jnp.sum(jnp.where(rank == tgt, proc, 0.0), axis=-1, keepdims=True)
+    q_ref[...] = jnp.where(n > 0, sel, big)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_rows"))
+def fused_maintenance(
+    lat: jax.Array,          # (rows, R) latency windows
+    mask: jax.Array,         # (rows, R) bool validity
+    rtt: jax.Array,          # (rows,) network RTT per row
+    tau: jax.Array | float,
+    rho: jax.Array | float,
+    min_bandwidth: jax.Array | float = 1e-4,
+    interpret: bool = False,
+    block_rows: int = BLOCK_ROWS,
+):
+    """Bandwidth + KDE success prob + rho-quantile, one pass per row.
+
+    Returns ``(mu (rows,), proc_q (rows,))``; numerically locked to
+    ``ref.bandit_maintenance_stats`` (the quantile is exact — value
+    selection, no arithmetic).
+    """
+    rows, R = lat.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        lat = jnp.pad(lat, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        rtt = jnp.pad(rtt, (0, pad))
+    padded = rows + pad
+    scal = jnp.asarray([tau, rho, min_bandwidth], jnp.float32)
+
+    mu, q = pl.pallas_call(
+        _maintenance_kernel,
+        grid=(padded // br,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),                   # scalars
+            pl.BlockSpec((br, R), lambda i: (i, 0)),              # lat
+            pl.BlockSpec((br, R), lambda i: (i, 0)),              # mask
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),              # rtt
+        ],
+        out_specs=(
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+            jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(scal, lat, mask.astype(jnp.float32), rtt[:, None])
+    return mu[:rows, 0], q[:rows, 0]

@@ -111,3 +111,20 @@ def kde_success_prob(lat, mask, tau, bandwidth):
         return _kde.kde_success_prob(
             lat, mask, tau, bandwidth, interpret=(use == "interpret"))
     return ref.kde_success_prob(lat, mask, tau, bandwidth)
+
+
+def bandit_maintenance_stats(lat, mask, rtt, tau, rho, min_bandwidth=1e-4):
+    """Fused Alg-1 window stats per (player, arm) row.
+
+    Silverman bandwidth + Gaussian-CDF success prob at tau + masked
+    rho-quantile of max(lat - rtt, 0) in one VMEM pass on TPU; the
+    bit-identical jnp composition elsewhere.
+    (rows,R) -> ((rows,), (rows,)).
+    """
+    use = _use_pallas()
+    if use:
+        return _kde.fused_maintenance(
+            lat, mask, rtt, tau, rho, min_bandwidth,
+            interpret=(use == "interpret"))
+    return ref.bandit_maintenance_stats(lat, mask, rtt, tau, rho,
+                                        min_bandwidth)

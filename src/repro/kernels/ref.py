@@ -142,3 +142,48 @@ def kde_success_prob(
     cdf = 0.5 * (1.0 + jax.lax.erf(z * 0.7071067811865476))
     s = (cdf * m).sum(-1)
     return jnp.where(n > 0, s / jnp.maximum(n, 1.0), 0.0)
+
+
+def bandit_maintenance_stats(
+    lat: jax.Array,          # (rows, R) latency windows
+    mask: jax.Array,         # (rows, R) validity (bool)
+    rtt: jax.Array,          # (rows,) network RTT per row
+    tau: float,
+    rho: float,
+    min_bandwidth: float = 1e-4,
+):
+    """Fused Alg-1 window stats per (player, arm) row: Silverman
+    bandwidth -> Gaussian-CDF success probability at tau, plus the
+    masked rho-quantile of the processing component max(lat - rtt, 0).
+
+    Oracle for ``kernels/kde.py::fused_maintenance``. Mirrors the
+    repro/core/kde.py composition op-for-op (bit-identical on CPU);
+    kept self-contained because importing repro.core here would close a
+    core -> kernels -> core cycle. Returns ``(mu (rows,), q (rows,))``.
+    """
+    latf = lat.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+
+    # Silverman bandwidth h = 1.06 * sigma * n^(-1/5) (core silverman_bandwidth)
+    nc = jnp.maximum(m.sum(-1), 1.0)
+    mean = (latf * m).sum(-1) / nc
+    var = ((latf - mean[..., None]) ** 2 * m).sum(-1) / nc
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    h = jnp.maximum(1.06 * sigma * nc ** (-0.2), min_bandwidth)
+
+    # Gaussian-kernel CDF estimate of P(lat <= tau) (core kde_success_prob)
+    n = m.sum(-1)
+    z = (tau - latf) / h[..., None]
+    cdf = 0.5 * (1.0 + jax.lax.erf(z * 0.7071067811865476))
+    contrib = (cdf * m).sum(-1)
+    mu = jnp.where(n > 0, contrib / jnp.maximum(n, 1.0), 0.0)
+
+    # masked rho-quantile of processing latency (core masked_quantile)
+    proc = jnp.maximum(latf - rtt[..., None], 0.0)
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+    xs = jnp.sort(jnp.where(mask, proc, big), axis=-1)
+    ni = mask.sum(-1)
+    idx = jnp.clip((rho * (ni - 1)).astype(jnp.int32), 0, lat.shape[-1] - 1)
+    val = jnp.take_along_axis(xs, idx[..., None], axis=-1)[..., 0]
+    q = jnp.where(ni > 0, val, big)
+    return mu, q

@@ -1,12 +1,21 @@
-"""KDE estimator unit + property tests (paper §V-A)."""
-import hypothesis.strategies as st
+"""KDE estimator unit + property tests (paper §V-A).
+
+The property tests need ``hypothesis`` (see requirements-dev.txt); the
+deterministic unit tests below run without it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import kde
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:        # pragma: no cover - exercised in slim containers
+    HAVE_HYPOTHESIS = False
 
 
 def test_normal_cdf_matches_numpy():
@@ -65,17 +74,21 @@ def test_masked_quantile():
     assert float(kde.masked_quantile(x, mask, 0.5)[0]) == 3.0
 
 
-@settings(deadline=None, max_examples=30)
-@given(
-    st.integers(2, 40),
-    st.floats(0.01, 0.2),
-    st.integers(0, 2**31 - 1),
-)
-def test_kde_prob_in_unit_interval_and_monotone_in_tau(n, tau, seed):
-    rng = np.random.default_rng(seed)
-    lat = jnp.asarray(rng.exponential(0.05, (1, n)), jnp.float32)
-    mask = jnp.asarray(rng.random((1, n)) < 0.8)
-    p1 = float(kde.kde_success_prob(lat, mask, tau)[0])
-    p2 = float(kde.kde_success_prob(lat, mask, tau * 2)[0])
-    assert 0.0 <= p1 <= 1.0
-    assert p2 >= p1 - 1e-6          # CDF estimate is monotone in tau
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=30)
+    @given(
+        st.integers(2, 40),
+        st.floats(0.01, 0.2),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_kde_prob_in_unit_interval_and_monotone_in_tau(n, tau, seed):
+        rng = np.random.default_rng(seed)
+        lat = jnp.asarray(rng.exponential(0.05, (1, n)), jnp.float32)
+        mask = jnp.asarray(rng.random((1, n)) < 0.8)
+        p1 = float(kde.kde_success_prob(lat, mask, tau)[0])
+        p2 = float(kde.kde_success_prob(lat, mask, tau * 2)[0])
+        assert 0.0 <= p1 <= 1.0
+        assert p2 >= p1 - 1e-6      # CDF estimate is monotone in tau
+else:
+    def test_kde_prob_property_needs_hypothesis():
+        pytest.importorskip("hypothesis")
