@@ -1,25 +1,37 @@
-"""Throughput benchmark: bandit-step rate vs fleet size (the repo's
-first perf trajectory).
+"""Throughput + footprint benchmark: bandit-step rate vs fleet size.
 
 The paper's §V-F complexity claim (O(|Q_k|) per decision step) only
 matters if the loop actually scales past the testbed's 30 LBs x 10
 instances, so this sweeps K (players) x M (arms) far beyond it and
-emits steps/sec + µs/step JSON artifacts per cell:
+emits steps/sec, µs/step, per-cell compile seconds and per-cell peak
+device memory (XLA ``memory_analysis``: temp + output buffers) per
+variant:
 
-  * ``fused``      — the current simulator hot path: per-round (K, M)
-                     feedback control interleaved with selection, ring
-                     writes deferred to one ``record_rings_batch``
-                     scatter at step end, maintenance gathered to the
-                     ~K/H_d players whose staggered clock fired.
-                     Compile time reported separately (AOT lowering).
-  * ``sequential`` — the pre-refactor step structure (C sequential
-                     record rounds + full-width (K, M, R) sort+KDE
-                     maintenance every step), same trajectories, kept
-                     as the reference point for the speedup column.
+  * ``stream``     — the fleet-scale hot path: scanned round loop,
+                     metric accumulators carried on device, O(K·M)
+                     memory independent of the horizon (trace=False).
+  * ``trace``      — same step structure but materializing the full
+                     (T, K, C)/(T, K, M) trajectories (trace=True);
+                     the memory baseline the streaming engine deprecates.
+  * ``sequential`` — the pre-PR-1 step structure (per-round ring
+                     scatters + full-width (K, M, R) sort+KDE
+                     maintenance every step), kept as the historical
+                     speedup reference on a few anchor cells.
 
-The sequential reference is skipped for the largest cells (it is the
-thing being deprecated; its full-width maintenance makes it minutes of
-wall clock at K=1000) unless it fits the time budget.
+Two extra cells tell the memory story end to end:
+
+  * ``mem_*`` — K=1000 x M=50 at a 120 s horizon: the streaming cell is
+    compiled AND run; the trace reference is only compiled (its
+    ``memory_analysis`` peak is the point — running it would allocate
+    the very trajectories the engine exists to avoid).
+  * ``chunked_*`` — the `build_sim_chunks` driver with a donated carry,
+    timed over the full chunk loop, proving the bounded-memory path
+    costs no meaningful throughput.
+
+In ``--smoke`` mode the grid shrinks to seconds and the measured
+streaming/chunked cells are gated on ``SMOKE_FLOOR_STEPS_PER_S`` — a
+deliberately conservative floor (~5x below typical container numbers)
+so CI fails on an order-of-magnitude regression, not on scheduler noise.
 """
 from __future__ import annotations
 
@@ -30,17 +42,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import compile_all, emit, timed
-from repro.continuum import SimConfig, build_sim_fn
+from benchmarks.common import emit, timed
+from repro.continuum import SimConfig, build_sim_chunks, build_sim_fn
 
 GRID_K = (30, 100, 300, 1000)
 GRID_M = (10, 50)
 SMOKE_GRID_K = (30, 100)
 SMOKE_GRID_M = (10,)
-# Cells that also run the deprecated sequential reference: small, mid
-# and large K*M anchor the speedup trend without paying the reference's
+# Cells that also run the references: small, mid and large K*M anchor
+# the speedup / memory trends without paying the sequential reference's
 # full-width maintenance (minutes of wall clock) on every cell.
 SEQ_REF_CELLS = ((30, 10), (100, 50), (300, 50))
+TRACE_REF_CELLS = ((30, 10), (100, 50), (300, 50), (1000, 50))
+MEM_CELL = (1000, 50, 120.0)        # K, M, horizon [s] for the memory story
+# CI floor for the smoke gate (stream + chunked cells, K<=100 x M=10 at
+# a 2 s horizon). The slowest gated cell (chunked K100, 4 dispatches of
+# 5 steps) measured ~185 steps/s on this container and the others are
+# 280-1400; the floor sits ~3x under the worst so it catches structural
+# regressions (e.g. the round loop re-unrolling), not scheduler noise.
+SMOKE_FLOOR_STEPS_PER_S = 60.0
 
 
 def _rand_rtt(K, M, seed=0):
@@ -48,16 +68,84 @@ def _rand_rtt(K, M, seed=0):
     return jnp.asarray(rng.uniform(0.002, 0.04, (K, M)), jnp.float32)
 
 
-def _lower_cell(K, M, horizon, fused):
+def _cell_inputs(K, M, cfg):
+    T = cfg.num_steps
+    return (_rand_rtt(K, M), jnp.full((T, K), 4, jnp.int32),
+            jnp.ones((T, M), bool), jax.random.PRNGKey(7))
+
+
+def _lower_cell(K, M, horizon, variant):
+    cfg = SimConfig(horizon=horizon)
+    args = _cell_inputs(K, M, cfg)
+    run = jax.jit(build_sim_fn(
+        "qedgeproxy", cfg, K, M,
+        fused=variant != "sequential", trace=variant != "stream"))
+    return run.lower(*args), args, cfg.num_steps
+
+
+def _compile_cell(lowered):
+    """Compile one AOT-lowered program; returns (exe, seconds, memory).
+
+    Peak device memory comes from XLA's static ``memory_analysis``
+    (temp + output buffers of the executable) — deterministic, no need
+    to execute, and it is exactly the quantity that differs between
+    streaming and trace mode (trajectory outputs vs accumulators).
+    """
+    t0 = time.perf_counter()
+    exe = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    mem = {}
+    try:
+        ma = exe.memory_analysis()
+        mem = {"peak_mb": (ma.temp_size_in_bytes
+                           + ma.output_size_in_bytes) / 1e6,
+               "temp_mb": ma.temp_size_in_bytes / 1e6,
+               "output_mb": ma.output_size_in_bytes / 1e6}
+    except Exception:       # pragma: no cover - backend without the API
+        pass
+    return exe, compile_s, mem
+
+
+def _measure(K, M, horizon, variant, run=True):
+    lowered, args, T = _lower_cell(K, M, horizon, variant)
+    exe, compile_s, mem = _compile_cell(lowered)
+    cell = {"steps": T, "compile_s": compile_s, **mem}
+    if run:
+        _, us = timed(exe, *args)
+        run_s = us / 1e6
+        cell.update(run_s=run_s, steps_per_s=T / run_s,
+                    us_per_step=us / T)
+    return cell
+
+
+def _chunked_cell(K, M, horizon, chunk_steps):
+    """Full chunk loop through `build_sim_chunks` with a donated carry:
+    per-chunk compile measured once (AOT), steps/s over the whole loop
+    including the host-side chunk dispatch."""
     cfg = SimConfig(horizon=horizon)
     T = cfg.num_steps
-    rtt = _rand_rtt(K, M)
-    n_clients = jnp.full((T, K), 4, jnp.int32)
-    active = jnp.ones((T, M), bool)
-    key = jax.random.PRNGKey(7)
-    run = jax.jit(build_sim_fn("qedgeproxy", cfg, K, M, fused=fused))
-    lowered = run.lower(rtt, n_clients, active, key)
-    return lowered, (rtt, n_clients, active, key), T
+    rtt, n_clients, active, key = _cell_inputs(K, M, cfg)
+    init_fn, chunk_fn = build_sim_chunks("qedgeproxy", cfg, K, M)
+    carry, keys = jax.jit(init_fn)(rtt, active[0], key)
+    jax.block_until_ready(jax.tree.leaves(carry))
+    n = chunk_steps
+    lowered = jax.jit(chunk_fn, donate_argnums=(1,)).lower(
+        rtt, carry, jnp.arange(n), n_clients[:n], active[:n], keys[:n])
+    exe, compile_s, mem = _compile_cell(lowered)
+
+    t0 = time.perf_counter()
+    steps = 0
+    for lo in range(0, T - n + 1, n):       # drop any remainder chunk
+        carry, ys = exe(rtt, carry, jnp.arange(lo, lo + n),
+                        n_clients[lo:lo + n], active[lo:lo + n],
+                        keys[lo:lo + n])
+        steps += n
+    jax.block_until_ready(jax.tree.leaves(carry))
+    run_s = time.perf_counter() - t0
+    return {"steps": steps, "chunk_steps": n, "chunks": steps // n,
+            "compile_s": compile_s, "run_s": run_s,
+            "steps_per_s": steps / run_s,
+            "us_per_step": run_s / steps * 1e6, **mem}
 
 
 def bandit_scale():
@@ -65,34 +153,68 @@ def bandit_scale():
     grid_m = SMOKE_GRID_M if common.SMOKE else GRID_M
     horizon = 2.0 if common.SMOKE else 10.0     # steady steps/s by ~100 steps
 
-    cells = []          # (name, variant, lowered, args, T)
+    payload = {}
+    compile_wall = 0.0
     for M in grid_m:
         for K in grid_k:
-            cells.append((f"K{K}_M{M}", "fused",
-                          *_lower_cell(K, M, horizon, fused=True)))
+            cell = {"stream": _measure(K, M, horizon, "stream")}
+            if (K, M) in TRACE_REF_CELLS or common.SMOKE:
+                cell["trace"] = _measure(K, M, horizon, "trace")
             if (K, M) in SEQ_REF_CELLS or common.SMOKE:
-                cells.append((f"K{K}_M{M}", "sequential",
-                              *_lower_cell(K, M, horizon, fused=False)))
-    t0 = time.perf_counter()
-    compiled = compile_all([c[2] for c in cells])
-    compile_wall = time.perf_counter() - t0
+                cell["sequential"] = _measure(K, M, horizon, "sequential")
+            if "sequential" in cell:
+                cell["step_speedup"] = (cell["sequential"]["us_per_step"]
+                                        / cell["stream"]["us_per_step"])
+            if "trace" in cell and "peak_mb" in cell["trace"]:
+                cell["hbm_ratio"] = (cell["trace"]["peak_mb"]
+                                     / max(cell["stream"]["peak_mb"], 1e-9))
+            compile_wall += sum(v["compile_s"] for v in cell.values()
+                                if isinstance(v, dict))
+            payload[f"K{K}_M{M}"] = cell
 
-    payload = {"compile_wall_s": compile_wall}
-    for (name, variant, _, args, T), exe in zip(cells, compiled):
-        _, us = timed(exe, *args)
-        run_s = us / 1e6
-        payload.setdefault(name, {})[variant] = {
-            "steps": T, "run_s": run_s,
-            "steps_per_s": T / run_s, "us_per_step": us / T}
-    for name, cell in payload.items():
-        if isinstance(cell, dict) and "sequential" in cell:
-            cell["step_speedup"] = (cell["sequential"]["us_per_step"]
-                                    / cell["fused"]["us_per_step"])
+    # chunked-horizon driver: smoke gates it, full mode sizes it up
+    ck, cm, chz, cchunk = ((100, 10, 2.0, 5) if common.SMOKE
+                           else (300, 50, 30.0, 75))
+    chunked = _chunked_cell(ck, cm, chz, cchunk)
+    compile_wall += chunked["compile_s"]
+    payload[f"chunked_K{ck}_M{cm}"] = chunked
+
+    if not common.SMOKE:
+        # the memory story: stream runs, trace is only compiled — its
+        # memory_analysis peak IS the baseline the engine removes
+        K, M, hz = MEM_CELL
+        mem_stream = _measure(K, M, hz, "stream")
+        mem_trace = _measure(K, M, hz, "trace", run=False)
+        compile_wall += mem_stream["compile_s"] + mem_trace["compile_s"]
+        payload[f"mem_K{K}_M{M}"] = {
+            "stream": mem_stream, "trace_compiled_only": mem_trace,
+            "hbm_ratio": (mem_trace.get("peak_mb", 0.0)
+                          / max(mem_stream.get("peak_mb", 1e-9), 1e-9))}
+
+    payload["compile_wall_s"] = compile_wall
+
+    if common.SMOKE:
+        slow = {k: v["stream"]["steps_per_s"] for k, v in payload.items()
+                if isinstance(v, dict) and "stream" in v
+                and v["stream"]["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S}
+        if chunked["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S:
+            slow["chunked"] = chunked["steps_per_s"]
+        if slow:
+            raise RuntimeError(
+                f"streaming throughput below the "
+                f"{SMOKE_FLOOR_STEPS_PER_S:.0f} steps/s smoke floor: "
+                + " ".join(f"{k}={v:.0f}" for k, v in slow.items()))
+
     biggest = f"K{grid_k[-1]}_M{grid_m[-1]}"
     derived = " ".join(
-        f"{k}={v['fused']['steps_per_s']:.0f}steps/s"
+        f"{k}={v['stream']['steps_per_s']:.0f}steps/s"
         + (f"(x{v['step_speedup']:.1f})" if "step_speedup" in v else "")
-        for k, v in payload.items() if isinstance(v, dict))
-    emit("bandit_scale", payload[biggest]["fused"]["us_per_step"], derived,
+        for k, v in payload.items()
+        if isinstance(v, dict) and "stream" in v and "steps_per_s" in v["stream"])
+    derived += f" compile_wall={compile_wall:.1f}s"
+    mem_key = f"mem_K{MEM_CELL[0]}_M{MEM_CELL[1]}"
+    if mem_key in payload:
+        derived += f" mem_ratio=x{payload[mem_key]['hbm_ratio']:.0f}"
+    emit("bandit_scale", payload[biggest]["stream"]["us_per_step"], derived,
          payload)
     return payload

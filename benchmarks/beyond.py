@@ -18,7 +18,7 @@ import numpy as np
 from benchmarks import common
 from benchmarks.common import compile_all, emit, timed
 from repro.continuum import (SimConfig, build_sim_fn,
-                             client_qos_satisfaction, make_topology)
+                             client_qos_satisfaction_stream, make_topology)
 from repro.core import BanditParams
 
 VARIANTS = {
@@ -55,7 +55,8 @@ def beyond_paper_variants():
         for name, kw in variants.items():
             params = BanditParams(tau=cfg.tau, rho=cfg.rho,
                                   window=cfg.window, **kw)
-            run = build_sim_fn("qedgeproxy", cfg, 30, 10, params=params)
+            run = build_sim_fn("qedgeproxy", cfg, 30, 10, trace=False,
+                               warmup_steps=warm, params=params)
             batched = jax.jit(jax.vmap(
                 lambda s: run(rtt, n_clients, active, key,
                               service_time=s)))
@@ -65,7 +66,7 @@ def beyond_paper_variants():
             for i, st_ in enumerate(service_times):
                 o = jax.tree.map(lambda x: x[i], outs)
                 out[f"util_{1200 * st_ / 10:.0%}"][name] = \
-                    client_qos_satisfaction(o, cfg.rho, warm)
+                    client_qos_satisfaction_stream(o.acc, cfg.rho)
         return out
 
     payload, us = timed(compute)

@@ -1,12 +1,19 @@
 """Shared benchmark harness: run the paper's evaluation suite once
-(5 scenarios x 4 strategies, §VII-A6) and hand trajectories to the
+(5 scenarios x 4 strategies, §VII-A6) and hand results to the
 per-figure benches.
 
 The scenario axis is vmapped: each strategy's 5 seeds compile and run
-as ONE program (`run_sim_batch`) instead of 5, and compile time is
-measured separately from run time via AOT lowering (the old harness
+as ONE program (`run_sim_batch` shape) instead of 5, and compile time
+is measured separately from run time via AOT lowering (the old harness
 conflated them — and stopped the clock before the async dispatch had
 even executed).
+
+The suite runs the simulator in **streaming mode** (`trace=False`):
+each cell yields a `StreamOutputs` (O(K·M) metric accumulators + O(T)
+scalar series) instead of full (T, K, C)/(T, K, M) trajectories —
+every Fig 3-11 statistic is computed from those (see
+repro/continuum/metrics.py), so suite memory no longer scales with the
+horizon.
 """
 from __future__ import annotations
 
@@ -80,11 +87,12 @@ def compile_all(lowered):
 
 
 def get_suite():
-    """{(scenario, label): SimOutputs} for the full evaluation grid.
+    """{(scenario, label): StreamOutputs} for the full evaluation grid.
 
     One vmapped program per strategy covers all scenarios; per-strategy
     compile/run seconds land in SUITE_TIMINGS (emitted by the
-    ``suite_build`` benchmark row).
+    ``suite_build`` benchmark row). Streaming mode: figures read the
+    per-cell ``.acc`` / ``.series``, never a trajectory.
     """
     if _cache:
         return _cache
@@ -100,7 +108,7 @@ def get_suite():
     lowered = []
     for label, kw in STRATEGIES:
         run = build_sim_fn(strategy_name(label), CFG, N_LBS, N_INSTANCES,
-                           **kw)
+                           trace=False, warmup_steps=WARM, **kw)
         batched = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))
         lowered.append(batched.lower(rtts, n_clients, active, keys))
     compiled = compile_all(lowered)

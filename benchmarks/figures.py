@@ -1,16 +1,25 @@
 """One benchmark per paper figure (Figs 3-11). Each returns a payload
 dict and emits a CSV line; see EXPERIMENTS.md §Paper-validation for the
-side-by-side against the paper's reported numbers."""
+side-by-side against the paper's reported numbers.
+
+All figures consume the suite's streaming outputs (metric accumulators
++ per-step scalar series) — no figure needs the full per-step
+trajectories, so the suite never materializes them. `trace=True` runs
+remain available through `run_sim` for ad-hoc inspection.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
 from benchmarks.common import STRATEGIES, emit, get_suite, timed
-from repro.continuum import (client_qos_satisfaction, cumulative_regret,
-                             jain_fairness, p90_proc_latency,
-                             per_client_success, per_lb_request_distribution,
-                             request_rate_per_instance, rolling_qos)
+from repro.continuum import (client_qos_satisfaction_stream,
+                             cumulative_regret_series, jain_fairness_stream,
+                             per_client_success_stream,
+                             per_lb_request_distribution_stream,
+                             proc_latency_quantile_stream,
+                             request_rate_per_instance_stream,
+                             rolling_qos_series)
 
 
 def fig3_qos_success():
@@ -19,7 +28,8 @@ def fig3_qos_success():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            vals = [client_qos_satisfaction(suite[(s, label)], common.CFG.rho, common.WARM)
+            vals = [client_qos_satisfaction_stream(
+                        suite[(s, label)].acc, common.CFG.rho)
                     for s in common.SCENARIOS]
             out[label] = {"per_scenario": vals,
                           "mean": float(np.mean(vals)),
@@ -38,7 +48,7 @@ def fig4_fairness():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            vals = [jain_fairness(suite[(s, label)], warmup_steps=common.WARM)
+            vals = [jain_fairness_stream(suite[(s, label)].acc)
                     for s in common.SCENARIOS]
             out[label] = {"per_scenario": vals,
                           "mean": float(np.mean(vals))}
@@ -56,7 +66,7 @@ def fig5_per_client():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            ratio, present = per_client_success(suite[(1, label)], common.WARM)
+            ratio, present = per_client_success_stream(suite[(1, label)].acc)
             r = np.sort(ratio[present])
             out[label] = {
                 "min": float(r[0]), "p25": float(np.percentile(r, 25)),
@@ -80,7 +90,7 @@ def fig6_rolling_qos():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            roll = rolling_qos(suite[(1, label)], win)
+            roll = rolling_qos_series(suite[(1, label)].series, win)
             steady = roll[common.WARM:].mean()
             # convergence: first time rolling QoS reaches 95% of steady
             thresh = 0.95 * steady
@@ -104,7 +114,8 @@ def fig7_request_distribution():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            rate = request_rate_per_instance(suite[(1, label)], common.CFG.dt, common.WARM)
+            rate = request_rate_per_instance_stream(
+                suite[(1, label)].acc, common.CFG.dt)
             out[label] = {"per_instance_req_s": rate.tolist(),
                           "max": float(rate.max()), "min": float(rate.min())}
         return out
@@ -121,7 +132,7 @@ def fig8_p90_latency():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            p90 = p90_proc_latency(suite[(1, label)], common.WARM)
+            p90 = proc_latency_quantile_stream(suite[(1, label)].acc, 0.9)
             out[label] = {"per_instance_ms": (p90 * 1e3).tolist(),
                           "max_ms": float(p90.max() * 1e3)}
         return out
@@ -143,12 +154,12 @@ def fig9_single_lb():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            o = suite[(1, label)]
+            acc = suite[(1, label)].acc
             out[label] = {
-                "lb_with_local": per_lb_request_distribution(
-                    o, lb_local, common.WARM).tolist(),
-                "lb_without_local": per_lb_request_distribution(
-                    o, lb_remote, common.WARM).tolist(),
+                "lb_with_local": per_lb_request_distribution_stream(
+                    acc, lb_local).tolist(),
+                "lb_without_local": per_lb_request_distribution_stream(
+                    acc, lb_remote).tolist(),
             }
             for key in ("lb_with_local", "lb_without_local"):
                 p = np.asarray(out[label][key])
@@ -170,12 +181,13 @@ _event_cache = common.register_cache({})
 
 
 def _event_suite():
-    """{(event, label): SimOutputs} for the surge/removal events.
+    """{(event, label): StreamOutputs} for the surge/removal events.
 
     Both events share every static shape, so each strategy compiles ONE
     vmapped program with the event axis batched (surge lane varies
     n_clients, removal lane varies active) instead of one program per
-    (event, strategy) pair.
+    (event, strategy) pair. The figures only need the rolling-QoS
+    series, so the events stream too.
     """
     if _event_cache:
         return _event_cache
@@ -201,7 +213,8 @@ def _event_suite():
     strategies = STRATEGIES[:2] if common.SMOKE else STRATEGIES
     lowered = []
     for label, kw in strategies:
-        run = build_sim_fn(strategy_name(label), common.CFG, 30, 10, **kw)
+        run = build_sim_fn(strategy_name(label), common.CFG, 30, 10,
+                           trace=False, warmup_steps=common.WARM, **kw)
         batched = jax.jit(jax.vmap(run, in_axes=(None, 0, 0, None)))
         lowered.append(batched.lower(rtt, n_clients, active, key))
     for (label, kw), exe in zip(strategies,
@@ -221,7 +234,7 @@ def _event_run(event: str):
     for (ev, label), o in suite.items():
         if ev != event:
             continue
-        roll = rolling_qos(o, win)
+        roll = rolling_qos_series(o.series, win)
         pre = roll[T // 2 - win:T // 2].mean()
         dip = roll[T // 2:T // 2 + 3 * win].min()
         # never reach back past the event (smoke horizons are short)
@@ -261,7 +274,7 @@ def regret_curve():
     def compute():
         out = {}
         for label, _ in STRATEGIES:
-            reg = cumulative_regret(suite[(1, label)])
+            reg = cumulative_regret_series(suite[(1, label)].series)
             t = np.arange(1, len(reg) + 1)
             sl = slice(len(reg) // 4, None)
             slope = np.polyfit(np.log(t[sl]), np.log(reg[sl] + 1e-9), 1)[0]

@@ -52,8 +52,45 @@ def _bench_scale(K, M, ring=64):
             "maintenance_us_per_player": us_maint / K}
 
 
+def _live_bytes() -> int:
+    return sum(x.nbytes for x in jax.live_arrays())
+
+
+def _sim_memory():
+    """Streaming vs full-trajectory device residency of one simulator
+    run, measured with ``jax.live_arrays()`` — the memory claim of the
+    streaming engine as a tracked artifact (like kde_hotspot.json).
+
+    ``*_out_mb`` is what the run leaves resident (its outputs);
+    ``*_live_peak_mb`` additionally includes everything else alive at
+    measurement time. Trace-mode outputs grow O(T·K·M); streaming
+    outputs are O(K·M) + O(T) scalars.
+    """
+    from repro.continuum import SimConfig, run_sim, run_sim_stream
+
+    K, M = (30, 10) if common.SMOKE else (300, 50)
+    cfg = SimConfig(horizon=12.0 if common.SMOKE else 60.0)
+    rtt = jnp.asarray(
+        np.random.default_rng(0).uniform(0.002, 0.04, (K, M)), jnp.float32)
+
+    out = {"cell": f"K{K}_M{M}_T{cfg.num_steps}"}
+    for mode, runner in (("trace", run_sim), ("stream", run_sim_stream)):
+        base = _live_bytes()
+        res = runner("qedgeproxy", rtt, cfg, jax.random.PRNGKey(0))
+        jax.block_until_ready(jax.tree.leaves(res))
+        out_bytes = sum(x.nbytes for x in jax.tree.leaves(res)
+                        if hasattr(x, "nbytes"))
+        out[mode] = {"out_mb": out_bytes / 1e6,
+                     "live_delta_mb": (_live_bytes() - base) / 1e6}
+        del res
+    out["out_ratio"] = out["trace"]["out_mb"] / max(
+        out["stream"]["out_mb"], 1e-9)
+    return out
+
+
 def footprint():
-    payload = {"paper_scale_K30_M10": _bench_scale(30, 10)}
+    payload = {"paper_scale_K30_M10": _bench_scale(30, 10),
+               "sim_memory": _sim_memory()}
     if not common.SMOKE:
         payload["datacenter_scale_K1024_M64"] = _bench_scale(1024, 64)
     derived = (
@@ -64,6 +101,10 @@ def footprint():
             f";K1024xM64:maint="
             f"{payload['datacenter_scale_K1024_M64']['maintenance_us']:.0f}us,"
             f"state={payload['datacenter_scale_K1024_M64']['state_mb']:.0f}MB")
+    mem = payload["sim_memory"]
+    derived += (f";sim_out:trace={mem['trace']['out_mb']:.0f}MB,"
+                f"stream={mem['stream']['out_mb']:.2f}MB"
+                f"(x{mem['out_ratio']:.0f})")
     emit("footprint", payload["paper_scale_K30_M10"]["route_us"], derived,
          payload)
     return payload

@@ -1,12 +1,144 @@
-"""Metric extraction from simulator trajectories (paper §VII figures)."""
+"""Metric extraction for the paper's §VII figures.
+
+Two consumption modes:
+
+* **Trace mode** (`SimOutputs`, per-step trajectories with a leading T
+  axis): the original post-hoc functions below slice/reduce the full
+  trajectory. Memory is O(T·K·M) — fine for the testbed scale, the cap
+  at fleet scale.
+* **Streaming mode** (`MetricAccumulator` + `StepSeries`): the
+  simulator's ``lax.scan`` carries the accumulator and updates it
+  on-device every step, so nothing with a T axis wider than a scalar
+  ever materializes. Every figure's statistic is recoverable from the
+  O(K·M) accumulator plus the O(T)-scalars series; the `_stream`
+  functions mirror the trace-mode functions one-for-one
+  (tests/test_streaming.py locks the parity).
+
+The only estimate that is *approximate* in streaming mode is the
+per-instance latency quantile (Fig. 8): exact percentiles need all
+samples, so the accumulator keeps a fixed geometric histogram sketch
+per instance and the readout interpolates within a bin (~half a bin
+width of relative error, inside the figure's plotting resolution).
+"""
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.continuum.simulator import SimOutputs
+# ---------------------------------------------------------------------------
+# Streaming accumulator (carried through the simulator scan).
+# ---------------------------------------------------------------------------
+
+# Geometric bins for the processing-latency sketch: 1e-4 s .. 10 s covers
+# everything the queue model can produce (idle service ~5.5 ms, deep
+# overload ~seconds); 128 bins => ~9.5% spacing, so a within-bin readout
+# is well inside Fig. 8's resolution.
+PROC_HIST_BINS = 128
+_PROC_EDGES = np.geomspace(1e-4, 10.0, PROC_HIST_BINS - 1).astype(np.float32)
 
 
-def per_client_success(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
+class MetricAccumulator(NamedTuple):
+    """O(K·M) on-device sufficient statistics for Figs 3-9 + regret.
+
+    "Post-warmup" fields only accumulate once ``t_idx >= warmup_steps``
+    (the warmup is baked in at trace time, matching how the figure
+    harness always discards the same warmup prefix). Regret and the
+    variation budget accumulate over the full horizon, like their
+    trace-mode counterparts.
+    """
+    succ_kc: jax.Array        # (K, C) post-warmup QoS successes per client slot
+    n_kc: jax.Array           # (K, C) post-warmup issued requests per client slot
+    arrivals_m: jax.Array     # (M,)  post-warmup arrivals per instance
+    choice_counts: jax.Array  # (K, M) post-warmup issued requests per (LB, instance)
+    proc_hist: jax.Array      # (M, B) post-warmup processing-latency sketch
+    regret_k: jax.Array       # (K,)  full-horizon oracle regret partial sum
+    vb_k: jax.Array           # (K,)  empirical variation budget partial sum
+    prev_mu: jax.Array        # (K, M) previous step's true mu (variation carry)
+    steps_measured: jax.Array  # ()   f32 count of post-warmup steps
+
+
+class StepSeries(NamedTuple):
+    """Per-step scalar streams (leading axis T): the only O(T) output of
+    a streaming run. Enough for every time-resolved figure (rolling QoS
+    Fig. 6/10/11, cumulative regret §V-E)."""
+    succ: jax.Array     # (T,) fleet-wide QoS successes this step
+    issued: jax.Array   # (T,) fleet-wide issued requests this step
+    regret: jax.Array   # (T,) system regret this step
+
+
+class StreamOutputs(NamedTuple):
+    acc: MetricAccumulator
+    series: StepSeries
+
+
+def init_accumulator(K: int, M: int, C: int,
+                     bins: int = PROC_HIST_BINS) -> MetricAccumulator:
+    return MetricAccumulator(
+        succ_kc=jnp.zeros((K, C), jnp.float32),
+        n_kc=jnp.zeros((K, C), jnp.float32),
+        arrivals_m=jnp.zeros((M,), jnp.float32),
+        choice_counts=jnp.zeros((K, M), jnp.float32),
+        proc_hist=jnp.zeros((M, bins), jnp.float32),
+        regret_k=jnp.zeros((K,), jnp.float32),
+        vb_k=jnp.zeros((K,), jnp.float32),
+        prev_mu=jnp.zeros((K, M), jnp.float32),
+        steps_measured=jnp.zeros((), jnp.float32),
+    )
+
+
+def update_accumulator(
+    acc: MetricAccumulator,
+    *,
+    rewards: jax.Array,      # (K, C) 1/0 QoS outcome (unmasked)
+    issued: jax.Array,       # (K, C) bool request-issued mask
+    choices: jax.Array,      # (K, C) selected instance
+    procs: jax.Array,        # (K, C) processing-latency component
+    arrivals: jax.Array,     # (M,)  arrivals this step
+    regret: jax.Array,       # (K,)  per-player oracle regret this step
+    mu: jax.Array,           # (K, M) true success probabilities this step
+    t_idx: jax.Array,        # scalar i32 global step index
+    warmup_steps: int,
+) -> MetricAccumulator:
+    """One on-device accumulator update; everything here is O(K·M)."""
+    K, C = rewards.shape
+    M, B = acc.proc_hist.shape
+    issf = issued.astype(jnp.float32)
+    meas = (t_idx >= warmup_steps).astype(jnp.float32)
+
+    # per-instance latency sketch + per-(LB, instance) routing histogram:
+    # one flat segment-sum each, indices composed as row * width + col
+    pbin = jnp.clip(jnp.searchsorted(jnp.asarray(_PROC_EDGES), procs),
+                    0, B - 1).astype(jnp.int32)
+    hist_upd = jax.ops.segment_sum(
+        issf.ravel(), (choices * B + pbin).ravel(),
+        num_segments=M * B).reshape(M, B)
+    kidx = jnp.arange(K, dtype=jnp.int32)[:, None]
+    choice_upd = jax.ops.segment_sum(
+        issf.ravel(), (kidx * M + choices).ravel(),
+        num_segments=K * M).reshape(K, M)
+
+    vb_step = jnp.where(t_idx > 0, jnp.abs(mu - acc.prev_mu).max(-1), 0.0)
+    return MetricAccumulator(
+        succ_kc=acc.succ_kc + meas * rewards * issf,
+        n_kc=acc.n_kc + meas * issf,
+        arrivals_m=acc.arrivals_m + meas * arrivals,
+        choice_counts=acc.choice_counts + meas * choice_upd,
+        proc_hist=acc.proc_hist + meas * hist_upd,
+        regret_k=acc.regret_k + regret,
+        vb_k=acc.vb_k + vb_step,
+        prev_mu=mu,
+        steps_measured=acc.steps_measured + meas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trace-mode extraction (full SimOutputs trajectories).
+# ---------------------------------------------------------------------------
+
+def per_client_success(outs, warmup_steps: int = 0) -> np.ndarray:
     """(K, C) fraction of each client's requests meeting QoS (Fig. 5)."""
     r = np.asarray(outs.rewards)[warmup_steps:]
     m = np.asarray(outs.issued)[warmup_steps:]
@@ -14,15 +146,19 @@ def per_client_success(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
     return (r * m).sum(0) / n, m.sum(0) > 0
 
 
-def client_qos_satisfaction(outs: SimOutputs, rho: float,
+def client_qos_satisfaction(outs, rho: float,
                             warmup_steps: int = 0) -> float:
     """% of clients whose success ratio >= rho (Fig. 3)."""
     ratio, present = per_client_success(outs, warmup_steps)
+    return _qos_satisfaction(ratio, present, rho)
+
+
+def _qos_satisfaction(ratio, present, rho) -> float:
     ok = (ratio >= rho) & present
     return 100.0 * ok.sum() / max(present.sum(), 1)
 
 
-def jain_fairness(outs: SimOutputs, reachable: np.ndarray | None = None,
+def jain_fairness(outs, reachable: np.ndarray | None = None,
                   warmup_steps: int = 0) -> float:
     """Jain's index over per-instance request totals (Fig. 4).
 
@@ -31,6 +167,10 @@ def jain_fairness(outs: SimOutputs, reachable: np.ndarray | None = None,
     its host's constant rate).
     """
     x = np.asarray(outs.arrivals)[warmup_steps:].sum(0)
+    return _jain(x, reachable)
+
+
+def _jain(x: np.ndarray, reachable: np.ndarray | None) -> float:
     if reachable is not None:
         x = x[reachable]
     s = x.sum()
@@ -39,14 +179,13 @@ def jain_fairness(outs: SimOutputs, reachable: np.ndarray | None = None,
     return float(s * s / (len(x) * (x * x).sum()))
 
 
-def rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
-    """(T,) rolling overall QoS success rate (Fig. 6)."""
-    r = (np.asarray(outs.rewards) * np.asarray(outs.issued)).sum((1, 2))
-    n = np.asarray(outs.issued).sum((1, 2)).astype(np.float64)
+def _rolling_ratio(r: np.ndarray, n: np.ndarray,
+                   window_steps: int) -> np.ndarray:
+    """(T,) windowed sum(r)/sum(n) with a growing left edge."""
     T = len(r)
     out = np.zeros(T)
-    cs_r = np.concatenate([[0.0], np.cumsum(r)])
-    cs_n = np.concatenate([[0.0], np.cumsum(n)])
+    cs_r = np.concatenate([[0.0], np.cumsum(r, dtype=np.float64)])
+    cs_n = np.concatenate([[0.0], np.cumsum(n, dtype=np.float64)])
     for t in range(T):
         lo = max(0, t - window_steps + 1)
         num = cs_r[t + 1] - cs_r[lo]
@@ -55,7 +194,14 @@ def rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
     return out
 
 
-def per_lb_rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
+def rolling_qos(outs, window_steps: int) -> np.ndarray:
+    """(T,) rolling overall QoS success rate (Fig. 6)."""
+    r = (np.asarray(outs.rewards) * np.asarray(outs.issued)).sum((1, 2))
+    n = np.asarray(outs.issued).sum((1, 2)).astype(np.float64)
+    return _rolling_ratio(r, n, window_steps)
+
+
+def per_lb_rolling_qos(outs, window_steps: int) -> np.ndarray:
     """(T, K) rolling per-LB QoS success rate."""
     r = (np.asarray(outs.rewards) * np.asarray(outs.issued)).sum(2)   # (T,K)
     n = np.asarray(outs.issued).sum(2).astype(np.float64)
@@ -71,14 +217,14 @@ def per_lb_rolling_qos(outs: SimOutputs, window_steps: int) -> np.ndarray:
     return out
 
 
-def request_rate_per_instance(outs: SimOutputs, dt: float,
+def request_rate_per_instance(outs, dt: float,
                               warmup_steps: int = 0) -> np.ndarray:
     """(M,) average req/s per instance (Fig. 7)."""
     a = np.asarray(outs.arrivals)[warmup_steps:]
     return a.sum(0) / (a.shape[0] * dt)
 
 
-def p90_proc_latency(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
+def p90_proc_latency(outs, warmup_steps: int = 0) -> np.ndarray:
     """(M,) p90 of processing latency per instance (Fig. 8)."""
     proc = np.asarray(outs.proc_lat)[warmup_steps:]
     m = np.asarray(outs.issued)[warmup_steps:]
@@ -92,7 +238,7 @@ def p90_proc_latency(outs: SimOutputs, warmup_steps: int = 0) -> np.ndarray:
     return out
 
 
-def per_lb_request_distribution(outs: SimOutputs, lb: int,
+def per_lb_request_distribution(outs, lb: int,
                                 warmup_steps: int = 0) -> np.ndarray:
     """(M,) share of LB `lb`'s requests per instance (Fig. 9)."""
     m = np.asarray(outs.issued)[warmup_steps:, lb]
@@ -102,12 +248,81 @@ def per_lb_request_distribution(outs: SimOutputs, lb: int,
     return counts / max(counts.sum(), 1.0)
 
 
-def cumulative_regret(outs: SimOutputs) -> np.ndarray:
+def cumulative_regret(outs) -> np.ndarray:
     """(T,) system regret sum_k R_k(t) (Eq. 9)."""
     return np.cumsum(np.asarray(outs.regret).sum(1))
 
 
-def variation_budget_emp(outs: SimOutputs) -> np.ndarray:
+def variation_budget_emp(outs) -> np.ndarray:
     """(K,) empirical V_k(T) from the true-mu trajectory (Def. 1)."""
     mu = np.asarray(outs.true_mu)
     return np.abs(np.diff(mu, axis=0)).max(-1).sum(0)
+
+
+# ---------------------------------------------------------------------------
+# Streaming extraction (MetricAccumulator / StepSeries).
+# ---------------------------------------------------------------------------
+
+def per_client_success_stream(acc: MetricAccumulator):
+    """(K, C) per-client success ratio + presence mask (Fig. 5)."""
+    s = np.asarray(acc.succ_kc)
+    n = np.asarray(acc.n_kc)
+    return s / np.maximum(n, 1), n > 0
+
+
+def client_qos_satisfaction_stream(acc: MetricAccumulator,
+                                   rho: float) -> float:
+    ratio, present = per_client_success_stream(acc)
+    return _qos_satisfaction(ratio, present, rho)
+
+
+def jain_fairness_stream(acc: MetricAccumulator,
+                         reachable: np.ndarray | None = None) -> float:
+    return _jain(np.asarray(acc.arrivals_m), reachable)
+
+
+def request_rate_per_instance_stream(acc: MetricAccumulator,
+                                     dt: float) -> np.ndarray:
+    steps = max(float(acc.steps_measured), 1.0)
+    return np.asarray(acc.arrivals_m) / (steps * dt)
+
+
+def proc_latency_quantile_stream(acc: MetricAccumulator,
+                                 q: float = 0.9) -> np.ndarray:
+    """(M,) q-quantile of processing latency from the histogram sketch
+    (Fig. 8). Bin-resolution approximation of ``p90_proc_latency``."""
+    hist = np.asarray(acc.proc_hist, np.float64)      # (M, B)
+    M, B = hist.shape
+    centers = np.empty(B)
+    centers[0] = _PROC_EDGES[0]
+    centers[1:-1] = np.sqrt(_PROC_EDGES[:-1] * _PROC_EDGES[1:])
+    centers[-1] = _PROC_EDGES[-1]
+    n = hist.sum(1)
+    rank = q * np.maximum(n - 1.0, 0.0)
+    cum = hist.cumsum(1)
+    idx = np.argmax(cum > rank[:, None], axis=1)
+    return np.where(n > 0, centers[idx], 0.0)
+
+
+def per_lb_request_distribution_stream(acc: MetricAccumulator,
+                                       lb: int) -> np.ndarray:
+    counts = np.asarray(acc.choice_counts, np.float64)[lb]
+    return counts / max(counts.sum(), 1.0)
+
+
+def rolling_qos_series(series: StepSeries, window_steps: int) -> np.ndarray:
+    """(T,) rolling overall QoS success rate from the per-step streams —
+    the exact streaming counterpart of ``rolling_qos`` (Fig. 6)."""
+    return _rolling_ratio(np.asarray(series.succ),
+                          np.asarray(series.issued).astype(np.float64),
+                          window_steps)
+
+
+def cumulative_regret_series(series: StepSeries) -> np.ndarray:
+    """(T,) cumulative system regret from the per-step stream."""
+    return np.cumsum(np.asarray(series.regret, np.float64))
+
+
+def variation_budget_stream(acc: MetricAccumulator) -> np.ndarray:
+    """(K,) empirical V_k(T) partial sum (Def. 1)."""
+    return np.asarray(acc.vb_k)

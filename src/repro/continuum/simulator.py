@@ -19,29 +19,47 @@ closed form ``mu = Phi(ln((tau - rtt)/((q+1) s_m)) / sigma)``.
 The whole horizon runs in one ``lax.scan``; strategies are closures
 chosen at trace time (QEdgeProxy / proxy-mity / Dec-SARSA).
 
-Hot-path structure: a strategy that provides ``record_rings`` /
-``record_feedback`` gets the fused step. Rounds still execute in
-order — selection, the queue recursion and the cheap (K, M) feedback
-control (consecutive errors, cooldown trips, weight renormalization)
-stay interleaved, so an in-step trip steers the remaining rounds
-exactly as with sequential ``record`` — but the expensive
-(K, M, R)/(K, Rq) ring-buffer writes are deferred and land in ONE
-fused scatter per step (``repro.core.bandit.record_rings_batch``)
-instead of C sequential scatter rounds. The fused and sequential
-paths are bit-for-bit identical (tests/test_bandit_batch.py).
-Maintenance runs on a fixed-size player group per step (balanced
-staggered clocks), so the O(K·M·R) estimate is paid for ~K/H_d
-players instead of all K.
+Engine structure (streaming-first):
+
+* **Rounds are a ``lax.scan``**, not a Python unroll: the round body is
+  traced/compiled once instead of C times, which is most of the old
+  compile wall. Selection, the queue recursion and the cheap (K, M)
+  feedback control stay interleaved round by round, so an in-step trip
+  steers the remaining rounds exactly as before; with the fused request
+  path the expensive (K, M, R)/(K, Rq) ring writes are still deferred
+  into ONE ``record_rings_batch`` scatter per step (its rank/offset
+  arithmetic is round-order-free). Fused and sequential paths remain
+  bit-for-bit identical (tests/test_bandit_batch.py).
+* **Metrics stream by default-capable mode**: with ``trace=False`` the
+  scan carries a ``MetricAccumulator`` (O(K·M) sufficient statistics
+  for Figs 3-9 + regret + variation budget) and emits only O(T) scalar
+  ``StepSeries`` — memory is O(K·M), independent of the horizon.
+  ``trace=True`` is the explicit debug mode that materializes the full
+  (T, K, C)/(T, K, M) ``SimOutputs`` trajectories as before.
+* **Donated inputs / chunked horizons**: ``run_sim``/``run_sim_batch``
+  donate the O(T) input buffers (n_clients, active, key) to XLA, and
+  ``run_sim_stream(chunk_steps=...)`` drives the scan in fixed-size
+  time chunks with a donated carry, so arbitrarily long horizons run
+  in bounded device memory.
+* Maintenance runs on a fixed-size player group per step (balanced
+  staggered clocks), so the O(K·M·R) estimate is paid for ~K/H_d
+  players instead of all K.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.continuum import metrics as qm
+from repro.continuum.metrics import (MetricAccumulator, StepSeries,
+                                     StreamOutputs)
 from repro.core import bandit as qb
 from repro.core import baselines as bl
 from repro.core.kde import normal_cdf
@@ -72,7 +90,7 @@ class SimConfig:
 
 
 class SimOutputs(NamedTuple):
-    """Per-step trajectories (leading axis T)."""
+    """Per-step trajectories (leading axis T) — ``trace=True`` only."""
     rewards: jax.Array      # (T, K, C) 1/0 QoS success per client slot
     issued: jax.Array       # (T, K, C) request-issued mask
     choices: jax.Array      # (T, K, C) selected instance
@@ -242,24 +260,32 @@ def make_strategy(name: str, cfg: SimConfig, K: int, M: int, **kw):
 # Main simulation loop.
 # ---------------------------------------------------------------------------
 
-def build_sim_fn(
+def build_sim_parts(
     strategy_name: str,
     cfg: SimConfig,
     K: int,
     M: int,
     fused: bool = True,
+    trace: bool = True,
+    warmup_steps: int = 0,
     **strategy_kw,
 ):
-    """Build a traceable ``run(rtt, n_clients, active, key) -> SimOutputs``.
+    """The engine's two traceable halves, shared by every driver.
 
-    Exposed separately from ``run_sim`` so harnesses can transform it:
-    benchmarks/common.py vmaps the scenario axis and compiles one
-    program for all seeds of a strategy (``run_sim_batch``).
+    Returns ``(init_fn, step_fn)``:
 
-    ``fused=False`` forces the pre-refactor step structure (C sequential
-    record rounds + full-width maintenance gated only by ``lb_mask``)
-    even for strategies that support the fused path — kept as the
-    reference point for benchmarks/bandit_scale.py.
+    * ``init_fn(rtt, active0, key) -> (carry0, keys)`` — strategy state,
+      empty queue/accumulator, the staggered maintenance groups, and the
+      full-horizon (T, 2) per-step key array (small; chunk drivers slice
+      it so chunking never replays or forks the PRNG stream).
+    * ``step_fn(rtt, s_m, carry, xs) -> (carry, ys)`` — one simulator
+      step. ``xs = (t_idx, n_clients_t, active_t, key_t)`` with a
+      *global* ``t_idx``, so a chunked scan is bit-identical to one
+      full-horizon scan. ``ys`` is a full ``SimOutputs`` row in trace
+      mode, a ``StepSeries`` row otherwise.
+
+    The carry is ``(state, queue, prev_active, acc, groups)`` with
+    ``acc=None`` in trace mode.
     """
     T, C = cfg.num_steps, cfg.max_clients
     strat = make_strategy(strategy_name, cfg, K, M, **strategy_kw)
@@ -268,13 +294,9 @@ def build_sim_fn(
     n_phases = max(cfg.maint_every, 1)
     group_size = -(-K // n_phases)      # ceil: players per decision tick
 
-    def run(rtt, n_clients, active, key, service_time=None):
-        # service_time may be a traced scalar so harnesses can sweep the
-        # utilization axis (benchmarks/beyond.py vmaps it) without one
-        # compile per operating point; None keeps the static default.
-        s_m = cfg.service_time if service_time is None else service_time
+    def init_fn(rtt, active0, key):
         k_init, k_phase, k_scan = jax.random.split(key, 3)
-        s0 = strat["init"](rtt, active[0], k_init)
+        s0 = strat["init"](rtt, active0, k_init)
         q0 = jnp.zeros((M,), jnp.float32)
         # Staggered H_d clocks (asynchronous DaemonSet timers): a random
         # permutation split into H_d balanced groups. Fixed group size
@@ -286,122 +308,215 @@ def build_sim_fn(
         groups = jnp.concatenate(
             [perm, jnp.full((pad,), K, jnp.int32)]).reshape(
                 n_phases, group_size)
+        acc = None if trace else qm.init_accumulator(K, M, C)
+        keys = jax.random.split(k_scan, T)
+        return (s0, q0, active0, acc, groups), keys
 
-        def step(carry, xs):
-            state, q, prev_active = carry
-            t_idx, nc, act, k_step = xs
-            t = t_idx.astype(jnp.float32) * cfg.dt
+    def step_fn(rtt, s_m, carry, xs):
+        state, q, prev_active, acc, groups = carry
+        t_idx, nc, act, k_step = xs
+        t = t_idx.astype(jnp.float32) * cfg.dt
 
-            # --- placement events (paper Alg 3/4 trigger) ---
-            changed = jnp.any(act != prev_active)
-            state = jax.lax.cond(
-                changed,
-                lambda s: strat["on_activity"](s, act, rtt, t),
-                lambda s: s,
-                state)
+        # --- placement events (paper Alg 3/4 trigger) ---
+        changed = jnp.any(act != prev_active)
+        state = jax.lax.cond(
+            changed,
+            lambda s: strat["on_activity"](s, act, rtt, t),
+            lambda s: s,
+            state)
 
-            # --- maintenance: only the player group whose clock fires ---
-            group = groups[t_idx % n_phases]
-            if subset_maint:
-                state = strat["maintain_subset"](state, rtt, t, group)
-            else:
-                lb_mask = jnp.zeros((K,), bool).at[group].set(
-                    True, mode="drop")
-                state = strat["maintain"](state, rtt, t, lb_mask)
+        # --- maintenance: only the player group whose clock fires ---
+        group = groups[t_idx % n_phases]
+        if subset_maint:
+            state = strat["maintain_subset"](state, rtt, t, group)
+        else:
+            lb_mask = jnp.zeros((K,), bool).at[group].set(
+                True, mode="drop")
+            state = strat["maintain"](state, rtt, t, lb_mask)
 
-            mu_true = _true_mu(rtt, q, cfg, s_m)         # (K, M) at step start
-            w_now = strat["weights"](state)
-            reg = step_regret(w_now, mu_true, act)
-            q_start = q
+        mu_true = _true_mu(rtt, q, cfg, s_m)         # (K, M) at step start
+        w_now = strat["weights"](state)
+        reg = step_regret(w_now, mu_true, act)
+        q_start = q
 
-            mask_all = jnp.arange(C)[None, :] < nc[:, None]        # (K, C)
-            # service is continuous: drain dt/C of capacity per round so
-            # in-step arrivals and departures interleave (a step-end-only
-            # drain would overstate in-step queueing by ~C/2 requests)
-            served_per_round = cfg.dt / (C * s_m)
+        mask_all = jnp.arange(C)[None, :] < nc[:, None]        # (K, C)
+        # service is continuous: drain dt/C of capacity per round so
+        # in-step arrivals and departures interleave (a step-end-only
+        # drain would overstate in-step queueing by ~C/2 requests)
+        served_per_round = cfg.dt / (C * s_m)
+        kidx = jnp.arange(K)
 
+        # --- request rounds: a scan, traced once instead of C times.
+        # Rounds still execute in order — selection, the queue recursion
+        # and the cheap (K, M) feedback control are interleaved, so an
+        # in-step cooldown trip steers the remaining rounds exactly as
+        # with per-round `record`. With the fused path the expensive
+        # (K, M, R)/(K, Rq) ring writes are deferred and land in ONE
+        # fused scatter per step (`record_rings_batch`); the sequential
+        # fallback lets the strategy read its own per-request state
+        # between rounds (Dec-SARSA). Bit-for-bit identical paths
+        # (tests/test_bandit_batch.py). ---
+        def round_body(rc, r):
+            state, q, arrivals = rc
+            k_r = jax.random.fold_in(k_step, r)
+            k_sel, k_noise = jax.random.split(k_r)
+            mask = r < nc                                      # (K,)
+            choice, state = strat["select"](state, k_sel, t, act)
+            z = jnp.exp(
+                cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
+            q_seen = q[choice]
+            proc = (q_seen + 1.0) * s_m * z
+            lat = rtt[kidx, choice] + proc
             if batched_record:
-                # --- fused request path: rounds still run in order
-                # (selection and the cheap (K, M) feedback control stay
-                # interleaved, so in-step cooldown trips steer the
-                # remaining rounds exactly like sequential `record`),
-                # but the expensive (K, M, R)/(K, Rq) ring writes are
-                # deferred and land in ONE fused scatter per step.
-                # Bit-for-bit vs the sequential fallback below
-                # (tests/test_bandit_batch.py locks it).
-                ch_rounds, lat_rounds, proc_rounds = [], [], []
-                arrivals = jnp.zeros((M,), jnp.float32)
-                for r in range(C):      # unrolled: C is small & static
-                    k_r = jax.random.fold_in(k_step, r)
-                    k_sel, k_noise = jax.random.split(k_r)
-                    mask = mask_all[:, r]
-                    choice, state = strat["select"](state, k_sel, t, act)
-                    z = jnp.exp(
-                        cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
-                    q_seen = q[choice]
-                    proc = (q_seen + 1.0) * s_m * z
-                    lat = rtt[jnp.arange(K), choice] + proc
-                    state = strat["record_feedback"](state, choice, lat,
-                                                     t, mask)
-                    arr_r = jax.ops.segment_sum(
-                        mask.astype(jnp.float32), choice, num_segments=M)
-                    q = jnp.maximum(q + arr_r - served_per_round, 0.0)
-                    arrivals = arrivals + arr_r
-                    ch_rounds.append(choice)
-                    lat_rounds.append(lat)
-                    proc_rounds.append(proc)
-                choices = jnp.stack(ch_rounds, 1)                  # (K, C)
-                lats = jnp.stack(lat_rounds, 1)
-                procs = jnp.stack(proc_rounds, 1)
-                state = strat["record_rings"](state, choices, lats, t,
-                                              mask_all)
-                rewards = (lats <= cfg.tau).astype(jnp.float32)
-                issued = mask_all
+                state = strat["record_feedback"](state, choice, lat,
+                                                 t, mask)
             else:
-                # --- sequential fallback: the strategy reads its own
-                # per-request state between rounds (Dec-SARSA) ---
-                rewards = jnp.zeros((K, C), jnp.float32)
-                issued = jnp.zeros((K, C), bool)
-                choices = jnp.zeros((K, C), jnp.int32)
-                lats = jnp.zeros((K, C), jnp.float32)
-                procs = jnp.zeros((K, C), jnp.float32)
-                arrivals = jnp.zeros((M,), jnp.float32)
+                state = strat["record"](state, choice, lat, t, mask)
+            arr_r = jax.ops.segment_sum(
+                mask.astype(jnp.float32), choice, num_segments=M)
+            q = jnp.maximum(q + arr_r - served_per_round, 0.0)
+            return (state, q, arrivals + arr_r), (choice, lat, proc)
 
-                for r in range(C):      # unrolled: C is small & static
-                    k_r = jax.random.fold_in(k_step, r)
-                    k_sel, k_noise = jax.random.split(k_r)
-                    mask = r < nc                              # (K,)
-                    choice, state = strat["select"](state, k_sel, t, act)
-                    z = jnp.exp(
-                        cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
-                    q_seen = q[choice]
-                    proc = (q_seen + 1.0) * s_m * z
-                    lat = rtt[jnp.arange(K), choice] + proc
-                    state = strat["record"](state, choice, lat, t, mask)
-                    arr_r = jax.ops.segment_sum(
-                        mask.astype(jnp.float32), choice, num_segments=M)
-                    q = jnp.maximum(q + arr_r - served_per_round, 0.0)
-                    arrivals = arrivals + arr_r
-                    rewards = rewards.at[:, r].set(
-                        (lat <= cfg.tau).astype(jnp.float32))
-                    issued = issued.at[:, r].set(mask)
-                    choices = choices.at[:, r].set(choice)
-                    lats = lats.at[:, r].set(lat)
-                    procs = procs.at[:, r].set(proc)
+        (state, q, arrivals), (ch_r, lat_r, proc_r) = jax.lax.scan(
+            round_body, (state, q, jnp.zeros((M,), jnp.float32)),
+            jnp.arange(C))
+        choices = ch_r.T                                       # (K, C)
+        lats = lat_r.T
+        procs = proc_r.T
+        if batched_record:
+            state = strat["record_rings"](state, choices, lats, t,
+                                          mask_all)
+        rewards = (lats <= cfg.tau).astype(jnp.float32)
+        issued = mask_all
 
-            out = SimOutputs(
+        if trace:
+            ys = SimOutputs(
                 rewards=rewards, issued=issued, choices=choices,
                 latency=lats, proc_lat=procs, arrivals=arrivals,
                 queue=q_start, weights=w_now, true_mu=mu_true, regret=reg,
                 eps=strat["eps"](state))
-            return (state, q, act), out
+        else:
+            acc = qm.update_accumulator(
+                acc, rewards=rewards, issued=issued, choices=choices,
+                procs=procs, arrivals=arrivals, regret=reg, mu=mu_true,
+                t_idx=t_idx, warmup_steps=warmup_steps)
+            issf = issued.astype(jnp.float32)
+            ys = StepSeries(succ=(rewards * issf).sum(),
+                            issued=issf.sum(), regret=reg.sum())
+        return (state, q, act, acc, groups), ys
 
-        keys = jax.random.split(k_scan, T)
+    return init_fn, step_fn
+
+
+def build_sim_fn(
+    strategy_name: str,
+    cfg: SimConfig,
+    K: int,
+    M: int,
+    fused: bool = True,
+    trace: bool = True,
+    warmup_steps: int = 0,
+    **strategy_kw,
+):
+    """Build a traceable ``run(rtt, n_clients, active, key)``.
+
+    Exposed separately from ``run_sim`` so harnesses can transform it:
+    benchmarks/common.py vmaps the scenario axis and compiles one
+    program for all seeds of a strategy (``run_sim_batch``).
+
+    ``trace=True`` returns full ``SimOutputs`` trajectories (O(T·K·M)
+    memory — the debug/inspection mode); ``trace=False`` returns
+    ``StreamOutputs`` (``MetricAccumulator`` + O(T) scalar series), the
+    fleet-scale mode. ``warmup_steps`` gates the post-warmup
+    accumulator fields and is ignored in trace mode.
+
+    ``fused=False`` forces the pre-refactor step structure (per-round
+    ring scatters + full-width maintenance gated only by ``lb_mask``)
+    even for strategies that support the fused path — kept as the
+    reference point for benchmarks/bandit_scale.py.
+    """
+    T = cfg.num_steps
+    init_fn, step_fn = build_sim_parts(
+        strategy_name, cfg, K, M, fused=fused, trace=trace,
+        warmup_steps=warmup_steps, **strategy_kw)
+
+    def run(rtt, n_clients, active, key, service_time=None):
+        # service_time may be a traced scalar so harnesses can sweep the
+        # utilization axis (benchmarks/beyond.py vmaps it) without one
+        # compile per operating point; None keeps the static default.
+        s_m = cfg.service_time if service_time is None else service_time
+        carry0, keys = init_fn(rtt, active[0], key)
         xs = (jnp.arange(T), n_clients, active, keys)
-        (_, _, _), outs = jax.lax.scan(step, (s0, q0, active[0]), xs)
-        return outs
+        carry, ys = jax.lax.scan(
+            lambda c, x: step_fn(rtt, s_m, c, x), carry0, xs)
+        if trace:
+            return ys
+        return StreamOutputs(acc=carry[3], series=ys)
 
     return run
+
+
+def build_sim_chunks(
+    strategy_name: str,
+    cfg: SimConfig,
+    K: int,
+    M: int,
+    fused: bool = True,
+    warmup_steps: int = 0,
+    **strategy_kw,
+):
+    """Chunked-horizon streaming: ``(init_fn, chunk_fn)``.
+
+    ``chunk_fn(rtt, carry, t_idx, n_clients, active, keys)`` scans the
+    given time slice and returns ``(carry, StepSeries)``. Jit it with
+    ``donate_argnums=(1,)`` (and the slice args) so the carry buffers
+    are reused in place and peak device memory stays O(K·M) + one
+    chunk of O(T) scalars regardless of the horizon. ``run_sim_stream``
+    is the reference driver.
+    """
+    init_fn, step_fn = build_sim_parts(
+        strategy_name, cfg, K, M, fused=fused, trace=False,
+        warmup_steps=warmup_steps, **strategy_kw)
+
+    def chunk_fn(rtt, carry, t_idx, n_clients, active, keys,
+                 service_time=None):
+        s_m = cfg.service_time if service_time is None else service_time
+        return jax.lax.scan(
+            lambda c, x: step_fn(rtt, s_m, c, x), carry,
+            (t_idx, n_clients, active, keys))
+
+    return init_fn, chunk_fn
+
+
+# The O(T) input buffers (n_clients, active) are donated, but ONLY when
+# this module constructed them itself (caller passed None): donating a
+# caller-supplied array would invalidate it under the caller's feet on
+# backends that implement donation, and callers routinely reuse one
+# n_clients/active across strategies. rtt and key are never donated
+# (rtt is shared across strategies; key is 8 bytes). Donated buffers
+# XLA cannot alias to an output draw a UserWarning per call; that is
+# the expected case here (they are freed, not aliased), so the
+# dispatch silences exactly that message.
+
+@contextlib.contextmanager
+def _quiet_donation():
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+def _default_inputs(T, K, M, n_clients, active):
+    """Fill defaults; donate exactly the buffers we created (argnums
+    1 = n_clients, 2 = active in every driver signature below)."""
+    donate = []
+    if n_clients is None:
+        n_clients = jnp.full((T, K), 4, jnp.int32)
+        donate.append(1)
+    if active is None:
+        active = jnp.ones((T, M), bool)
+        donate.append(2)
+    return n_clients, active, tuple(donate)
 
 
 def run_sim(
@@ -413,15 +528,19 @@ def run_sim(
     active: jax.Array | None = None,      # (T, M) bool instance liveness
     **strategy_kw,
 ) -> SimOutputs:
-    """Run one topology × strategy for the full horizon. jit-compiled."""
+    """Run one topology × strategy for the full horizon. jit-compiled.
+
+    Full-trajectory (trace) mode. Defaulted ``n_clients``/``active``
+    buffers are donated to the computation; caller-supplied arrays are
+    left untouched.
+    """
     K, M = rtt.shape
     T = cfg.num_steps
-    if n_clients is None:
-        n_clients = jnp.full((T, K), 4, jnp.int32)
-    if active is None:
-        active = jnp.ones((T, M), bool)
+    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
     run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
-    return jax.jit(run)(rtt, n_clients, active, key)
+    with _quiet_donation():
+        return jax.jit(run, donate_argnums=donate)(
+            rtt, n_clients, active, key)
 
 
 def run_sim_batch(
@@ -438,14 +557,65 @@ def run_sim_batch(
     Returns SimOutputs with a leading (S,) axis on every field. The
     evaluation grid's per-strategy seeds share every static shape, so
     batching them removes S-1 compilations and lets XLA overlap the
-    scenario lanes.
+    scenario lanes. Defaulted ``n_clients``/``active`` are donated.
     """
     S, K, M = rtts.shape
     T = cfg.num_steps
-    if n_clients is None:
-        n_clients = jnp.full((T, K), 4, jnp.int32)
-    if active is None:
-        active = jnp.ones((T, M), bool)
+    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
     run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
-    return jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
-        rtts, n_clients, active, keys)
+    with _quiet_donation():
+        return jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)),
+                       donate_argnums=donate)(rtts, n_clients, active, keys)
+
+
+def run_sim_stream(
+    strategy_name: str,
+    rtt: jax.Array,              # (K, M)
+    cfg: SimConfig,
+    key: jax.Array,
+    n_clients: jax.Array | None = None,   # (T, K)
+    active: jax.Array | None = None,      # (T, M)
+    warmup_steps: int = 0,
+    chunk_steps: int | None = None,
+    **strategy_kw,
+) -> StreamOutputs:
+    """Streaming run: O(K·M) device memory, O(T) scalar series on host.
+
+    ``chunk_steps`` bounds the compiled scan length: the horizon is
+    driven in fixed-size chunks whose carry (strategy state + queue +
+    accumulator) is donated back to the next chunk, so device memory is
+    independent of ``cfg.horizon``. A trailing remainder chunk compiles
+    one extra program; pick ``chunk_steps`` dividing ``num_steps`` to
+    avoid it. Chunked and unchunked runs follow the identical per-step
+    program on the identical PRNG stream.
+    """
+    K, M = rtt.shape
+    T = cfg.num_steps
+    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    if chunk_steps is None or chunk_steps >= T:
+        run = build_sim_fn(strategy_name, cfg, K, M, trace=False,
+                           warmup_steps=warmup_steps, **strategy_kw)
+        with _quiet_donation():
+            return jax.jit(run, donate_argnums=donate)(
+                rtt, n_clients, active, key)
+
+    init_fn, chunk_fn = build_sim_chunks(
+        strategy_name, cfg, K, M, warmup_steps=warmup_steps, **strategy_kw)
+    carry, keys = jax.jit(init_fn)(rtt, active[0], key)
+    # the carry aliases 1:1 to the chunk's output carry, so donation
+    # reuses the state/accumulator buffers in place every chunk
+    run_chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+    parts = []
+    for lo in range(0, T, chunk_steps):
+        hi = min(lo + chunk_steps, T)
+        carry, ys = run_chunk(
+            rtt, carry, jnp.arange(lo, hi), n_clients[lo:hi],
+            active[lo:hi], keys[lo:hi])
+        parts.append(ys)    # on-device O(chunk) scalars; the loop only
+        # depends on the donated carry, so dispatch runs ahead and the
+        # single device_get below drains everything at once
+    parts = jax.device_get(parts)
+    series = StepSeries(*(np.concatenate([np.asarray(getattr(p, f))
+                                          for p in parts])
+                          for f in StepSeries._fields))
+    return StreamOutputs(acc=carry[3], series=series)

@@ -311,11 +311,20 @@ def record_batch(
     """Ingest all C requests of a step: one fused ring scatter plus an
     in-order replay of the cheap (K, M) control flow. Bit-for-bit
     equal to C sequential ``record`` calls (tests/test_bandit_batch.py).
+
+    The replay is a ``lax.scan`` over the C columns, so the control
+    step is traced once instead of C times (same trick as the
+    simulator's round loop — the compile-cost term in C goes away
+    while execution order, and therefore every float, is unchanged).
     """
     state = record_rings_batch(state, params, choices, latencies, t, mask)
-    for c in range(choices.shape[1]):   # C is small & static; (K, M) ops
-        state = record_feedback(
-            state, params, choices[:, c], latencies[:, c], t, mask[:, c])
+
+    def replay(st, x):
+        c, l, m = x
+        return record_feedback(st, params, c, l, t, m), None
+
+    state, _ = jax.lax.scan(
+        replay, state, (choices.T, latencies.T, mask.T))
     return state
 
 

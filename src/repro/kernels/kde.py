@@ -8,7 +8,10 @@ fleet-wide it is a dense (K·M, R) fused reduction). Each row is one
 
     out[r] = (1/n_r) * sum_i mask[r,i] * Phi((tau - lat[r,i]) / h[r])
 
-against precomputed bandwidths. ``fused_maintenance`` goes further and
+against precomputed bandwidths. The bool mask is passed into the
+kernel as-is (the single f32 conversion happens in the kernel body);
+CI exercises the interpret path only — if a Mosaic version ever
+rejects i1 block inputs, cast to int8 at the call sites. ``fused_maintenance`` goes further and
 does the whole per-row maintenance estimate in a single VMEM pass:
 Silverman bandwidth (masked mean/var), the Gaussian-CDF success
 probability at tau, AND the masked rho-quantile of the processing
@@ -74,7 +77,7 @@ def kde_success_prob(
         out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((padded, 1), jnp.float32),
         interpret=interpret,
-    )(tau_arr, lat, mask.astype(jnp.float32), bandwidth[:, None])
+    )(tau_arr, lat, mask, bandwidth[:, None])
     return out[:rows, 0]
 
 
@@ -165,5 +168,5 @@ def fused_maintenance(
             jax.ShapeDtypeStruct((padded, 1), jnp.float32),
         ),
         interpret=interpret,
-    )(scal, lat, mask.astype(jnp.float32), rtt[:, None])
+    )(scal, lat, mask, rtt[:, None])
     return mu[:rows, 0], q[:rows, 0]

@@ -1,0 +1,166 @@
+"""Streaming-vs-trace equivalence for the simulation engine.
+
+The same seed is run both ways; every streaming accumulator / series
+statistic must match the corresponding metric computed post-hoc from
+the full ``trace=True`` trajectory to float32 tolerance. Counts (QoS
+successes, arrivals, routing histograms) are integer-valued float32
+sums, so they must match exactly; regret and the variation budget are
+genuine float accumulations, so they get float32 tolerance; the
+latency-quantile sketch is bin-resolution by design and is checked
+against the exact percentile within the documented bin spacing.
+
+The chunked driver must reproduce the unchunked streaming run exactly:
+same per-step program, same PRNG stream, only the scan boundaries move.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.continuum import (SimConfig, client_qos_satisfaction,
+                             client_qos_satisfaction_stream,
+                             cumulative_regret, cumulative_regret_series,
+                             jain_fairness, jain_fairness_stream,
+                             make_topology, p90_proc_latency,
+                             per_client_success, per_client_success_stream,
+                             per_lb_request_distribution,
+                             per_lb_request_distribution_stream,
+                             proc_latency_quantile_stream,
+                             request_rate_per_instance,
+                             request_rate_per_instance_stream, rolling_qos,
+                             rolling_qos_series, run_sim, run_sim_stream,
+                             variation_budget_emp, variation_budget_stream)
+
+CFG = SimConfig(horizon=15.0)
+WARM = 50                       # 5 s of the 15 s horizon
+K, M = 8, 4
+WIN = int(CFG.window / CFG.dt)
+
+
+@pytest.fixture(scope="module")
+def rtt():
+    return make_topology(jax.random.PRNGKey(2), K, M).lb_instance_rtt()
+
+
+def _both(rtt, name, **kw):
+    # run_sim donates its inputs: hand each run its own key array
+    trace = run_sim(name, rtt, CFG, jax.random.PRNGKey(5), **kw)
+    stream = run_sim_stream(name, rtt, CFG, jax.random.PRNGKey(5),
+                            warmup_steps=WARM, **kw)
+    return trace, stream
+
+
+@pytest.fixture(scope="module")
+def qep(rtt):
+    return _both(rtt, "qedgeproxy")
+
+
+@pytest.fixture(scope="module")
+def sarsa(rtt):
+    """Dec-SARSA exercises the sequential (non-fused) streaming path."""
+    return _both(rtt, "dec_sarsa")
+
+
+def test_per_client_success_matches(qep):
+    trace, stream = qep
+    want, want_present = per_client_success(trace, WARM)
+    got, got_present = per_client_success_stream(stream.acc)
+    np.testing.assert_array_equal(got_present, want_present)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_qos_satisfaction_matches(qep):
+    trace, stream = qep
+    assert client_qos_satisfaction_stream(stream.acc, CFG.rho) == \
+        client_qos_satisfaction(trace, CFG.rho, WARM)
+
+
+def test_arrival_histogram_matches(qep):
+    trace, stream = qep
+    want = np.asarray(trace.arrivals)[WARM:].sum(0)
+    np.testing.assert_allclose(np.asarray(stream.acc.arrivals_m), want,
+                               atol=1e-5)
+    assert jain_fairness_stream(stream.acc) == \
+        pytest.approx(jain_fairness(trace, warmup_steps=WARM), rel=1e-6)
+    np.testing.assert_allclose(
+        request_rate_per_instance_stream(stream.acc, CFG.dt),
+        request_rate_per_instance(trace, CFG.dt, WARM), rtol=1e-6)
+
+
+def test_choice_histogram_matches(qep):
+    trace, stream = qep
+    ch = np.asarray(trace.choices)[WARM:]
+    m = np.asarray(trace.issued)[WARM:]
+    for lb in range(K):
+        want = np.bincount(ch[:, lb][m[:, lb]], minlength=M)
+        np.testing.assert_allclose(
+            np.asarray(stream.acc.choice_counts)[lb], want, atol=1e-5,
+            err_msg=f"lb {lb}")
+        np.testing.assert_allclose(
+            per_lb_request_distribution_stream(stream.acc, lb),
+            per_lb_request_distribution(trace, lb, WARM), atol=1e-6)
+
+
+def test_rolling_qos_matches(qep):
+    trace, stream = qep
+    np.testing.assert_allclose(rolling_qos_series(stream.series, WIN),
+                               rolling_qos(trace, WIN), atol=1e-6)
+
+
+def test_regret_matches(qep):
+    trace, stream = qep
+    want = cumulative_regret(trace)
+    got = cumulative_regret_series(stream.series)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # the (K,) accumulator splits the same total by player
+    np.testing.assert_allclose(np.asarray(stream.acc.regret_k).sum(),
+                               want[-1], rtol=1e-4, atol=1e-4)
+
+
+def test_variation_budget_matches(qep):
+    trace, stream = qep
+    np.testing.assert_allclose(variation_budget_stream(stream.acc),
+                               variation_budget_emp(trace),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_latency_sketch_within_bin_resolution(qep):
+    trace, stream = qep
+    want = p90_proc_latency(trace, WARM)
+    got = proc_latency_quantile_stream(stream.acc, 0.9)
+    present = np.asarray(stream.acc.arrivals_m) > 0
+    # geometric bins at ~9.5% spacing: the sketch readout may be off by
+    # up to one bin from the interpolated exact percentile
+    np.testing.assert_allclose(got[present], want[present], rtol=0.15)
+    assert (got[~present] == 0).all()
+
+
+def test_steps_measured(qep):
+    _, stream = qep
+    assert float(stream.acc.steps_measured) == CFG.num_steps - WARM
+
+
+def test_chunked_matches_unchunked(rtt):
+    full = run_sim_stream("qedgeproxy", rtt, CFG, jax.random.PRNGKey(5),
+                          warmup_steps=WARM)
+    # 64 does not divide T=150: exercises the remainder-chunk compile
+    chunked = run_sim_stream("qedgeproxy", rtt, CFG, jax.random.PRNGKey(5),
+                             warmup_steps=WARM, chunk_steps=64)
+    for name, a, b in zip(full.acc._fields, full.acc, chunked.acc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"acc field {name}")
+    for name, a, b in zip(full.series._fields, full.series, chunked.series):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"series field {name}")
+
+
+def test_sequential_strategy_streams(sarsa):
+    """The non-fused request path (Dec-SARSA) streams identically."""
+    trace, stream = sarsa
+    assert client_qos_satisfaction_stream(stream.acc, CFG.rho) == \
+        client_qos_satisfaction(trace, CFG.rho, WARM)
+    np.testing.assert_allclose(rolling_qos_series(stream.series, WIN),
+                               rolling_qos(trace, WIN), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(stream.acc.arrivals_m),
+        np.asarray(trace.arrivals)[WARM:].sum(0), atol=1e-5)
