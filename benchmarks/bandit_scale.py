@@ -28,13 +28,36 @@ Two extra cells tell the memory story end to end:
     timed over the full chunk loop, proving the bounded-memory path
     costs no meaningful throughput.
 
+The ``grid_dev*`` cells measure the **sharded evaluation grid**
+(`build_sim_grid_fn`): the same S-scenario streaming grid run at 1, 2,
+4 and 8 devices. Device count is a process-level XLA decision, so each
+cell runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (fake host
+devices share the container's cores, so wall-clock speedups here are
+bounded by real parallelism — per-device *memory* and program shape
+are the faithfully measured quantities; see EXPERIMENTS.md).
+
 In ``--smoke`` mode the grid shrinks to seconds and the measured
-streaming/chunked cells are gated on ``SMOKE_FLOOR_STEPS_PER_S`` — a
-deliberately conservative floor (~5x below typical container numbers)
-so CI fails on an order-of-magnitude regression, not on scheduler noise.
+streaming/chunked cells — including one multi-fake-device ``grid_dev``
+cell, so the shard path cannot silently rot on single-GPU runners —
+are gated on ``SMOKE_FLOOR_STEPS_PER_S``, a deliberately conservative
+floor (~5x below typical container numbers) so CI fails on an
+order-of-magnitude regression, not on scheduler noise. The grid cell
+is gated on *per-device* throughput (aggregate ÷ device count, so
+D-way lane parallelism cannot mask a per-lane regression) against its
+own lower ``SMOKE_GRID_FLOOR_STEPS_PER_S`` — fake devices share
+however few physical cores the runner has, so per-device rates sink
+with oversubscription even when nothing regressed. ``_grid_cell`` also
+hard-fails if the child did not actually see the requested device
+count, so the shard path cannot silently degrade to the 1-device
+fallback and stay green.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -42,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, executable_memory, timed
 from repro.continuum import SimConfig, build_sim_chunks, build_sim_fn
 
 GRID_K = (30, 100, 300, 1000)
@@ -61,6 +84,12 @@ MEM_CELL = (1000, 50, 120.0)        # K, M, horizon [s] for the memory story
 # 280-1400; the floor sits ~3x under the worst so it catches structural
 # regressions (e.g. the round loop re-unrolling), not scheduler noise.
 SMOKE_FLOOR_STEPS_PER_S = 60.0
+# Per-device floor for the smoke grid cell. Worst case is a 1-core
+# runner where 4 fake devices timeshare one core: per-device rate ~=
+# single-stream/4 ~= 150-300 steps/s for the smoke cell's K30xM10 on
+# this container, so 25 keeps ~6x margin there while a structural
+# shard-path regression (10x+) still trips it.
+SMOKE_GRID_FLOOR_STEPS_PER_S = 25.0
 
 
 def _rand_rtt(K, M, seed=0):
@@ -86,24 +115,17 @@ def _lower_cell(K, M, horizon, variant):
 def _compile_cell(lowered):
     """Compile one AOT-lowered program; returns (exe, seconds, memory).
 
-    Peak device memory comes from XLA's static ``memory_analysis``
-    (temp + output buffers of the executable) — deterministic, no need
-    to execute, and it is exactly the quantity that differs between
-    streaming and trace mode (trajectory outputs vs accumulators).
+    Per-device peak memory comes from XLA's static ``memory_analysis``
+    (temp + output buffers of the executable; see
+    ``common.executable_memory``) — deterministic, no need to execute,
+    and it is exactly the quantity that differs between streaming and
+    trace mode (trajectory outputs vs accumulators) and between grid
+    device counts (each device holds only its scenario shard).
     """
     t0 = time.perf_counter()
     exe = lowered.compile()
     compile_s = time.perf_counter() - t0
-    mem = {}
-    try:
-        ma = exe.memory_analysis()
-        mem = {"peak_mb": (ma.temp_size_in_bytes
-                           + ma.output_size_in_bytes) / 1e6,
-               "temp_mb": ma.temp_size_in_bytes / 1e6,
-               "output_mb": ma.output_size_in_bytes / 1e6}
-    except Exception:       # pragma: no cover - backend without the API
-        pass
-    return exe, compile_s, mem
+    return exe, compile_s, executable_memory(exe)
 
 
 def _measure(K, M, horizon, variant, run=True):
@@ -148,6 +170,91 @@ def _chunked_cell(K, M, horizon, chunk_steps):
             "us_per_step": run_s / steps * 1e6, **mem}
 
 
+# Sharded-grid device scaling: forced host device counts for the full
+# sweep and the (smaller) smoke gate cell. Fake devices beyond the
+# container's cores only stress correctness, not speed.
+GRID_DEVICES = (1, 2, 4, 8)
+GRID_CELL = dict(K=100, M=10, S=8, horizon=10.0)
+SMOKE_GRID_CELL = dict(devices=4, K=30, M=10, S=4, horizon=2.0)
+
+_GRID_SUB_SRC = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from benchmarks.common import executable_memory
+from repro.continuum import SimConfig, build_sim_grid_fn
+
+K, M, S, horizon = {K}, {M}, {S}, {horizon}
+cfg = SimConfig(horizon=horizon)
+T = cfg.num_steps
+rng = np.random.default_rng(0)
+rtts = jnp.asarray(rng.uniform(0.002, 0.04, (S, K, M)), jnp.float32)
+keys = jax.random.split(jax.random.PRNGKey(7), S)
+n_clients = jnp.full((T, K), 4, jnp.int32)
+active = jnp.ones((T, M), bool)
+
+run_grid, mesh = build_sim_grid_fn("qedgeproxy", cfg, K, M)
+t0 = time.perf_counter()
+exe = jax.jit(run_grid).lower(rtts, n_clients, active, keys).compile()
+compile_s = time.perf_counter() - t0
+t0 = time.perf_counter()
+out = exe(rtts, n_clients, active, keys)
+jax.block_until_ready(out)
+run_s = time.perf_counter() - t0
+cell = dict(devices=int(mesh.devices.size), scenarios=S, steps=T,
+            sharded=int(mesh.devices.size) > 1, compile_s=compile_s,
+            run_s=run_s, grid_steps_per_s=S * T / run_s,
+            **executable_memory(exe))
+print("GRID_CELL " + json.dumps(cell))
+"""
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _grid_cell(devices, K, M, S, horizon):
+    """One sharded-grid cell at a forced host device count.
+
+    XLA locks the device count at first init, so each point of the
+    device-scaling sweep needs its own process; the child pins
+    JAX_PLATFORMS=cpu (fake host devices are a CPU-platform feature)
+    and reports its cell dict as JSON on stdout. The parent env is
+    inherited; only the device-count flag is replaced, and the import
+    path is pinned to this checkout so the parent's cwd/PYTHONPATH
+    don't matter.
+    """
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO_ROOT, "src"), _REPO_ROOT]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    src = _GRID_SUB_SRC.format(K=K, M=M, S=S, horizon=horizon)
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, env=env, cwd=_REPO_ROOT, timeout=560)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"grid cell (devices={devices}) failed:\n"
+            + out.stdout + out.stderr)
+    line = next((l for l in out.stdout.splitlines()
+                 if l.startswith("GRID_CELL ")), None)
+    if line is None:
+        raise RuntimeError(
+            f"grid cell (devices={devices}) exited 0 without a "
+            f"GRID_CELL line:\n" + out.stdout + out.stderr)
+    cell = json.loads(line[len("GRID_CELL "):])
+    if cell["devices"] != devices:
+        # e.g. the forced-host-device flag stopped being honored: the
+        # child fell back to fewer devices and the shard path would go
+        # untested (or the scaling table mislabeled) while staying green
+        raise RuntimeError(
+            f"grid cell requested {devices} devices but the child saw "
+            f"{cell['devices']}")
+    return cell
+
+
 def bandit_scale():
     grid_k = SMOKE_GRID_K if common.SMOKE else GRID_K
     grid_m = SMOKE_GRID_M if common.SMOKE else GRID_M
@@ -165,9 +272,10 @@ def bandit_scale():
             if "sequential" in cell:
                 cell["step_speedup"] = (cell["sequential"]["us_per_step"]
                                         / cell["stream"]["us_per_step"])
-            if "trace" in cell and "peak_mb" in cell["trace"]:
-                cell["hbm_ratio"] = (cell["trace"]["peak_mb"]
-                                     / max(cell["stream"]["peak_mb"], 1e-9))
+            if "trace" in cell and "per_device_peak_mb" in cell["trace"]:
+                cell["hbm_ratio"] = (
+                    cell["trace"]["per_device_peak_mb"]
+                    / max(cell["stream"]["per_device_peak_mb"], 1e-9))
             compile_wall += sum(v["compile_s"] for v in cell.values()
                                 if isinstance(v, dict))
             payload[f"K{K}_M{M}"] = cell
@@ -179,6 +287,19 @@ def bandit_scale():
     compile_wall += chunked["compile_s"]
     payload[f"chunked_K{ck}_M{cm}"] = chunked
 
+    # sharded evaluation grid: a device-scaling sweep in full mode, one
+    # multi-fake-device cell in smoke (subprocesses either way — the
+    # parent's device count is already locked)
+    if common.SMOKE:
+        c = dict(SMOKE_GRID_CELL)
+        grid_cells = {f"grid_dev{c['devices']}": _grid_cell(**c)}
+    else:
+        grid_cells = {f"grid_dev{d}": _grid_cell(devices=d, **GRID_CELL)
+                      for d in GRID_DEVICES}
+    for name, cell in grid_cells.items():
+        compile_wall += cell["compile_s"]
+        payload[name] = cell
+
     if not common.SMOKE:
         # the memory story: stream runs, trace is only compiled — its
         # memory_analysis peak IS the baseline the engine removes
@@ -188,8 +309,9 @@ def bandit_scale():
         compile_wall += mem_stream["compile_s"] + mem_trace["compile_s"]
         payload[f"mem_K{K}_M{M}"] = {
             "stream": mem_stream, "trace_compiled_only": mem_trace,
-            "hbm_ratio": (mem_trace.get("peak_mb", 0.0)
-                          / max(mem_stream.get("peak_mb", 1e-9), 1e-9))}
+            "hbm_ratio": (mem_trace.get("per_device_peak_mb", 0.0)
+                          / max(mem_stream.get("per_device_peak_mb", 1e-9),
+                                1e-9))}
 
     payload["compile_wall_s"] = compile_wall
 
@@ -199,6 +321,13 @@ def bandit_scale():
                 and v["stream"]["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S}
         if chunked["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S:
             slow["chunked"] = chunked["steps_per_s"]
+        for name, cell in grid_cells.items():
+            # gate per device so D-way lane parallelism can't mask a
+            # per-lane regression, against the grid cell's own floor
+            # (fake devices timeshare the runner's physical cores)
+            per_device = cell["grid_steps_per_s"] / cell["devices"]
+            if per_device < SMOKE_GRID_FLOOR_STEPS_PER_S:
+                slow[name] = per_device
         if slow:
             raise RuntimeError(
                 f"streaming throughput below the "
@@ -211,6 +340,9 @@ def bandit_scale():
         + (f"(x{v['step_speedup']:.1f})" if "step_speedup" in v else "")
         for k, v in payload.items()
         if isinstance(v, dict) and "stream" in v and "steps_per_s" in v["stream"])
+    derived += " " + " ".join(
+        f"{k}={v['grid_steps_per_s']:.0f}steps/s"
+        for k, v in grid_cells.items())
     derived += f" compile_wall={compile_wall:.1f}s"
     mem_key = f"mem_K{MEM_CELL[0]}_M{MEM_CELL[1]}"
     if mem_key in payload:

@@ -2,18 +2,25 @@
 (5 scenarios x 4 strategies, §VII-A6) and hand results to the
 per-figure benches.
 
-The scenario axis is vmapped: each strategy's 5 seeds compile and run
-as ONE program (`run_sim_batch` shape) instead of 5, and compile time
-is measured separately from run time via AOT lowering (the old harness
-conflated them — and stopped the clock before the async dispatch had
-even executed).
+The scenario axis is vmapped AND device-sharded: each strategy's 5
+seeds compile and run as ONE program (`build_sim_grid_fn`), whose
+scenario lanes `shard_map` across every device on the grid mesh — on
+the usual single-device container that degrades to the plain vmapped
+`run_sim_batch` program. Compile time is measured separately from run
+time via AOT lowering (the old harness conflated them — and stopped
+the clock before the async dispatch had even executed).
 
 The suite runs the simulator in **streaming mode** (`trace=False`):
 each cell yields a `StreamOutputs` (O(K·M) metric accumulators + O(T)
 scalar series) instead of full (T, K, C)/(T, K, M) trajectories —
 every Fig 3-11 statistic is computed from those (see
 repro/continuum/metrics.py), so suite memory no longer scales with the
-horizon.
+horizon, and per-device memory no longer scales with the grid.
+
+To exercise the sharded path on CPU (CI or this container):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.run --only suite_build
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.continuum import SimConfig, build_sim_fn, make_topology
+from repro.continuum import SimConfig, build_sim_grid_fn, make_topology
+from repro.launch.mesh import make_grid_mesh
 
 SCENARIOS = (1, 2, 3, 4, 5)
 STRATEGIES = (
@@ -86,13 +94,30 @@ def compile_all(lowered):
     return [l.compile() for l in lowered]
 
 
+def executable_memory(exe) -> dict:
+    """Per-device peak memory of a compiled executable, from XLA's
+    static ``memory_analysis`` (temp + output buffers — the program's
+    working set on EACH device of an SPMD grid). Deterministic, no
+    execution needed; empty dict on backends without the API."""
+    try:
+        ma = exe.memory_analysis()
+        return {"per_device_peak_mb": (ma.temp_size_in_bytes
+                                       + ma.output_size_in_bytes) / 1e6,
+                "temp_mb": ma.temp_size_in_bytes / 1e6,
+                "output_mb": ma.output_size_in_bytes / 1e6}
+    except Exception:       # pragma: no cover - backend without the API
+        return {}
+
+
 def get_suite():
     """{(scenario, label): StreamOutputs} for the full evaluation grid.
 
-    One vmapped program per strategy covers all scenarios; per-strategy
-    compile/run seconds land in SUITE_TIMINGS (emitted by the
-    ``suite_build`` benchmark row). Streaming mode: figures read the
-    per-cell ``.acc`` / ``.series``, never a trajectory.
+    One sharded-grid program per strategy covers all scenarios
+    (scenario lanes split across the grid mesh; single device = the
+    plain vmap); per-strategy compile/run seconds, device count, grid
+    steps/s and per-device peak memory land in SUITE_TIMINGS (emitted
+    by the ``suite_build`` benchmark row). Streaming mode: figures read
+    the per-cell ``.acc`` / ``.series``, never a trajectory.
     """
     if _cache:
         return _cache
@@ -103,18 +128,20 @@ def get_suite():
     T = CFG.num_steps
     n_clients = jnp.full((T, N_LBS), 4, jnp.int32)
     active = jnp.ones((T, N_INSTANCES), bool)
+    mesh = make_grid_mesh()
 
     t0 = time.perf_counter()
     lowered = []
     for label, kw in STRATEGIES:
-        run = build_sim_fn(strategy_name(label), CFG, N_LBS, N_INSTANCES,
-                           trace=False, warmup_steps=WARM, **kw)
-        batched = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))
-        lowered.append(batched.lower(rtts, n_clients, active, keys))
+        run_grid, mesh = build_sim_grid_fn(
+            strategy_name(label), CFG, N_LBS, N_INSTANCES, mesh=mesh,
+            warmup_steps=WARM, **kw)
+        lowered.append(jax.jit(run_grid).lower(rtts, n_clients, active, keys))
     compiled = compile_all(lowered)
     t_compile = time.perf_counter() - t0
 
     SUITE_TIMINGS["compile_wall_s"] = t_compile      # all 4 programs
+    SUITE_TIMINGS["devices"] = int(mesh.devices.size)
     for (label, kw), exe in zip(STRATEGIES, compiled):
         t0 = time.perf_counter()
         outs = exe(rtts, n_clients, active, keys)
@@ -122,7 +149,8 @@ def get_suite():
         t_run = time.perf_counter() - t0
         SUITE_TIMINGS[label] = {"run_s": t_run,
                                 "scenarios": len(SCENARIOS),
-                                "steps_per_s": len(SCENARIOS) * T / t_run}
+                                "grid_steps_per_s": len(SCENARIOS) * T / t_run,
+                                **executable_memory(exe)}
         for i, seed in enumerate(SCENARIOS):
             _cache[(seed, label)] = jax.tree.map(lambda x: x[i], outs)
     for seed in SCENARIOS:
@@ -131,8 +159,9 @@ def get_suite():
 
 
 def suite_build():
-    """Benchmark row for the suite itself: compile vs run seconds per
-    strategy (the old harness timed neither faithfully)."""
+    """Benchmark row for the suite itself: compile vs run seconds,
+    device count, grid steps/s and per-device peak memory per strategy
+    (the old harness timed neither compile nor run faithfully)."""
     get_suite()
     per_label = {k: v for k, v in SUITE_TIMINGS.items() if isinstance(v, dict)}
     total_run = sum(v["run_s"] for v in per_label.values())

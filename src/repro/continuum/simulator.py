@@ -44,6 +44,15 @@ Engine structure (streaming-first):
 * Maintenance runs on a fixed-size player group per step (balanced
   staggered clocks), so the O(K·M·R) estimate is paid for ~K/H_d
   players instead of all K.
+* **The evaluation grid shards across devices**: scenario/seed lanes
+  are independent simulations (the MP-MAB players never communicate,
+  and neither do grid cells), so ``run_sim_grid`` /
+  ``build_sim_grid_fn`` ``shard_map`` the vmapped scenario axis of a
+  streaming run over a 1-D device mesh. Each device scans only its
+  shard and carries its own O(K·M) accumulators; the host touches
+  nothing until the (tiny) metric pytree is read. One real device
+  falls back to the plain vmap — the exact same program ``get_suite``
+  always ran.
 """
 from __future__ import annotations
 
@@ -421,8 +430,11 @@ def build_sim_fn(
     """Build a traceable ``run(rtt, n_clients, active, key)``.
 
     Exposed separately from ``run_sim`` so harnesses can transform it:
-    benchmarks/common.py vmaps the scenario axis and compiles one
-    program for all seeds of a strategy (``run_sim_batch``).
+    the evaluation suite vmaps the scenario axis into one program per
+    strategy and shards its lanes across devices
+    (``build_sim_grid_fn``; benchmarks/common.py::get_suite), and
+    benchmarks/beyond.py vmaps a traced ``service_time`` to sweep the
+    utilization axis.
 
     ``trace=True`` returns full ``SimOutputs`` trajectories (O(T·K·M)
     memory — the debug/inspection mode); ``trace=False`` returns
@@ -558,6 +570,8 @@ def run_sim_batch(
     evaluation grid's per-strategy seeds share every static shape, so
     batching them removes S-1 compilations and lets XLA overlap the
     scenario lanes. Defaulted ``n_clients``/``active`` are donated.
+    This is the trace-mode batch driver; the streaming, device-sharded
+    grid is ``run_sim_grid``.
     """
     S, K, M = rtts.shape
     T = cfg.num_steps
@@ -566,6 +580,103 @@ def run_sim_batch(
     with _quiet_donation():
         return jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)),
                        donate_argnums=donate)(rtts, n_clients, active, keys)
+
+
+def build_sim_grid_fn(
+    strategy_name: str,
+    cfg: SimConfig,
+    K: int,
+    M: int,
+    mesh=None,
+    warmup_steps: int = 0,
+    fused: bool = True,
+    **strategy_kw,
+):
+    """Traceable sharded evaluation grid: ``(run_grid, mesh)``.
+
+    ``run_grid(rtts, n_clients, active, keys)`` is the vmapped
+    streaming run (``run_sim_batch`` shape, ``trace=False``) with the
+    scenario/seed axis ``shard_map``-ed over ``mesh`` — a 1-D mesh from
+    ``launch.mesh.make_grid_mesh()`` by default. Grid lanes are
+    independent (no collectives), so each device scans its own S/D
+    scenarios with per-device ``MetricAccumulator``/``StepSeries``
+    carries; outputs stay device-sharded along the scenario axis until
+    the caller reads them. When the mesh has a single device the plain
+    ``jax.vmap`` body is returned unwrapped — bit-for-bit the
+    pre-sharding grid program.
+
+    S not divisible by the device count is handled inside the traced
+    function by padding with copies of the last scenario lane and
+    slicing the pad back off — wasted lanes, never wrong results.
+    Sharded and unsharded grids run the same per-lane program, so
+    results match the single-device vmap exactly on every accumulator
+    field (tests/test_sharded_grid.py).
+
+    Exposed AOT-style (like ``build_sim_fn``) so harnesses can
+    ``jit(...).lower()`` it and measure compile time apart from run
+    time (benchmarks/common.py::get_suite).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_grid_mesh
+    from repro.sharding import logical_to_spec
+
+    mesh = make_grid_mesh() if mesh is None else mesh
+    D = int(mesh.devices.size)
+    run = build_sim_fn(strategy_name, cfg, K, M, fused=fused, trace=False,
+                       warmup_steps=warmup_steps, **strategy_kw)
+    vrun = jax.vmap(run, in_axes=(0, None, None, 0))
+    if D == 1:
+        return vrun, mesh
+
+    grid = logical_to_spec(("grid",), mesh)     # P(<mesh axis>) per rules
+    rep = P()
+    inner = shard_map(vrun, mesh=mesh,
+                      in_specs=(grid, rep, rep, grid),
+                      out_specs=grid, check_rep=False)
+
+    def run_grid(rtts, n_clients, active, keys):
+        S = rtts.shape[0]
+        pad = (-S) % D
+        if pad:
+            rtts = jnp.concatenate([rtts, jnp.repeat(rtts[-1:], pad, 0)])
+            keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, 0)])
+        out = inner(rtts, n_clients, active, keys)
+        if pad:
+            out = jax.tree.map(lambda x: x[:S], out)
+        return out
+
+    return run_grid, mesh
+
+
+def run_sim_grid(
+    strategy_name: str,
+    rtts: jax.Array,             # (S, K, M) one RTT matrix per scenario
+    cfg: SimConfig,
+    keys: jax.Array,             # (S, 2) one PRNG key per scenario
+    n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
+    active: jax.Array | None = None,      # (T, M), shared across scenarios
+    warmup_steps: int = 0,
+    mesh=None,
+    **strategy_kw,
+) -> StreamOutputs:
+    """Sharded evaluation grid driver: ``run_sim_batch`` semantics,
+    streaming outputs, scenario lanes spread over every device.
+
+    Returns ``StreamOutputs`` with a leading (S,) axis on every field.
+    Single-device meshes degrade to the plain vmapped streaming grid.
+    Defaulted ``n_clients``/``active`` buffers are donated.
+    """
+    S, K, M = rtts.shape
+    T = cfg.num_steps
+    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    run_grid, mesh = build_sim_grid_fn(
+        strategy_name, cfg, K, M, mesh=mesh, warmup_steps=warmup_steps,
+        **strategy_kw)
+    with _quiet_donation():
+        return jax.jit(run_grid, donate_argnums=donate)(
+            rtts, n_clients, active, keys)
 
 
 def run_sim_stream(

@@ -3,6 +3,7 @@
 NOTE: do not import ``repro.launch.dryrun`` from library code — it sets
 XLA_FLAGS at import time (by design: it must run before jax init).
 """
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import (make_grid_mesh, make_production_mesh,
+                               make_test_mesh)
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_grid_mesh", "make_production_mesh", "make_test_mesh"]

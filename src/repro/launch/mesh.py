@@ -26,3 +26,18 @@ def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
                     ("pod", "data", "model"))
     need = data * model
     return Mesh(devs[:need].reshape(data, model), ("data", "model"))
+
+
+def make_grid_mesh(devices=None):
+    """1-D mesh over every available device: the evaluation-grid mesh.
+
+    The axis is named ``data`` so the standard partitioning rules apply
+    (the logical ``grid`` axis maps to it; see
+    repro/sharding/partitioning.py). Scenario/seed lanes of the grid
+    are independent programs, so a flat data-parallel mesh is the whole
+    story — no model axis. On CPU CI, force a multi-device mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before
+    the first jax call).
+    """
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return Mesh(devs.reshape(-1), ("data",))

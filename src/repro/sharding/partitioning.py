@@ -50,6 +50,10 @@ DEFAULT_RULES: Rules = {
     "conv": (),
     "players": ("data",),       # bandit state scales out over front-ends
     "arms": (),
+    # evaluation-grid scenario/seed axis: lanes are independent
+    # simulations, embarrassingly sharded over the flat grid mesh
+    # (launch/mesh.py::make_grid_mesh)
+    "grid": ("data",),
     # decode KV-cache batch axis: defaults to the activation batch
     # sharding; the hybrid decode layout re-points it at the TP axis so
     # attention runs against an immovable cache (see launch/dryrun.py)

@@ -1,4 +1,7 @@
 import os
+import subprocess
+import sys
+import textwrap
 
 # Tests run on the single real CPU device; ONLY the dry-run uses 512
 # placeholder devices (set inside repro/launch/dryrun.py, never here).
@@ -7,3 +10,27 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str):
+    """Run `code` in a subprocess with 8 forced host CPU devices.
+
+    jax locks the device count at first init, so every real
+    multi-device test runs out of process; the env is deliberately
+    minimal (no inherited XLA_FLAGS) so results don't depend on the
+    parent's configuration. Shared by test_sharding / test_elastic /
+    test_sharded_grid.
+    """
+    src = textwrap.dedent(code)
+    out = subprocess.run(
+        [sys.executable, "-c", src], capture_output=True, text=True,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu",
+             "HOME": os.environ.get("HOME", "/root")},
+        cwd=REPO_ROOT, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout

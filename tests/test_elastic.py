@@ -1,23 +1,12 @@
-"""Elastic re-meshing + checkpoint-based elastic restore."""
-import subprocess
-import sys
-import textwrap
+"""Elastic re-meshing + checkpoint-based elastic restore.
 
+Multi-device cases run in subprocesses with 8 forced host devices
+(conftest.run_sub — jax locks the device count at first init).
+"""
 import numpy as np
 import pytest
 
-
-def run_sub(code: str):
-    src = textwrap.dedent(code)
-    out = subprocess.run(
-        [sys.executable, "-c", src], capture_output=True, text=True,
-        env={"PYTHONPATH": "src",
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
-             "HOME": "/root"},
-        cwd="/root/repo", timeout=560)
-    assert out.returncode == 0, out.stdout + out.stderr
-    return out.stdout
+from conftest import run_sub
 
 
 def test_build_and_shrink_mesh_shapes():

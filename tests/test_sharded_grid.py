@@ -1,0 +1,129 @@
+"""Sharded-evaluation-grid parity: `run_sim_grid` vs the vmap program.
+
+Grid lanes (scenario x seed) are independent simulations, so sharding
+them over a mesh must not change any result: counting statistics (QoS
+successes, arrival/choice histograms, the latency sketch) are
+integer-valued float32 sums and must match the single-device vmap
+EXACTLY; genuinely float accumulations (regret, variation budget,
+prev_mu) get float32 tolerance, per-lane reduction order being the one
+thing XLA may legally reassociate.
+
+In-process tests cover the single-device fallback (the grid builder
+must return the plain vmap program untouched); they require the
+default one-CPU-device process and skip if the environment forces more
+(e.g. an exported XLA_FLAGS device count). Real multi-device sharding
+runs in a subprocess with 8 forced host devices because jax locks the
+device count at first init (conftest.run_sub, shared with
+tests/test_sharding.py); one subprocess checks 8-, 2- and 1-device
+meshes, including the pad path (S=5 lanes never divide evenly).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_sub
+from repro.continuum import (SimConfig, build_sim_fn, build_sim_grid_fn,
+                             make_topology, run_sim_grid)
+
+K, M, S = 8, 4, 5
+CFG = SimConfig(horizon=6.0)
+WARM = 20
+
+single_device = pytest.mark.skipif(
+    len(jax.devices()) != 1,
+    reason="fallback tests need the default single-device process")
+
+
+def _grid_inputs():
+    rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
+                      .lb_instance_rtt() for s in range(S)])
+    keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(S)])
+    T = CFG.num_steps
+    return rtts, keys, jnp.full((T, K), 4, jnp.int32), jnp.ones((T, M), bool)
+
+
+@single_device
+def test_single_device_fallback_is_the_vmap_program():
+    """On a 1-device mesh the grid driver IS the vmapped streaming run:
+    identical floats, not just close ones."""
+    rtts, keys, n_clients, active = _grid_inputs()
+    run = build_sim_fn("qedgeproxy", CFG, K, M, trace=False,
+                       warmup_steps=WARM)
+    ref = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
+        rtts, n_clients, active, keys)
+    got = run_sim_grid("qedgeproxy", rtts, CFG, keys, n_clients=n_clients,
+                       active=active, warmup_steps=WARM)
+    for name, a, b in zip(ref.acc._fields, ref.acc, got.acc):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"acc field {name}")
+    for name, a, b in zip(ref.series._fields, ref.series, got.series):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"series field {name}")
+
+
+@single_device
+def test_builder_returns_unwrapped_vmap_on_one_device():
+    fn, mesh = build_sim_grid_fn("qedgeproxy", CFG, K, M,
+                                 warmup_steps=WARM)
+    assert int(mesh.devices.size) == 1
+    rtts, keys, n_clients, active = _grid_inputs()
+    out = jax.jit(fn)(rtts, n_clients, active, keys)
+    assert out.acc.succ_kc.shape == (S, K, CFG.max_clients)
+    assert out.series.succ.shape == (S, CFG.num_steps)
+
+
+@pytest.mark.slow
+def test_sharded_grid_matches_vmap_8dev():
+    """8-, 2- and 1-device meshes against the full-width vmap reference,
+    including the pad path (S=5 on D=8 pads 3 lanes, on D=2 pads 1)."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, build_sim_fn,
+                                     make_topology, run_sim_grid)
+        from repro.launch.mesh import make_grid_mesh
+
+        K, M, S, WARM = 8, 4, 5, 20
+        cfg = SimConfig(horizon=6.0)
+        rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
+                          .lb_instance_rtt() for s in range(S)])
+        keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(S)])
+        T = cfg.num_steps
+        n_clients = jnp.full((T, K), 4, jnp.int32)
+        active = jnp.ones((T, M), bool)
+
+        run = build_sim_fn("qedgeproxy", cfg, K, M, trace=False,
+                           warmup_steps=WARM)
+        ref = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
+            rtts, n_clients, active, keys)
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured"}
+        for ndev in (8, 2, 1):
+            mesh = make_grid_mesh(jax.devices()[:ndev])
+            got = run_sim_grid("qedgeproxy", rtts, cfg, keys,
+                               n_clients=n_clients, active=active,
+                               warmup_steps=WARM, mesh=mesh)
+            for name in ref.acc._fields:
+                a = np.asarray(getattr(ref.acc, name))
+                b = np.asarray(getattr(got.acc, name))
+                if name in COUNTS:
+                    np.testing.assert_array_equal(
+                        b, a, err_msg=f"dev{ndev} acc.{name}")
+                else:
+                    np.testing.assert_allclose(
+                        b, a, rtol=1e-5, atol=1e-5,
+                        err_msg=f"dev{ndev} acc.{name}")
+            np.testing.assert_array_equal(
+                np.asarray(got.series.issued),
+                np.asarray(ref.series.issued), err_msg=f"dev{ndev}")
+            np.testing.assert_array_equal(
+                np.asarray(got.series.succ),
+                np.asarray(ref.series.succ), err_msg=f"dev{ndev}")
+            np.testing.assert_allclose(
+                np.asarray(got.series.regret),
+                np.asarray(ref.series.regret), rtol=1e-4, atol=1e-4,
+                err_msg=f"dev{ndev}")
+            print(f"dev{ndev} parity ok")
+        print("OK sharded parity")
+    """)
+    assert "OK sharded parity" in out

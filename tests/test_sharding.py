@@ -1,35 +1,18 @@
 """Partitioning rules + multi-device SPMD behaviour.
 
 In-process tests use the single CPU device; real multi-device sharding
-(8 fake host devices) runs in subprocesses because jax locks the device
-count at first init.
+(8 fake host devices) runs in subprocesses (conftest.run_sub) because
+jax locks the device count at first init.
 """
-import subprocess
-import sys
-import textwrap
-
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from conftest import run_sub
 from repro.sharding import (logical_to_spec, rule_overrides, set_rules,
                             DEFAULT_RULES)
 from repro.sharding.partitioning import is_axes_leaf
-
-
-def run_sub(code: str):
-    src = textwrap.dedent(code)
-    out = subprocess.run(
-        [sys.executable, "-c", src], capture_output=True, text=True,
-        env={"PYTHONPATH": "src",
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "PATH": "/usr/bin:/bin",
-             "JAX_PLATFORMS": "cpu",
-             "HOME": "/root"},
-        cwd="/root/repo", timeout=560)
-    assert out.returncode == 0, out.stdout + out.stderr
-    return out.stdout
 
 
 def test_rules_resolution_no_mesh_drops_axes():
