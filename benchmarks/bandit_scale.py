@@ -66,7 +66,8 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, executable_memory, timed
-from repro.continuum import SimConfig, build_sim_chunks, build_sim_fn
+from repro.continuum import (Scenario, SimConfig, build_sim_chunks,
+                             build_sim_fn, compile_scenario, slice_drivers)
 
 GRID_K = (30, 100, 300, 1000)
 GRID_M = (10, 50)
@@ -98,9 +99,11 @@ def _rand_rtt(K, M, seed=0):
 
 
 def _cell_inputs(K, M, cfg):
-    T = cfg.num_steps
-    return (_rand_rtt(K, M), jnp.full((T, K), 4, jnp.int32),
-            jnp.ones((T, M), bool), jax.random.PRNGKey(7))
+    # throughput cells run the compiled `baseline` scenario — same
+    # constant schedules as before, produced by the scenario compiler
+    drv = compile_scenario(Scenario("baseline", n_nodes=K, n_instances=M),
+                           cfg, jax.random.PRNGKey(0))
+    return (_rand_rtt(K, M), drv, jax.random.PRNGKey(7))
 
 
 def _lower_cell(K, M, horizon, variant):
@@ -146,21 +149,20 @@ def _chunked_cell(K, M, horizon, chunk_steps):
     including the host-side chunk dispatch."""
     cfg = SimConfig(horizon=horizon)
     T = cfg.num_steps
-    rtt, n_clients, active, key = _cell_inputs(K, M, cfg)
+    rtt, drv, key = _cell_inputs(K, M, cfg)
     init_fn, chunk_fn = build_sim_chunks("qedgeproxy", cfg, K, M)
-    carry, keys = jax.jit(init_fn)(rtt, active[0], key)
+    carry, keys = jax.jit(init_fn)(rtt, drv.active[0], key)
     jax.block_until_ready(jax.tree.leaves(carry))
     n = chunk_steps
     lowered = jax.jit(chunk_fn, donate_argnums=(1,)).lower(
-        rtt, carry, jnp.arange(n), n_clients[:n], active[:n], keys[:n])
+        rtt, carry, jnp.arange(n), slice_drivers(drv, 0, n), keys[:n])
     exe, compile_s, mem = _compile_cell(lowered)
 
     t0 = time.perf_counter()
     steps = 0
     for lo in range(0, T - n + 1, n):       # drop any remainder chunk
         carry, ys = exe(rtt, carry, jnp.arange(lo, lo + n),
-                        n_clients[lo:lo + n], active[lo:lo + n],
-                        keys[lo:lo + n])
+                        slice_drivers(drv, lo, lo + n), keys[lo:lo + n])
         steps += n
     jax.block_until_ready(jax.tree.leaves(carry))
     run_s = time.perf_counter() - t0
@@ -181,7 +183,8 @@ _GRID_SUB_SRC = """
 import json, time
 import jax, jax.numpy as jnp, numpy as np
 from benchmarks.common import executable_memory
-from repro.continuum import SimConfig, build_sim_grid_fn
+from repro.continuum import (SimConfig, build_sim_grid_fn, compile_scenario,
+                             get_library, stack_drivers)
 
 K, M, S, horizon = {K}, {M}, {S}, {horizon}
 cfg = SimConfig(horizon=horizon)
@@ -189,15 +192,19 @@ T = cfg.num_steps
 rng = np.random.default_rng(0)
 rtts = jnp.asarray(rng.uniform(0.002, 0.04, (S, K, M)), jnp.float32)
 keys = jax.random.split(jax.random.PRNGKey(7), S)
-n_clients = jnp.full((T, K), 4, jnp.int32)
-active = jnp.ones((T, M), bool)
+# grid lanes cycle the scenario library: the sharded axis carries real
+# scenario DIVERSITY (surges, failures, drift), not constant fills
+lib = list(get_library(horizon, K, M).values())
+drivers = stack_drivers(
+    [compile_scenario(lib[i % len(lib)], cfg,
+                      jax.random.PRNGKey(1000 + i)) for i in range(S)])
 
 run_grid, mesh = build_sim_grid_fn("qedgeproxy", cfg, K, M)
 t0 = time.perf_counter()
-exe = jax.jit(run_grid).lower(rtts, n_clients, active, keys).compile()
+exe = jax.jit(run_grid).lower(rtts, drivers, keys).compile()
 compile_s = time.perf_counter() - t0
 t0 = time.perf_counter()
-out = exe(rtts, n_clients, active, keys)
+out = exe(rtts, drivers, keys)
 jax.block_until_ready(out)
 run_s = time.perf_counter() - t0
 cell = dict(devices=int(mesh.devices.size), scenarios=S, steps=T,

@@ -18,7 +18,8 @@ import numpy as np
 from benchmarks import common
 from benchmarks.common import compile_all, emit, timed
 from repro.continuum import (SimConfig, build_sim_fn,
-                             client_qos_satisfaction_stream, make_topology)
+                             client_qos_satisfaction_stream, make_topology,
+                             neutral_drivers)
 from repro.core import BanditParams
 
 VARIANTS = {
@@ -42,14 +43,13 @@ def beyond_paper_variants():
         rtt = topo.lb_instance_rtt()
         cfg = SimConfig(horizon=horizon)
         warm = int(warm_s / cfg.dt)
-        T = cfg.num_steps
-        n_clients = jnp.full((T, 30), 4, jnp.int32)
-        active = jnp.ones((T, 10), bool)
+        drv = neutral_drivers(cfg, 30, 10)
         key = jax.random.PRNGKey(105)
         st_axis = jnp.asarray(service_times, jnp.float32)
         # one compiled program per variant (via the shared — serial, see
         # common.compile_all — choke point); the utilization axis is a
-        # traced service_time swept by vmap (3 lanes), not 3 programs
+        # traced service_time swept by vmap (3 lanes; it overrides the
+        # drivers' s_m row), not 3 programs
         out = {f"util_{1200 * st_ / 10:.0%}": {} for st_ in service_times}
         lowered = []
         for name, kw in variants.items():
@@ -58,8 +58,7 @@ def beyond_paper_variants():
             run = build_sim_fn("qedgeproxy", cfg, 30, 10, trace=False,
                                warmup_steps=warm, params=params)
             batched = jax.jit(jax.vmap(
-                lambda s: run(rtt, n_clients, active, key,
-                              service_time=s)))
+                lambda s: run(rtt, drv, key, service_time=s)))
             lowered.append(batched.lower(st_axis))
         for name, exe in zip(variants, compile_all(lowered)):
             outs = exe(st_axis)

@@ -14,8 +14,8 @@ import numpy as np
 from benchmarks import common
 from benchmarks.common import STRATEGIES, emit, get_suite, timed
 from repro.continuum import (client_qos_satisfaction_stream,
-                             cumulative_regret_series, jain_fairness_stream,
-                             per_client_success_stream,
+                             cumulative_regret_series, event_recovery,
+                             jain_fairness_stream, per_client_success_stream,
                              per_lb_request_distribution_stream,
                              proc_latency_quantile_stream,
                              request_rate_per_instance_stream,
@@ -179,34 +179,52 @@ def fig9_single_lb():
 
 _event_cache = common.register_cache({})
 
+# The §VII-C surge subset: the pre-DSL harness drew it as
+# default_rng(0).choice(30, 15, replace=False); frozen as data so the
+# scenario spec (not a numpy stream) is the source of truth.
+# tests/test_scenarios.py locks the compiled drivers — and the sim
+# results — bit-identical to the hand-rolled legacy arrays.
+SURGE_LBS = (0, 1, 4, 5, 6, 9, 10, 13, 14, 16, 17, 20, 22, 24, 29)
+
+
+def legacy_event_scenarios(cfg, K: int = 30, M: int = 10):
+    """The two legacy events (Figs 10/11) as scenario specs: a +2-client
+    step surge on half the LBs, and the last instance going dark —
+    both at mid-horizon."""
+    from repro.continuum import InstanceKill, LoadSurge, Scenario
+    half = (cfg.num_steps // 2) * cfg.dt
+    surge = Scenario(
+        "legacy_surge",
+        (LoadSurge(start=half, extra=2,
+                   lbs=tuple(lb for lb in SURGE_LBS if lb < K)),),
+        n_nodes=K, n_instances=M, base_clients=2)
+    removal = Scenario(
+        "legacy_removal",
+        (InstanceKill(start=half, instances=(M - 1,)),),
+        n_nodes=K, n_instances=M, base_clients=4)
+    return surge, removal
+
 
 def _event_suite():
     """{(event, label): StreamOutputs} for the surge/removal events.
 
-    Both events share every static shape, so each strategy compiles ONE
-    vmapped program with the event axis batched (surge lane varies
-    n_clients, removal lane varies active) instead of one program per
-    (event, strategy) pair. The figures only need the rolling-QoS
-    series, so the events stream too.
+    Both events are scenario-DSL specs compiled to driver batches
+    (`legacy_event_scenarios`); they share every static shape, so each
+    strategy compiles ONE vmapped program with the event axis batched
+    instead of one program per (event, strategy) pair. The figures only
+    need the rolling-QoS series, so the events stream too.
     """
     if _event_cache:
         return _event_cache
     import jax
-    import jax.numpy as jnp
     from benchmarks.common import strategy_name
-    from repro.continuum import build_sim_fn
+    from repro.continuum import build_sim_fn, compile_scenario, stack_drivers
     topo = get_suite()[("topo", 1)]
     rtt = topo.lb_instance_rtt()
-    T = common.CFG.num_steps
 
-    surge_nc = np.full((T, 30), 2, np.int32)
-    rng = np.random.default_rng(0)
-    surge_nc[T // 2:, rng.choice(30, 15, replace=False)] += 2
-    removal_act = np.ones((T, 10), bool)
-    removal_act[T // 2:, 9] = False
-    n_clients = jnp.stack([jnp.asarray(surge_nc),
-                           jnp.full((T, 30), 4, jnp.int32)])
-    active = jnp.stack([jnp.ones((T, 10), bool), jnp.asarray(removal_act)])
+    drivers = stack_drivers(
+        [compile_scenario(s, common.CFG, jax.random.PRNGKey(0))
+         for s in legacy_event_scenarios(common.CFG)])
     key = jax.random.PRNGKey(11)
 
     # smoke: per-strategy compiles dominate; two strategies gate the path
@@ -215,11 +233,11 @@ def _event_suite():
     for label, kw in strategies:
         run = build_sim_fn(strategy_name(label), common.CFG, 30, 10,
                            trace=False, warmup_steps=common.WARM, **kw)
-        batched = jax.jit(jax.vmap(run, in_axes=(None, 0, 0, None)))
-        lowered.append(batched.lower(rtt, n_clients, active, key))
+        batched = jax.jit(jax.vmap(run, in_axes=(None, 0, None)))
+        lowered.append(batched.lower(rtt, drivers, key))
     for (label, kw), exe in zip(strategies,
                                 common.compile_all(lowered)):
-        outs = exe(rtt, n_clients, active, key)
+        outs = exe(rtt, drivers, key)
         for i, event in enumerate(("surge", "removal")):
             _event_cache[(event, label)] = jax.tree.map(
                 lambda x: x[i], outs)
@@ -246,6 +264,12 @@ def _event_run(event: str):
         out[label] = {"pre": float(pre), "dip": float(dip),
                       "post_steady": float(tail),
                       "recovery_s": rec_idx * common.CFG.dt}
+        # the scenario engine's event-relative windows give the same
+        # story straight from the accumulator (no series scan): one
+        # mark per legacy event, bucketed at cfg.ev_bucket seconds
+        rec = event_recovery(o.acc, common.CFG.ev_bucket)
+        if rec:
+            out[label]["acc_window"] = rec[0]
     return out
 
 

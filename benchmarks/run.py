@@ -15,7 +15,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import bandit_scale, beyond, common, figures, footprint
+from benchmarks import (bandit_scale, beyond, common, figures, footprint,
+                        scenario_suite)
 
 ALL = {
     # paper §VII figures
@@ -32,6 +33,8 @@ ALL = {
     "regret_curve": figures.regret_curve,
     "footprint": footprint.footprint,
     "kde_hotspot": footprint.kde_hotspot,
+    # scenario engine: the named non-stationarity library
+    "scenario_suite": scenario_suite.scenario_suite,
     # harness + scale-out throughput (perf trajectory)
     "suite_build": common.suite_build,
     "bandit_scale": bandit_scale.bandit_scale,

@@ -1,0 +1,97 @@
+"""The scenario-library benchmark: every named non-stationarity regime
+through the sharded evaluation grid, with QoS + event-recovery columns.
+
+One compiled grid program per strategy covers ALL library scenarios
+(lanes = scenarios, stacked drivers; they shard across devices exactly
+like seeds do in `get_suite`). Per scenario the payload records client
+QoS satisfaction, Jain fairness, and the accumulator's event-relative
+recovery statistics (worst dip, slowest recovery over the scenario's
+event marks) — the Fig 9/10-style adaptation story for regimes the
+paper never measured. EXPERIMENTS.md §Scenario-library holds the
+reference table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import emit, strategy_name, timed
+from repro.continuum import (build_sim_grid_fn, client_qos_satisfaction_stream,
+                             compile_scenario, event_recovery, get_library,
+                             jain_fairness_stream, make_topology,
+                             stack_drivers)
+
+# contrast pair: the adaptive balancer vs the static-proximity baseline
+SUITE_STRATEGIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
+SMOKE_SCENARIOS = ("baseline", "surge", "cascade_failure", "everything")
+
+_cache = common.register_cache({})
+
+
+def get_scenario_suite():
+    """{(scenario_name, label): StreamOutputs} over the whole library."""
+    if _cache:
+        return _cache
+    K, M = common.N_LBS, common.N_INSTANCES
+    cfg = common.CFG
+    lib = get_library(cfg.horizon, K, M)
+    names = [n for n in lib if not common.SMOKE or n in SMOKE_SCENARIOS]
+    topo = make_topology(jax.random.PRNGKey(1), K, M)
+    rtt = topo.lb_instance_rtt()
+    rtts = jnp.broadcast_to(rtt[None], (len(names),) + rtt.shape)
+    drivers = stack_drivers(
+        [compile_scenario(lib[n], cfg, jax.random.PRNGKey(500 + i))
+         for i, n in enumerate(names)])
+    # one key per lane so scenario comparisons share the noise stream
+    keys = jnp.broadcast_to(jax.random.PRNGKey(11)[None],
+                            (len(names), 2))
+
+    lowered, mesh = [], None
+    for label, kw in SUITE_STRATEGIES:
+        run_grid, mesh = build_sim_grid_fn(
+            strategy_name(label), cfg, K, M, mesh=mesh,
+            warmup_steps=common.WARM, **kw)
+        lowered.append(jax.jit(run_grid).lower(rtts, drivers, keys))
+    for (label, kw), exe in zip(SUITE_STRATEGIES,
+                                common.compile_all(lowered)):
+        outs = exe(rtts, drivers, keys)
+        for i, name in enumerate(names):
+            _cache[(name, label)] = jax.tree.map(lambda x: x[i], outs)
+    _cache["names"] = names
+    return _cache
+
+
+def scenario_suite():
+    suite = get_scenario_suite()
+
+    def compute():
+        out = {}
+        for name in suite["names"]:
+            row = {}
+            for label, _ in SUITE_STRATEGIES:
+                o = suite[(name, label)]
+                rec = event_recovery(o.acc, common.CFG.ev_bucket)
+                cell = {
+                    "qos_sat_pct": client_qos_satisfaction_stream(
+                        o.acc, common.CFG.rho),
+                    "jain": jain_fairness_stream(o.acc),
+                    "events": len(rec),
+                }
+                if rec:
+                    cell["worst_dip"] = min(r["dip"] for r in rec)
+                    recovered = [r["recovery_s"] for r in rec
+                                 if r["recovered"]]
+                    cell["unrecovered_events"] = len(rec) - len(recovered)
+                    if recovered:
+                        cell["max_recovery_s"] = max(recovered)
+                row[label] = cell
+            out[name] = row
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(
+        f"{n}:qep={row['qedgeproxy']['qos_sat_pct']:.0f}%"
+        for n, row in payload.items())
+    emit("scenario_suite", us, derived, payload)
+    return payload

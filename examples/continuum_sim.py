@@ -11,22 +11,32 @@ import argparse
 import jax
 
 from repro.continuum import (SimConfig, client_qos_satisfaction,
-                             jain_fairness, make_topology, rolling_qos,
-                             run_sim)
+                             compile_scenario, get_library, jain_fairness,
+                             make_topology, rolling_qos, run_sim)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--horizon", type=float, default=180.0)
-    ap.add_argument("--scenario", type=int, default=1)
+    ap.add_argument("--scenario", type=int, default=1,
+                    help="topology seed")
+    ap.add_argument("--events", default=None,
+                    help="named library scenario driving the run "
+                         "(e.g. surge, cascade_failure; default: "
+                         "stationary baseline)")
     args = ap.parse_args()
 
     cfg = SimConfig(horizon=args.horizon)
-    warm = int(60 / cfg.dt)
+    warm = int(min(60.0, args.horizon / 3) / cfg.dt)
     topo = make_topology(jax.random.PRNGKey(args.scenario), 30, 10)
     rtt = topo.lb_instance_rtt()
+    drivers = None
+    if args.events:
+        scn = get_library(cfg.horizon, 30, 10)[args.events]
+        drivers = compile_scenario(scn, cfg, jax.random.PRNGKey(0))
     print(f"topology: 30 nodes, 10 instances on nodes "
-          f"{topo.instance_nodes.tolist()}")
+          f"{topo.instance_nodes.tolist()}"
+          + (f"; events: {args.events}" if args.events else ""))
     print(f"QoS: tau={cfg.tau*1e3:.0f}ms rho={cfg.rho} W={cfg.window}s; "
           f"120 clients x 10 req/s\n")
 
@@ -38,7 +48,8 @@ def main():
         ("proxy-mity 0.9", "proxy_mity", dict(alpha=0.9)),
         ("Dec-SARSA", "dec_sarsa", {}),
     ]:
-        outs = run_sim(name, rtt, cfg, jax.random.PRNGKey(7), **kw)
+        outs = run_sim(name, rtt, cfg, jax.random.PRNGKey(7),
+                       drivers=drivers, **kw)
         sat = client_qos_satisfaction(outs, cfg.rho, warm)
         fair = jain_fairness(outs, warmup_steps=warm)
         roll = rolling_qos(outs, int(cfg.window / cfg.dt))[warm:].mean()

@@ -1,0 +1,109 @@
+"""The named scenario library: every dynamic regime the paper (and its
+related work) argues about, as one `Scenario` each.
+
+Event times are *fractions of the horizon*, so the same library runs
+at the full 180 s evaluation horizon and at the seconds-level smoke
+horizon; instance/LB subsets are fractions of M/K, so the same entries
+drive the 30×10 paper testbed and the fleet-scale bandit_scale cells.
+
+The library is the sharded-grid axis: `compile_scenario` each entry,
+`stack_drivers` the results, and scenario diversity spreads over
+devices exactly like seeds do (`benchmarks/scenario_suite.py`,
+`build_sim_grid_fn`).
+
+Capacity framing (defaults, 30×10, s_m=5.5 ms): demand 1200 req/s vs
+~1818 req/s capacity. `surge` stays under capacity (adaptation without
+overload); `flash_crowd` and `cascade_failure` push through it
+(recovery after genuine QoS loss); the rest stress the estimate
+(drift, partition, slowdown) rather than raw capacity.
+"""
+from __future__ import annotations
+
+from repro.continuum.scenarios import (Autoscale, ClientChurn, DiurnalWave,
+                                       InstanceKill, InstanceRestore,
+                                       LinkDegrade, LoadSurge, Partition,
+                                       RttDrift, Scenario, ServiceSlowdown)
+
+
+def _frac(n: int, frac: float, lo: int = 1) -> tuple[int, ...]:
+    """First max(lo, frac*n) indices — deterministic subset helper."""
+    return tuple(range(max(lo, int(round(frac * n)))))
+
+
+def get_library(horizon: float, n_nodes: int = 30, n_instances: int = 10,
+                base_clients: int = 4) -> dict[str, Scenario]:
+    """~11 named scenarios sized to ``horizon`` seconds and a K×M fleet."""
+    hz, K, M = horizon, n_nodes, n_instances
+    kw = dict(n_nodes=K, n_instances=M, base_clients=base_clients)
+    third_m = _frac(M, 1 / 3)
+    third_k = _frac(K, 1 / 3)
+
+    lib = [
+        Scenario("baseline", (), description="stationary reference", **kw),
+        Scenario(
+            "surge",
+            (LoadSurge(start=0.5 * hz, extra=2, fraction=0.5),),
+            description="step surge on half the LBs (Fig. 10 regime)", **kw),
+        Scenario(
+            "flash_crowd",
+            (LoadSurge(start=0.4 * hz, stop=0.6 * hz, extra=4,
+                       fraction=0.8, ramp=0.05 * hz),),
+            description="ramped over-capacity crowd, then gone", **kw),
+        Scenario(
+            "cascade_failure",
+            (InstanceKill(start=0.35 * hz, instances=third_m[:max(1, len(third_m) // 2)]),
+             InstanceKill(start=0.5 * hz, instances=third_m[max(1, len(third_m) // 2):] or third_m[:1]),
+             InstanceRestore(start=0.75 * hz, instances=third_m)),
+            description="two failure waves, one mass restore", **kw),
+        Scenario(
+            "rolling_restart",
+            tuple(InstanceKill(start=(0.3 + 0.5 * i / M) * hz,
+                               stop=(0.3 + 0.5 * i / M) * hz + 0.04 * hz,
+                               instances=(i,))
+                  for i in range(M)),
+            description="every instance drains briefly, staggered", **kw),
+        Scenario(
+            "diurnal",
+            (DiurnalWave(start=0.0, period=0.5 * hz, amplitude=2.0),),
+            description="fleet-wide sinusoidal load", **kw),
+        Scenario(
+            "rtt_drift",
+            (RttDrift(start=0.3 * hz, stop=0.7 * hz, factor=2.0),),
+            description="mobility-style global RTT ramp, held", **kw),
+        Scenario(
+            "partition_heal",
+            (Partition(start=0.4 * hz, stop=0.7 * hz,
+                       lbs=third_k, instances=third_m),),
+            description="a third of the LBs lose a third of the fleet,"
+                        " then heal", **kw),
+        Scenario(
+            "hetero_slowdown",
+            (ServiceSlowdown(start=0.0, instances=tuple(range(0, M, 2)),
+                             factor=1.4),
+             ServiceSlowdown(start=0.45 * hz, stop=0.75 * hz,
+                             instances=(M - 1,), factor=3.0)),
+            description="heterogeneous hardware + a mid-run throttle", **kw),
+        Scenario(
+            "churn",
+            (ClientChurn(start=0.0, rate=0.5, max_delta=2),),
+            description="per-LB clamped random-walk client churn", **kw),
+        Scenario(
+            "autoscale_up",
+            (InstanceKill(start=0.0, instances=third_m),
+             Autoscale(start=0.4 * hz, stop=0.7 * hz, instances=third_m,
+                       direction="up")),
+            description="start short-handed, autoscaler staggers in"
+                        " replicas", **kw),
+        Scenario(
+            "everything",
+            (ClientChurn(start=0.0, rate=0.3, max_delta=1),
+             LoadSurge(start=0.3 * hz, extra=2, fraction=0.5),
+             InstanceKill(start=0.45 * hz, stop=0.75 * hz,
+                          instances=third_m[:max(1, len(third_m) // 2)]),
+             RttDrift(start=0.5 * hz, stop=0.8 * hz, factor=1.5),
+             ServiceSlowdown(start=0.6 * hz, stop=0.85 * hz,
+                             instances=(M - 1,), factor=2.0)),
+            description="surge + failure + drift + throttle + churn,"
+                        " overlapping", **kw),
+    ]
+    return {s.name: s for s in lib}

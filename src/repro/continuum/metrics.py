@@ -48,6 +48,17 @@ class MetricAccumulator(NamedTuple):
     harness always discards the same warmup prefix). Regret and the
     variation budget accumulate over the full horizon, like their
     trace-mode counterparts.
+
+    ``ev_succ``/``ev_n`` are the *event-relative* recovery windows:
+    for each scenario event mark e (a step index from
+    ``Drivers.marks``), slot 0 holds the fleet QoS sums over the
+    pre-event baseline window [e - pre, e) and slots 1..B the
+    consecutive post-event buckets [e, e+w), [e+w, e+2w), … — enough
+    to read dip depth and time-to-recover for *any* scenario without a
+    trajectory (Fig 9/10-style adaptation metrics; see
+    ``event_recovery``). They accumulate regardless of warmup (events
+    carry their own local baseline) and stay zero when no marks are
+    set (every legacy driver path).
     """
     succ_kc: jax.Array        # (K, C) post-warmup QoS successes per client slot
     n_kc: jax.Array           # (K, C) post-warmup issued requests per client slot
@@ -58,6 +69,8 @@ class MetricAccumulator(NamedTuple):
     vb_k: jax.Array           # (K,)  empirical variation budget partial sum
     prev_mu: jax.Array        # (K, M) previous step's true mu (variation carry)
     steps_measured: jax.Array  # ()   f32 count of post-warmup steps
+    ev_succ: jax.Array        # (E, 1+B) QoS successes per event window
+    ev_n: jax.Array           # (E, 1+B) issued requests per event window
 
 
 class StepSeries(NamedTuple):
@@ -75,7 +88,14 @@ class StreamOutputs(NamedTuple):
 
 
 def init_accumulator(K: int, M: int, C: int,
-                     bins: int = PROC_HIST_BINS) -> MetricAccumulator:
+                     bins: int = PROC_HIST_BINS,
+                     *,
+                     n_marks: int,
+                     ev_buckets: int) -> MetricAccumulator:
+    """``n_marks``/``ev_buckets`` size the event-recovery windows and
+    must match the driver compiler (``scenarios.MAX_MARKS``) and the
+    run's ``SimConfig.ev_buckets`` — ``build_sim_parts`` passes both,
+    so there are deliberately no defaults to drift."""
     return MetricAccumulator(
         succ_kc=jnp.zeros((K, C), jnp.float32),
         n_kc=jnp.zeros((K, C), jnp.float32),
@@ -86,6 +106,8 @@ def init_accumulator(K: int, M: int, C: int,
         vb_k=jnp.zeros((K,), jnp.float32),
         prev_mu=jnp.zeros((K, M), jnp.float32),
         steps_measured=jnp.zeros((), jnp.float32),
+        ev_succ=jnp.zeros((n_marks, 1 + ev_buckets), jnp.float32),
+        ev_n=jnp.zeros((n_marks, 1 + ev_buckets), jnp.float32),
     )
 
 
@@ -101,6 +123,9 @@ def update_accumulator(
     mu: jax.Array,           # (K, M) true success probabilities this step
     t_idx: jax.Array,        # scalar i32 global step index
     warmup_steps: int,
+    marks: jax.Array | None = None,   # (E,) event-onset steps, -1 padded
+    ev_pre_steps: int = 1,
+    ev_bucket_steps: int = 1,
 ) -> MetricAccumulator:
     """One on-device accumulator update; everything here is O(K·M)."""
     K, C = rewards.shape
@@ -120,6 +145,24 @@ def update_accumulator(
         issf.ravel(), (kidx * M + choices).ravel(),
         num_segments=K * M).reshape(K, M)
 
+    # event-relative recovery windows: route this step's fleet-wide
+    # (succ, issued) scalars into each mark's pre slot or post bucket;
+    # steps outside every window (or sentinel marks) scatter out of
+    # bounds and are dropped. O(E) per step.
+    ev_succ, ev_n = acc.ev_succ, acc.ev_n
+    if marks is not None:
+        E, B1 = ev_succ.shape
+        rel = t_idx.astype(jnp.int32) - marks                # (E,)
+        pre = (rel >= -ev_pre_steps) & (rel < 0)
+        pb = jnp.where(rel >= 0, rel // ev_bucket_steps, B1)
+        slot = jnp.where(pre, 0, 1 + pb)                     # (E,)
+        valid = (marks >= 0) & (pre | ((rel >= 0) & (pb < B1 - 1)))
+        slot = jnp.where(valid, slot, B1)                    # OOB -> dropped
+        eidx = jnp.arange(E)
+        ev_succ = ev_succ.at[eidx, slot].add(
+            (rewards * issf).sum(), mode="drop")
+        ev_n = ev_n.at[eidx, slot].add(issf.sum(), mode="drop")
+
     vb_step = jnp.where(t_idx > 0, jnp.abs(mu - acc.prev_mu).max(-1), 0.0)
     return MetricAccumulator(
         succ_kc=acc.succ_kc + meas * rewards * issf,
@@ -131,6 +174,8 @@ def update_accumulator(
         vb_k=acc.vb_k + vb_step,
         prev_mu=mu,
         steps_measured=acc.steps_measured + meas,
+        ev_succ=ev_succ,
+        ev_n=ev_n,
     )
 
 
@@ -326,3 +371,84 @@ def cumulative_regret_series(series: StepSeries) -> np.ndarray:
 def variation_budget_stream(acc: MetricAccumulator) -> np.ndarray:
     """(K,) empirical V_k(T) partial sum (Def. 1)."""
     return np.asarray(acc.vb_k)
+
+
+# ---------------------------------------------------------------------------
+# Event-relative recovery (scenario engine).
+# ---------------------------------------------------------------------------
+
+def event_windows_from_series(succ: np.ndarray, issued: np.ndarray,
+                              marks: np.ndarray, ev_pre_steps: int,
+                              ev_bucket_steps: int,
+                              ev_buckets: int) -> tuple[np.ndarray, np.ndarray]:
+    """Reference (post-hoc) computation of the accumulator's
+    ``ev_succ``/``ev_n`` windows from per-step scalar series — the
+    trace-mode counterpart used for stream==trace parity and for
+    reading recovery off a ``trace=True`` run."""
+    marks = np.asarray(marks)
+    E = marks.shape[0]
+    ev_s = np.zeros((E, 1 + ev_buckets), np.float64)
+    ev_n = np.zeros((E, 1 + ev_buckets), np.float64)
+    T = len(succ)
+    for e, m in enumerate(marks):
+        if m < 0:
+            continue
+        lo = max(0, m - ev_pre_steps)
+        ev_s[e, 0] = succ[lo:m].sum()
+        ev_n[e, 0] = issued[lo:m].sum()
+        for b in range(ev_buckets):
+            blo, bhi = m + b * ev_bucket_steps, m + (b + 1) * ev_bucket_steps
+            if blo >= T:
+                break
+            ev_s[e, 1 + b] = succ[blo:bhi].sum()
+            ev_n[e, 1 + b] = issued[blo:bhi].sum()
+    return ev_s, ev_n
+
+
+def event_recovery(acc_or_windows, bucket_s: float,
+                   threshold: float = 0.95) -> list[dict]:
+    """Per-event adaptation statistics from the recovery windows.
+
+    Returns one dict per real (non-sentinel, data-bearing) event:
+    ``pre`` (baseline QoS ratio in the pre-window), ``dip`` (worst
+    post-bucket ratio, and its time as ``dip_s``), ``steady`` (mean of
+    the last ≤3 data-bearing post buckets), ``recovered`` (whether QoS
+    came back within the observed windows), and ``recovery_s`` — the
+    left edge of the first post bucket at or after the dip with ratio
+    ≥ ``threshold * steady`` (``None`` when it never does), i.e. the
+    Fig 10/11-style time-to-recover, now available for any scenario
+    for free. Ramped events (flash crowds) dip several buckets after
+    their onset mark, which is why recovery is measured from the dip,
+    not from bucket 0.
+    """
+    if isinstance(acc_or_windows, MetricAccumulator):
+        ev_s = np.asarray(acc_or_windows.ev_succ, np.float64)
+        ev_n = np.asarray(acc_or_windows.ev_n, np.float64)
+    else:
+        ev_s, ev_n = (np.asarray(x, np.float64) for x in acc_or_windows)
+    out = []
+    for e in range(ev_s.shape[0]):
+        post_n = ev_n[e, 1:]
+        has = post_n > 0
+        if not has.any():
+            continue
+        ratio = ev_s[e, 1:][has] / post_n[has]
+        pre = (ev_s[e, 0] / ev_n[e, 0]) if ev_n[e, 0] > 0 else float("nan")
+        steady = float(ratio[-3:].mean())
+        dip_idx = int(np.argmin(ratio))
+        rec_mask = ratio[dip_idx:] >= threshold * steady
+        bucket_left = np.flatnonzero(has)
+        if rec_mask.any():
+            rec_idx = dip_idx + int(np.argmax(rec_mask))
+            recovery_s = float(bucket_left[rec_idx] * bucket_s)
+        else:                    # still degrading at the window edge
+            recovery_s = None
+        out.append({
+            "pre": float(pre),
+            "dip": float(ratio.min()),
+            "dip_s": float(bucket_left[dip_idx] * bucket_s),
+            "steady": steady,
+            "recovered": recovery_s is not None,
+            "recovery_s": recovery_s,
+        })
+    return out

@@ -44,6 +44,15 @@ Engine structure (streaming-first):
 * Maintenance runs on a fixed-size player group per step (balanced
   staggered clocks), so the O(K·M·R) estimate is paid for ~K/H_d
   players instead of all K.
+* **Scenarios drive every run**: the engine consumes a ``Drivers``
+  pytree of dense per-step schedules (client counts, instance
+  liveness, factored RTT modulation, per-instance service times)
+  compiled from a declarative event timeline
+  (``repro.continuum.scenarios``; named library in
+  ``repro.continuum.library``). Legacy ``n_clients``/``active``
+  kwargs wrap into neutral drivers that reproduce the pre-scenario
+  engine bit-for-bit; the streaming accumulator keys time-to-recover
+  windows off the scenario's event marks.
 * **The evaluation grid shards across devices**: scenario/seed lanes
   are independent simulations (the MP-MAB players never communicate,
   and neither do grid cells), so ``run_sim_grid`` /
@@ -67,8 +76,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.continuum import metrics as qm
+from repro.continuum import scenarios as qs
 from repro.continuum.metrics import (MetricAccumulator, StepSeries,
                                      StreamOutputs)
+from repro.continuum.scenarios import Drivers
 from repro.core import bandit as qb
 from repro.core import baselines as bl
 from repro.core.kde import normal_cdf
@@ -92,6 +103,13 @@ class SimConfig:
     window: float = 10.0
     ring: int = 64
     reward_ring: int = 512
+    # Event-relative recovery windows (scenario engine): the streaming
+    # accumulator keeps, per scenario event mark, one pre-event
+    # baseline window of ev_pre seconds and ev_buckets consecutive
+    # post-event buckets of ev_bucket seconds each (metrics.ev_succ).
+    ev_pre: float = 10.0
+    ev_bucket: float = 2.0
+    ev_buckets: int = 30
 
     @property
     def num_steps(self) -> int:
@@ -166,14 +184,15 @@ def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int)
 
 def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
     """Static proximity weights; requests sampled i.i.d. from them
-    (proxy-mity randomizes per request; there is no SWRR state)."""
+    (proxy-mity randomizes per request; there is no SWRR state).
+    Selection keys come from the scan's per-round stream, so the state
+    carries no PRNG key of its own."""
 
     class PMState(NamedTuple):
         weights: jax.Array
-        key: jax.Array
 
     def init(rtt, active, key):
-        return PMState(bl.proxy_mity_weights(rtt, alpha, active), key)
+        return PMState(bl.proxy_mity_weights(rtt, alpha, active))
 
     def select(state, key, t, active):
         choice = jax.random.categorical(key, jnp.log(state.weights + 1e-30), axis=-1)
@@ -287,11 +306,20 @@ def build_sim_parts(
       empty queue/accumulator, the staggered maintenance groups, and the
       full-horizon (T, 2) per-step key array (small; chunk drivers slice
       it so chunking never replays or forks the PRNG stream).
-    * ``step_fn(rtt, s_m, carry, xs) -> (carry, ys)`` — one simulator
-      step. ``xs = (t_idx, n_clients_t, active_t, key_t)`` with a
-      *global* ``t_idx``, so a chunked scan is bit-identical to one
-      full-horizon scan. ``ys`` is a full ``SimOutputs`` row in trace
-      mode, a ``StepSeries`` row otherwise.
+    * ``step_fn(rtt, marks, carry, xs) -> (carry, ys)`` — one simulator
+      step. ``xs = (t_idx, n_clients_t, active_t, rtt_scale_t,
+      rtt_cut_k_t, rtt_cut_m_t, s_m_t, key_t)`` — one row of the
+      scenario ``Drivers`` plus a *global* ``t_idx``, so a chunked scan
+      is bit-identical to one full-horizon scan. The step first forms
+      the effective RTT ``rtt * rtt_scale[None, :] + min(cut_k[:,
+      None], cut_m[None, :])`` and the (M,) service-time row, and
+      threads them through placement events, maintenance, the true-mu
+      oracle and the queue recursion; with neutral drivers (scale 1,
+      cut 0, constant s_m) every computed float is bit-for-bit the
+      pre-scenario-engine value. ``ys`` is a full ``SimOutputs`` row in
+      trace mode, a ``StepSeries`` row otherwise. ``marks`` are the
+      scenario's event-onset steps for the accumulator's recovery
+      windows (ignored in trace mode).
 
     The carry is ``(state, queue, prev_active, acc, groups)`` with
     ``acc=None`` in trace mode.
@@ -302,6 +330,8 @@ def build_sim_parts(
     subset_maint = fused and strat.get("maintain_subset") is not None
     n_phases = max(cfg.maint_every, 1)
     group_size = -(-K // n_phases)      # ceil: players per decision tick
+    ev_pre_steps = max(1, int(round(cfg.ev_pre / cfg.dt)))
+    ev_bucket_steps = max(1, int(round(cfg.ev_bucket / cfg.dt)))
 
     def init_fn(rtt, active0, key):
         k_init, k_phase, k_scan = jax.random.split(key, 3)
@@ -317,33 +347,41 @@ def build_sim_parts(
         groups = jnp.concatenate(
             [perm, jnp.full((pad,), K, jnp.int32)]).reshape(
                 n_phases, group_size)
-        acc = None if trace else qm.init_accumulator(K, M, C)
+        acc = None if trace else qm.init_accumulator(
+            K, M, C, n_marks=qs.MAX_MARKS, ev_buckets=cfg.ev_buckets)
         keys = jax.random.split(k_scan, T)
         return (s0, q0, active0, acc, groups), keys
 
-    def step_fn(rtt, s_m, carry, xs):
+    def step_fn(rtt, marks, carry, xs):
         state, q, prev_active, acc, groups = carry
-        t_idx, nc, act, k_step = xs
+        t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step = xs
         t = t_idx.astype(jnp.float32) * cfg.dt
+
+        # --- scenario modulation: effective RTT and service row for
+        # THIS step. The partition term is the factored rank-1 AND
+        # (only LB-side ∩ instance-side routes pay the cut); with
+        # neutral drivers (*1.0, +0.0) every float is unchanged. ---
+        rtt_t = rtt * rtt_scale[None, :] + jnp.minimum(
+            cut_k[:, None], cut_m[None, :])
 
         # --- placement events (paper Alg 3/4 trigger) ---
         changed = jnp.any(act != prev_active)
         state = jax.lax.cond(
             changed,
-            lambda s: strat["on_activity"](s, act, rtt, t),
+            lambda s: strat["on_activity"](s, act, rtt_t, t),
             lambda s: s,
             state)
 
         # --- maintenance: only the player group whose clock fires ---
         group = groups[t_idx % n_phases]
         if subset_maint:
-            state = strat["maintain_subset"](state, rtt, t, group)
+            state = strat["maintain_subset"](state, rtt_t, t, group)
         else:
             lb_mask = jnp.zeros((K,), bool).at[group].set(
                 True, mode="drop")
-            state = strat["maintain"](state, rtt, t, lb_mask)
+            state = strat["maintain"](state, rtt_t, t, lb_mask)
 
-        mu_true = _true_mu(rtt, q, cfg, s_m)         # (K, M) at step start
+        mu_true = _true_mu(rtt_t, q, cfg, s_m)       # (K, M) at step start
         w_now = strat["weights"](state)
         reg = step_regret(w_now, mu_true, act)
         q_start = q
@@ -351,7 +389,8 @@ def build_sim_parts(
         mask_all = jnp.arange(C)[None, :] < nc[:, None]        # (K, C)
         # service is continuous: drain dt/C of capacity per round so
         # in-step arrivals and departures interleave (a step-end-only
-        # drain would overstate in-step queueing by ~C/2 requests)
+        # drain would overstate in-step queueing by ~C/2 requests).
+        # s_m is an (M,) row, so throttled instances drain slower.
         served_per_round = cfg.dt / (C * s_m)
         kidx = jnp.arange(K)
 
@@ -374,8 +413,8 @@ def build_sim_parts(
             z = jnp.exp(
                 cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
             q_seen = q[choice]
-            proc = (q_seen + 1.0) * s_m * z
-            lat = rtt[kidx, choice] + proc
+            proc = (q_seen + 1.0) * s_m[choice] * z
+            lat = rtt_t[kidx, choice] + proc
             if batched_record:
                 state = strat["record_feedback"](state, choice, lat,
                                                  t, mask)
@@ -408,7 +447,9 @@ def build_sim_parts(
             acc = qm.update_accumulator(
                 acc, rewards=rewards, issued=issued, choices=choices,
                 procs=procs, arrivals=arrivals, regret=reg, mu=mu_true,
-                t_idx=t_idx, warmup_steps=warmup_steps)
+                t_idx=t_idx, warmup_steps=warmup_steps, marks=marks,
+                ev_pre_steps=ev_pre_steps,
+                ev_bucket_steps=ev_bucket_steps)
             issf = issued.astype(jnp.float32)
             ys = StepSeries(succ=(rewards * issf).sum(),
                             issued=issf.sum(), regret=reg.sum())
@@ -427,14 +468,19 @@ def build_sim_fn(
     warmup_steps: int = 0,
     **strategy_kw,
 ):
-    """Build a traceable ``run(rtt, n_clients, active, key)``.
+    """Build a traceable ``run(rtt, drivers, key)``.
+
+    ``drivers`` is a compiled-scenario :class:`Drivers` pytree (see
+    ``repro.continuum.scenarios``); ``scenarios.neutral_drivers``
+    reproduces the pre-scenario-engine constant schedules bit-for-bit.
 
     Exposed separately from ``run_sim`` so harnesses can transform it:
     the evaluation suite vmaps the scenario axis into one program per
     strategy and shards its lanes across devices
     (``build_sim_grid_fn``; benchmarks/common.py::get_suite), and
     benchmarks/beyond.py vmaps a traced ``service_time`` to sweep the
-    utilization axis.
+    utilization axis (``service_time`` overrides ``drivers.s_m`` with a
+    broadcast scalar, so it may be a traced vmap axis).
 
     ``trace=True`` returns full ``SimOutputs`` trajectories (O(T·K·M)
     memory — the debug/inspection mode); ``trace=False`` returns
@@ -452,15 +498,15 @@ def build_sim_fn(
         strategy_name, cfg, K, M, fused=fused, trace=trace,
         warmup_steps=warmup_steps, **strategy_kw)
 
-    def run(rtt, n_clients, active, key, service_time=None):
-        # service_time may be a traced scalar so harnesses can sweep the
-        # utilization axis (benchmarks/beyond.py vmaps it) without one
-        # compile per operating point; None keeps the static default.
-        s_m = cfg.service_time if service_time is None else service_time
-        carry0, keys = init_fn(rtt, active[0], key)
-        xs = (jnp.arange(T), n_clients, active, keys)
+    def run(rtt, drivers, key, service_time=None):
+        if service_time is not None:
+            drivers = drivers._replace(s_m=jnp.broadcast_to(
+                jnp.asarray(service_time, jnp.float32), drivers.s_m.shape))
+        carry0, keys = init_fn(rtt, drivers.active[0], key)
+        xs = (jnp.arange(T),
+              *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys)
         carry, ys = jax.lax.scan(
-            lambda c, x: step_fn(rtt, s_m, c, x), carry0, xs)
+            lambda c, x: step_fn(rtt, drivers.marks, c, x), carry0, xs)
         if trace:
             return ys
         return StreamOutputs(acc=carry[3], series=ys)
@@ -479,36 +525,39 @@ def build_sim_chunks(
 ):
     """Chunked-horizon streaming: ``(init_fn, chunk_fn)``.
 
-    ``chunk_fn(rtt, carry, t_idx, n_clients, active, keys)`` scans the
-    given time slice and returns ``(carry, StepSeries)``. Jit it with
-    ``donate_argnums=(1,)`` (and the slice args) so the carry buffers
-    are reused in place and peak device memory stays O(K·M) + one
-    chunk of O(T) scalars regardless of the horizon. ``run_sim_stream``
-    is the reference driver.
+    ``chunk_fn(rtt, carry, t_idx, drivers, keys)`` scans the given time
+    slice — ``drivers`` is a ``scenarios.slice_drivers`` slice whose
+    per-step fields span the chunk (marks ride along whole, they are
+    global step indices) — and returns ``(carry, StepSeries)``. Jit it
+    with ``donate_argnums=(1,)`` (and the slice args) so the carry
+    buffers are reused in place and peak device memory stays O(K·M) +
+    one chunk of O(T) scalars regardless of the horizon.
+    ``run_sim_stream`` is the reference driver.
     """
     init_fn, step_fn = build_sim_parts(
         strategy_name, cfg, K, M, fused=fused, trace=False,
         warmup_steps=warmup_steps, **strategy_kw)
 
-    def chunk_fn(rtt, carry, t_idx, n_clients, active, keys,
-                 service_time=None):
-        s_m = cfg.service_time if service_time is None else service_time
+    def chunk_fn(rtt, carry, t_idx, drivers, keys, service_time=None):
+        if service_time is not None:
+            drivers = drivers._replace(s_m=jnp.broadcast_to(
+                jnp.asarray(service_time, jnp.float32), drivers.s_m.shape))
+        xs = (t_idx, *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys)
         return jax.lax.scan(
-            lambda c, x: step_fn(rtt, s_m, c, x), carry,
-            (t_idx, n_clients, active, keys))
+            lambda c, x: step_fn(rtt, drivers.marks, c, x), carry, xs)
 
     return init_fn, chunk_fn
 
 
-# The O(T) input buffers (n_clients, active) are donated, but ONLY when
-# this module constructed them itself (caller passed None): donating a
-# caller-supplied array would invalidate it under the caller's feet on
-# backends that implement donation, and callers routinely reuse one
-# n_clients/active across strategies. rtt and key are never donated
-# (rtt is shared across strategies; key is 8 bytes). Donated buffers
-# XLA cannot alias to an output draw a UserWarning per call; that is
-# the expected case here (they are freed, not aliased), so the
-# dispatch silences exactly that message.
+# The O(T) driver buffers are donated, but ONLY when this module
+# constructed every leaf itself (caller passed neither drivers nor
+# n_clients/active): donating a caller-supplied array would invalidate
+# it under the caller's feet on backends that implement donation, and
+# callers routinely reuse one Drivers batch across strategies. rtt and
+# key are never donated (rtt is shared across strategies; key is
+# 8 bytes). Donated buffers XLA cannot alias to an output draw a
+# UserWarning per call; that is the expected case here (they are
+# freed, not aliased), so the dispatch silences exactly that message.
 
 @contextlib.contextmanager
 def _quiet_donation():
@@ -518,17 +567,20 @@ def _quiet_donation():
         yield
 
 
-def _default_inputs(T, K, M, n_clients, active):
-    """Fill defaults; donate exactly the buffers we created (argnums
-    1 = n_clients, 2 = active in every driver signature below)."""
-    donate = []
-    if n_clients is None:
-        n_clients = jnp.full((T, K), 4, jnp.int32)
-        donate.append(1)
-    if active is None:
-        active = jnp.ones((T, M), bool)
-        donate.append(2)
-    return n_clients, active, tuple(donate)
+def _resolve_drivers(cfg, K, M, drivers, n_clients, active):
+    """One Drivers pytree from whichever input style the caller used:
+    a compiled scenario (``drivers``), legacy ``n_clients``/``active``
+    schedules wrapped in neutral modulation, or the constant defaults.
+    Donation (argnum 1 in every driver signature below) only when every
+    leaf is module-created."""
+    if drivers is not None:
+        if n_clients is not None or active is not None:
+            raise ValueError("pass either drivers= or n_clients=/active=, "
+                             "not both")
+        return drivers, ()
+    fresh = n_clients is None and active is None
+    drv = qs.neutral_drivers(cfg, K, M, n_clients=n_clients, active=active)
+    return drv, ((1,) if fresh else ())
 
 
 def run_sim(
@@ -538,21 +590,21 @@ def run_sim(
     key: jax.Array,
     n_clients: jax.Array | None = None,   # (T, K) i32 active clients per LB
     active: jax.Array | None = None,      # (T, M) bool instance liveness
+    drivers: Drivers | None = None,       # compiled scenario (wins over kwargs)
     **strategy_kw,
 ) -> SimOutputs:
     """Run one topology × strategy for the full horizon. jit-compiled.
 
-    Full-trajectory (trace) mode. Defaulted ``n_clients``/``active``
-    buffers are donated to the computation; caller-supplied arrays are
-    left untouched.
+    Full-trajectory (trace) mode. ``drivers`` takes a compiled
+    scenario; the legacy ``n_clients``/``active`` kwargs wrap into
+    neutral drivers. Default-constructed driver buffers are donated to
+    the computation; caller-supplied arrays are left untouched.
     """
     K, M = rtt.shape
-    T = cfg.num_steps
-    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
     with _quiet_donation():
-        return jax.jit(run, donate_argnums=donate)(
-            rtt, n_clients, active, key)
+        return jax.jit(run, donate_argnums=donate)(rtt, drv, key)
 
 
 def run_sim_batch(
@@ -562,6 +614,7 @@ def run_sim_batch(
     keys: jax.Array,             # (S, 2) one PRNG key per scenario
     n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
     active: jax.Array | None = None,      # (T, M), shared across scenarios
+    drivers: Drivers | None = None,       # shared OR (S, ·) batched pytree
     **strategy_kw,
 ) -> SimOutputs:
     """Vmap the scenario axis: one compiled program for all S seeds.
@@ -569,17 +622,19 @@ def run_sim_batch(
     Returns SimOutputs with a leading (S,) axis on every field. The
     evaluation grid's per-strategy seeds share every static shape, so
     batching them removes S-1 compilations and lets XLA overlap the
-    scenario lanes. Defaulted ``n_clients``/``active`` are donated.
-    This is the trace-mode batch driver; the streaming, device-sharded
-    grid is ``run_sim_grid``.
+    scenario lanes. A ``drivers`` batch from ``stack_drivers`` gives
+    every lane its own compiled scenario; a plain ``Drivers`` (or the
+    legacy kwargs) is shared across lanes. Defaulted driver buffers are
+    donated. This is the trace-mode batch driver; the streaming,
+    device-sharded grid is ``run_sim_grid``.
     """
     S, K, M = rtts.shape
-    T = cfg.num_steps
-    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
+    batched = drv.n_clients.ndim == 3
     run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
     with _quiet_donation():
-        return jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)),
-                       donate_argnums=donate)(rtts, n_clients, active, keys)
+        return jax.jit(jax.vmap(run, in_axes=(0, 0 if batched else None, 0)),
+                       donate_argnums=donate)(rtts, drv, keys)
 
 
 def build_sim_grid_fn(
@@ -594,16 +649,20 @@ def build_sim_grid_fn(
 ):
     """Traceable sharded evaluation grid: ``(run_grid, mesh)``.
 
-    ``run_grid(rtts, n_clients, active, keys)`` is the vmapped
-    streaming run (``run_sim_batch`` shape, ``trace=False``) with the
-    scenario/seed axis ``shard_map``-ed over ``mesh`` — a 1-D mesh from
-    ``launch.mesh.make_grid_mesh()`` by default. Grid lanes are
-    independent (no collectives), so each device scans its own S/D
-    scenarios with per-device ``MetricAccumulator``/``StepSeries``
-    carries; outputs stay device-sharded along the scenario axis until
-    the caller reads them. When the mesh has a single device the plain
-    ``jax.vmap`` body is returned unwrapped — bit-for-bit the
-    pre-sharding grid program.
+    ``run_grid(rtts, drivers, keys)`` is the vmapped streaming run
+    (``run_sim_batch`` shape, ``trace=False``) with the scenario/seed
+    axis ``shard_map``-ed over ``mesh`` — a 1-D mesh from
+    ``launch.mesh.make_grid_mesh()`` by default. ``drivers`` is an
+    (S, ·)-batched ``Drivers`` pytree (``scenarios.stack_drivers`` of
+    compiled scenarios), so scenario *diversity* — surges, failures,
+    drift, per-instance slowdowns — spreads across devices exactly
+    like seeds do. Grid lanes are independent (no collectives), so
+    each device scans its own S/D scenarios with per-device
+    ``MetricAccumulator``/``StepSeries`` carries; outputs stay
+    device-sharded along the scenario axis until the caller reads
+    them. When the mesh has a single device the plain ``jax.vmap``
+    body is returned unwrapped — bit-for-bit the pre-sharding grid
+    program.
 
     S not divisible by the device count is handled inside the traced
     function by padding with copies of the last scenario lane and
@@ -617,7 +676,6 @@ def build_sim_grid_fn(
     time (benchmarks/common.py::get_suite).
     """
     from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
 
     from repro.launch.mesh import make_grid_mesh
     from repro.sharding import logical_to_spec
@@ -626,23 +684,28 @@ def build_sim_grid_fn(
     D = int(mesh.devices.size)
     run = build_sim_fn(strategy_name, cfg, K, M, fused=fused, trace=False,
                        warmup_steps=warmup_steps, **strategy_kw)
-    vrun = jax.vmap(run, in_axes=(0, None, None, 0))
+    vrun = jax.vmap(run, in_axes=(0, 0, 0))
     if D == 1:
         return vrun, mesh
 
     grid = logical_to_spec(("grid",), mesh)     # P(<mesh axis>) per rules
-    rep = P()
+    # in_specs are pytree prefixes: every Drivers leaf shards on its
+    # leading scenario axis, same as rtts/keys.
     inner = shard_map(vrun, mesh=mesh,
-                      in_specs=(grid, rep, rep, grid),
+                      in_specs=(grid, grid, grid),
                       out_specs=grid, check_rep=False)
 
-    def run_grid(rtts, n_clients, active, keys):
+    def _pad_lanes(x, pad):
+        return jnp.concatenate([x, jnp.repeat(x[-1:], pad, 0)])
+
+    def run_grid(rtts, drivers, keys):
         S = rtts.shape[0]
         pad = (-S) % D
         if pad:
-            rtts = jnp.concatenate([rtts, jnp.repeat(rtts[-1:], pad, 0)])
-            keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, 0)])
-        out = inner(rtts, n_clients, active, keys)
+            rtts = _pad_lanes(rtts, pad)
+            keys = _pad_lanes(keys, pad)
+            drivers = jax.tree.map(lambda x: _pad_lanes(x, pad), drivers)
+        out = inner(rtts, drivers, keys)
         if pad:
             out = jax.tree.map(lambda x: x[:S], out)
         return out
@@ -657,6 +720,7 @@ def run_sim_grid(
     keys: jax.Array,             # (S, 2) one PRNG key per scenario
     n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
     active: jax.Array | None = None,      # (T, M), shared across scenarios
+    drivers: Drivers | None = None,       # shared OR (S, ·) batched pytree
     warmup_steps: int = 0,
     mesh=None,
     **strategy_kw,
@@ -665,18 +729,27 @@ def run_sim_grid(
     streaming outputs, scenario lanes spread over every device.
 
     Returns ``StreamOutputs`` with a leading (S,) axis on every field.
-    Single-device meshes degrade to the plain vmapped streaming grid.
-    Defaulted ``n_clients``/``active`` buffers are donated.
+    An un-batched ``drivers`` (or the legacy kwargs/defaults) is
+    broadcast to every lane; a ``stack_drivers`` batch drives each lane
+    with its own scenario. Single-device meshes degrade to the plain
+    vmapped streaming grid. Defaulted driver buffers are donated.
     """
     S, K, M = rtts.shape
-    T = cfg.num_steps
-    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     run_grid, mesh = build_sim_grid_fn(
         strategy_name, cfg, K, M, mesh=mesh, warmup_steps=warmup_steps,
         **strategy_kw)
+    fn = run_grid
+    if drv.n_clients.ndim == 2:
+        # shared schedule -> one lane per scenario; broadcast INSIDE
+        # the traced program so the host never materializes S copies
+        # of identical (T, ·) buffers
+        def fn(rtts_, drv_, keys_):
+            drv_b = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), drv_)
+            return run_grid(rtts_, drv_b, keys_)
     with _quiet_donation():
-        return jax.jit(run_grid, donate_argnums=donate)(
-            rtts, n_clients, active, keys)
+        return jax.jit(fn, donate_argnums=donate)(rtts, drv, keys)
 
 
 def run_sim_stream(
@@ -686,6 +759,7 @@ def run_sim_stream(
     key: jax.Array,
     n_clients: jax.Array | None = None,   # (T, K)
     active: jax.Array | None = None,      # (T, M)
+    drivers: Drivers | None = None,       # compiled scenario
     warmup_steps: int = 0,
     chunk_steps: int | None = None,
     **strategy_kw,
@@ -702,17 +776,16 @@ def run_sim_stream(
     """
     K, M = rtt.shape
     T = cfg.num_steps
-    n_clients, active, donate = _default_inputs(T, K, M, n_clients, active)
+    drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     if chunk_steps is None or chunk_steps >= T:
         run = build_sim_fn(strategy_name, cfg, K, M, trace=False,
                            warmup_steps=warmup_steps, **strategy_kw)
         with _quiet_donation():
-            return jax.jit(run, donate_argnums=donate)(
-                rtt, n_clients, active, key)
+            return jax.jit(run, donate_argnums=donate)(rtt, drv, key)
 
     init_fn, chunk_fn = build_sim_chunks(
         strategy_name, cfg, K, M, warmup_steps=warmup_steps, **strategy_kw)
-    carry, keys = jax.jit(init_fn)(rtt, active[0], key)
+    carry, keys = jax.jit(init_fn)(rtt, drv.active[0], key)
     # the carry aliases 1:1 to the chunk's output carry, so donation
     # reuses the state/accumulator buffers in place every chunk
     run_chunk = jax.jit(chunk_fn, donate_argnums=(1,))
@@ -720,8 +793,8 @@ def run_sim_stream(
     for lo in range(0, T, chunk_steps):
         hi = min(lo + chunk_steps, T)
         carry, ys = run_chunk(
-            rtt, carry, jnp.arange(lo, hi), n_clients[lo:hi],
-            active[lo:hi], keys[lo:hi])
+            rtt, carry, jnp.arange(lo, hi), qs.slice_drivers(drv, lo, hi),
+            keys[lo:hi])
         parts.append(ys)    # on-device O(chunk) scalars; the loop only
         # depends on the donated carry, so dispatch runs ahead and the
         # single device_get below drains everything at once

@@ -175,18 +175,19 @@ def test_sim_fused_matches_sequential_step_structure():
     must be bit-for-bit the sequential fallback, including in the
     overloaded regime where in-step cooldown trips steer later
     rounds."""
-    from repro.continuum import SimConfig, build_sim_fn, make_topology
+    from repro.continuum import (SimConfig, build_sim_fn, make_topology,
+                                 neutral_drivers)
     cfg = SimConfig(horizon=12.0, service_time=0.009)   # overloaded
     topo = make_topology(jax.random.PRNGKey(3), 8, 3)
     rtt = topo.lb_instance_rtt()
     T = cfg.num_steps
-    nc = jnp.full((T, 8), 6, jnp.int32)
-    act = jnp.ones((T, 3), bool)
+    drv = neutral_drivers(cfg, 8, 3,
+                          n_clients=jnp.full((T, 8), 6, jnp.int32))
     key = jax.random.PRNGKey(42)
     outs_f = jax.jit(build_sim_fn("qedgeproxy", cfg, 8, 3, fused=True))(
-        rtt, nc, act, key)
+        rtt, drv, key)
     outs_s = jax.jit(build_sim_fn("qedgeproxy", cfg, 8, 3, fused=False))(
-        rtt, nc, act, key)
+        rtt, drv, key)
     for name, xf, xs in zip(outs_f._fields, outs_f, outs_s):
         np.testing.assert_array_equal(
             np.asarray(xf), np.asarray(xs), err_msg=f"field {name}")

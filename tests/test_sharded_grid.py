@@ -2,11 +2,17 @@
 
 Grid lanes (scenario x seed) are independent simulations, so sharding
 them over a mesh must not change any result: counting statistics (QoS
-successes, arrival/choice histograms, the latency sketch) are
-integer-valued float32 sums and must match the single-device vmap
-EXACTLY; genuinely float accumulations (regret, variation budget,
-prev_mu) get float32 tolerance, per-lane reduction order being the one
-thing XLA may legally reassociate.
+successes, arrival/choice histograms, the latency sketch, the
+event-recovery windows) are integer-valued float32 sums and must match
+the single-device vmap EXACTLY; genuinely float accumulations (regret,
+variation budget, prev_mu) get float32 tolerance, per-lane reduction
+order being the one thing XLA may legally reassociate.
+
+Since the scenario engine, grid lanes carry *compiled scenarios*
+(per-lane Drivers pytrees: time-varying clients, liveness, RTT
+modulation, per-instance service times) — the subprocess parity run
+drives each lane with a different library scenario so the sharded axis
+is exercised with real diversity, not constant fills.
 
 In-process tests cover the single-device fallback (the grid builder
 must return the plain vmap program untouched); they require the
@@ -24,7 +30,8 @@ import pytest
 
 from conftest import run_sub
 from repro.continuum import (SimConfig, build_sim_fn, build_sim_grid_fn,
-                             make_topology, run_sim_grid)
+                             compile_scenario, get_library, make_topology,
+                             neutral_drivers, run_sim_grid, stack_drivers)
 
 K, M, S = 8, 4, 5
 CFG = SimConfig(horizon=6.0)
@@ -39,21 +46,29 @@ def _grid_inputs():
     rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
                       .lb_instance_rtt() for s in range(S)])
     keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(S)])
-    T = CFG.num_steps
-    return rtts, keys, jnp.full((T, K), 4, jnp.int32), jnp.ones((T, M), bool)
+    return rtts, keys
+
+
+def _scenario_lanes():
+    """One compiled library scenario per lane — the diverse grid."""
+    lib = list(get_library(CFG.horizon, K, M).values())
+    return stack_drivers(
+        [compile_scenario(lib[i % len(lib)], CFG, jax.random.PRNGKey(i))
+         for i in range(S)])
 
 
 @single_device
 def test_single_device_fallback_is_the_vmap_program():
     """On a 1-device mesh the grid driver IS the vmapped streaming run:
-    identical floats, not just close ones."""
-    rtts, keys, n_clients, active = _grid_inputs()
+    identical floats, not just close ones — including with per-lane
+    scenario drivers."""
+    rtts, keys = _grid_inputs()
+    drivers = _scenario_lanes()
     run = build_sim_fn("qedgeproxy", CFG, K, M, trace=False,
                        warmup_steps=WARM)
-    ref = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
-        rtts, n_clients, active, keys)
-    got = run_sim_grid("qedgeproxy", rtts, CFG, keys, n_clients=n_clients,
-                       active=active, warmup_steps=WARM)
+    ref = jax.jit(jax.vmap(run, in_axes=(0, 0, 0)))(rtts, drivers, keys)
+    got = run_sim_grid("qedgeproxy", rtts, CFG, keys, drivers=drivers,
+                       warmup_steps=WARM)
     for name, a, b in zip(ref.acc._fields, ref.acc, got.acc):
         np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
                                       err_msg=f"acc field {name}")
@@ -67,20 +82,39 @@ def test_builder_returns_unwrapped_vmap_on_one_device():
     fn, mesh = build_sim_grid_fn("qedgeproxy", CFG, K, M,
                                  warmup_steps=WARM)
     assert int(mesh.devices.size) == 1
-    rtts, keys, n_clients, active = _grid_inputs()
-    out = jax.jit(fn)(rtts, n_clients, active, keys)
+    rtts, keys = _grid_inputs()
+    drivers = _scenario_lanes()
+    out = jax.jit(fn)(rtts, drivers, keys)
     assert out.acc.succ_kc.shape == (S, K, CFG.max_clients)
     assert out.series.succ.shape == (S, CFG.num_steps)
+
+
+@single_device
+def test_shared_drivers_broadcast_to_lanes():
+    """An un-batched Drivers (or the legacy kwargs) drives every lane
+    with the same schedule."""
+    rtts, keys = _grid_inputs()
+    drv = neutral_drivers(CFG, K, M)
+    got = run_sim_grid("qedgeproxy", rtts, CFG, keys, drivers=drv,
+                       warmup_steps=WARM)
+    legacy = run_sim_grid("qedgeproxy", rtts, CFG, keys,
+                          warmup_steps=WARM)
+    for name, a, b in zip(got.acc._fields, got.acc, legacy.acc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"acc field {name}")
 
 
 @pytest.mark.slow
 def test_sharded_grid_matches_vmap_8dev():
     """8-, 2- and 1-device meshes against the full-width vmap reference,
-    including the pad path (S=5 on D=8 pads 3 lanes, on D=2 pads 1)."""
+    every lane a different compiled scenario, including the pad path
+    (S=5 on D=8 pads 3 lanes, on D=2 pads 1)."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.continuum import (SimConfig, build_sim_fn,
-                                     make_topology, run_sim_grid)
+                                     compile_scenario, get_library,
+                                     make_topology, run_sim_grid,
+                                     stack_drivers)
         from repro.launch.mesh import make_grid_mesh
 
         K, M, S, WARM = 8, 4, 5, 20
@@ -88,20 +122,21 @@ def test_sharded_grid_matches_vmap_8dev():
         rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
                           .lb_instance_rtt() for s in range(S)])
         keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(S)])
-        T = cfg.num_steps
-        n_clients = jnp.full((T, K), 4, jnp.int32)
-        active = jnp.ones((T, M), bool)
+        lib = list(get_library(cfg.horizon, K, M).values())
+        drivers = stack_drivers(
+            [compile_scenario(lib[i % len(lib)], cfg,
+                              jax.random.PRNGKey(i)) for i in range(S)])
 
         run = build_sim_fn("qedgeproxy", cfg, K, M, trace=False,
                            warmup_steps=WARM)
-        ref = jax.jit(jax.vmap(run, in_axes=(0, None, None, 0)))(
-            rtts, n_clients, active, keys)
+        ref = jax.jit(jax.vmap(run, in_axes=(0, 0, 0)))(
+            rtts, drivers, keys)
         COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
-                  "proc_hist", "steps_measured"}
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n"}
         for ndev in (8, 2, 1):
             mesh = make_grid_mesh(jax.devices()[:ndev])
             got = run_sim_grid("qedgeproxy", rtts, cfg, keys,
-                               n_clients=n_clients, active=active,
+                               drivers=drivers,
                                warmup_steps=WARM, mesh=mesh)
             for name in ref.acc._fields:
                 a = np.asarray(getattr(ref.acc, name))

@@ -18,9 +18,10 @@ import numpy as np
 import pytest
 
 from repro.continuum import (SimConfig, client_qos_satisfaction,
-                             client_qos_satisfaction_stream,
+                             client_qos_satisfaction_stream, compile_scenario,
                              cumulative_regret, cumulative_regret_series,
-                             jain_fairness, jain_fairness_stream,
+                             event_recovery, event_windows_from_series,
+                             get_library, jain_fairness, jain_fairness_stream,
                              make_topology, p90_proc_latency,
                              per_client_success, per_client_success_stream,
                              per_lb_request_distribution,
@@ -164,3 +165,81 @@ def test_sequential_strategy_streams(sarsa):
     np.testing.assert_allclose(
         np.asarray(stream.acc.arrivals_m),
         np.asarray(trace.arrivals)[WARM:].sum(0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-scenario parity: the same stream==trace guarantees must hold
+# when the drivers vary every step (surge + failure + RTT drift +
+# per-instance slowdown + churn all at once), and the event-relative
+# recovery windows must equal their post-hoc reference.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dynamic(rtt):
+    scn = get_library(CFG.horizon, K, M)["everything"]
+    drv = compile_scenario(scn, CFG, jax.random.PRNGKey(9))
+    trace = run_sim("qedgeproxy", rtt, CFG, jax.random.PRNGKey(5),
+                    drivers=drv)
+    stream = run_sim_stream("qedgeproxy", rtt, CFG, jax.random.PRNGKey(5),
+                            drivers=drv, warmup_steps=WARM)
+    return trace, stream, drv
+
+
+def test_dynamic_scenario_stream_matches_trace(dynamic):
+    trace, stream, _ = dynamic
+    want, want_present = per_client_success(trace, WARM)
+    got, got_present = per_client_success_stream(stream.acc)
+    np.testing.assert_array_equal(got_present, want_present)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(stream.acc.arrivals_m),
+        np.asarray(trace.arrivals)[WARM:].sum(0), atol=1e-5)
+    np.testing.assert_allclose(rolling_qos_series(stream.series, WIN),
+                               rolling_qos(trace, WIN), atol=1e-6)
+    np.testing.assert_allclose(cumulative_regret_series(stream.series),
+                               cumulative_regret(trace), rtol=1e-4,
+                               atol=1e-4)
+    # a dynamic scenario must actually move the variation budget
+    assert float(np.asarray(stream.acc.vb_k).sum()) > 0.1
+    np.testing.assert_allclose(variation_budget_stream(stream.acc),
+                               variation_budget_emp(trace),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dynamic_scenario_chunked_matches(rtt, dynamic):
+    _, full, drv = dynamic
+    chunked = run_sim_stream("qedgeproxy", rtt, CFG, jax.random.PRNGKey(5),
+                             drivers=drv, warmup_steps=WARM, chunk_steps=64)
+    for name, a, b in zip(full.acc._fields, full.acc, chunked.acc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"acc field {name}")
+
+
+def test_event_windows_match_series_reference(dynamic):
+    trace, stream, drv = dynamic
+    succ = (np.asarray(trace.rewards) * np.asarray(trace.issued)).sum((1, 2))
+    issued = np.asarray(trace.issued).sum((1, 2)).astype(np.float64)
+    pre = int(round(CFG.ev_pre / CFG.dt))
+    bstep = int(round(CFG.ev_bucket / CFG.dt))
+    want_s, want_n = event_windows_from_series(
+        succ, issued, np.asarray(drv.marks), pre, bstep, CFG.ev_buckets)
+    np.testing.assert_allclose(np.asarray(stream.acc.ev_succ), want_s,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stream.acc.ev_n), want_n,
+                               atol=1e-5)
+    # the readout produces one entry per data-bearing mark
+    rec = event_recovery(stream.acc, CFG.ev_bucket)
+    n_real = int((np.asarray(drv.marks) >= 0).sum())
+    assert 0 < len(rec) <= n_real
+    for r in rec:
+        assert 0.0 <= r["dip"] <= 1.0
+        assert (r["recovery_s"] is None) == (not r["recovered"])
+        if r["recovered"]:
+            assert r["recovery_s"] >= 0.0
+
+
+def test_no_marks_means_empty_event_stats(qep):
+    """Legacy driver paths (no scenario) leave the windows zero."""
+    _, stream = qep
+    assert float(np.abs(np.asarray(stream.acc.ev_n)).sum()) == 0.0
+    assert event_recovery(stream.acc, CFG.ev_bucket) == []
