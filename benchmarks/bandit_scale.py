@@ -37,9 +37,18 @@ devices share the container's cores, so wall-clock speedups here are
 bounded by real parallelism — per-device *memory* and program shape
 are the faithfully measured quantities; see EXPERIMENTS.md).
 
+The ``players_dev*`` cells measure the **player-sharded simulator**
+(`build_sim_players_fn`): ONE K=1000 × M=50 simulation whose player
+axis splits over 1/2/4/8 devices — per-device peak memory is the
+headline column (the ~37 MB bandit state divides D ways), and the
+``players_K10000`` cell runs a K=10⁴ fleet end to end at 8 shards to
+pin the per-device peak of a fleet one device would struggle to hold.
+Same subprocess mechanics as the grid cells.
+
 In ``--smoke`` mode the grid shrinks to seconds and the measured
 streaming/chunked cells — including one multi-fake-device ``grid_dev``
-cell, so the shard path cannot silently rot on single-GPU runners —
+cell and one 2-D (data=2 × players=2) ``grid2x2`` cell, so neither
+shard axis can silently rot on single-GPU runners —
 are gated on ``SMOKE_FLOOR_STEPS_PER_S``, a deliberately conservative
 floor (~5x below typical container numbers) so CI fails on an
 order-of-magnitude regression, not on scheduler noise. The grid cell
@@ -173,11 +182,22 @@ def _chunked_cell(K, M, horizon, chunk_steps):
 
 
 # Sharded-grid device scaling: forced host device counts for the full
-# sweep and the (smaller) smoke gate cell. Fake devices beyond the
+# sweep and the (smaller) smoke gate cells. Fake devices beyond the
 # container's cores only stress correctness, not speed.
 GRID_DEVICES = (1, 2, 4, 8)
 GRID_CELL = dict(K=100, M=10, S=8, horizon=10.0)
 SMOKE_GRID_CELL = dict(devices=4, K=30, M=10, S=4, horizon=2.0)
+# 2-D mesh smoke cell: lanes over data=2 AND each lane's players over
+# players=2 — the composed axes stay load-bearing in CI. The longer
+# horizon amortizes per-dispatch overhead so the per-data-shard rate
+# sits ~5x over the smoke floor on this container.
+SMOKE_GRID2D_CELL = dict(devices=4, players=2, K=32, M=10, S=4,
+                         horizon=6.0)
+# player-sharded single-simulation cells (full mode): the ROADMAP's
+# K=1000 x M=50 memory cell split 1/2/4/8 ways, plus one K=10^4 fleet
+PLAYERS_DEVICES = (1, 2, 4, 8)
+PLAYERS_CELL = dict(K=1000, M=50, horizon=5.0)
+PLAYERS_XL_CELL = dict(devices=8, K=10_000, M=50, horizon=2.0)
 
 _GRID_SUB_SRC = """
 import json, time
@@ -185,8 +205,9 @@ import jax, jax.numpy as jnp, numpy as np
 from benchmarks.common import executable_memory
 from repro.continuum import (SimConfig, build_sim_grid_fn, compile_scenario,
                              get_library, stack_drivers)
+from repro.launch.mesh import make_continuum_mesh
 
-K, M, S, horizon = {K}, {M}, {S}, {horizon}
+K, M, S, horizon, players = {K}, {M}, {S}, {horizon}, {players}
 cfg = SimConfig(horizon=horizon)
 T = cfg.num_steps
 rng = np.random.default_rng(0)
@@ -199,7 +220,8 @@ drivers = stack_drivers(
     [compile_scenario(lib[i % len(lib)], cfg,
                       jax.random.PRNGKey(1000 + i)) for i in range(S)])
 
-run_grid, mesh = build_sim_grid_fn("qedgeproxy", cfg, K, M)
+mesh = make_continuum_mesh(players=players) if players > 1 else None
+run_grid, mesh = build_sim_grid_fn("qedgeproxy", cfg, K, M, mesh=mesh)
 t0 = time.perf_counter()
 exe = jax.jit(run_grid).lower(rtts, drivers, keys).compile()
 compile_s = time.perf_counter() - t0
@@ -207,21 +229,54 @@ t0 = time.perf_counter()
 out = exe(rtts, drivers, keys)
 jax.block_until_ready(out)
 run_s = time.perf_counter() - t0
-cell = dict(devices=int(mesh.devices.size), scenarios=S, steps=T,
+cell = dict(devices=int(mesh.devices.size), player_shards=players,
+            scenarios=S, steps=T,
             sharded=int(mesh.devices.size) > 1, compile_s=compile_s,
             run_s=run_s, grid_steps_per_s=S * T / run_s,
             **executable_memory(exe))
 print("GRID_CELL " + json.dumps(cell))
 """
 
+_PLAYERS_SUB_SRC = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from benchmarks.common import executable_memory
+from repro.continuum import SimConfig, Scenario, build_sim_players_fn, \\
+    compile_scenario
+
+K, M, horizon = {K}, {M}, {horizon}
+cfg = SimConfig(horizon=horizon)
+T = cfg.num_steps
+rng = np.random.default_rng(0)
+rtt = jnp.asarray(rng.uniform(0.002, 0.04, (K, M)), jnp.float32)
+drv = compile_scenario(Scenario("baseline", n_nodes=K, n_instances=M),
+                       cfg, jax.random.PRNGKey(0))
+key = jax.random.PRNGKey(7)
+run, mesh = build_sim_players_fn("qedgeproxy", cfg, K, M)
+t0 = time.perf_counter()
+exe = jax.jit(run).lower(rtt, drv, key).compile()
+compile_s = time.perf_counter() - t0
+t0 = time.perf_counter()
+out = exe(rtt, drv, key)
+jax.block_until_ready(out)
+run_s = time.perf_counter() - t0
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+cell = dict(devices=int(mesh.devices.size),
+            player_shards=int(sizes.get("players", 1)), K=K, M=M,
+            steps=T, sharded=int(sizes.get("players", 1)) > 1,
+            compile_s=compile_s, run_s=run_s, steps_per_s=T / run_s,
+            us_per_step=run_s / T * 1e6, **executable_memory(exe))
+print("PLAYERS_CELL " + json.dumps(cell))
+"""
+
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _grid_cell(devices, K, M, S, horizon):
-    """One sharded-grid cell at a forced host device count.
+def _forced_device_cell(devices, src, marker):
+    """Run one benchmark cell at a forced host device count.
 
-    XLA locks the device count at first init, so each point of the
+    XLA locks the device count at first init, so each point of a
     device-scaling sweep needs its own process; the child pins
     JAX_PLATFORMS=cpu (fake host devices are a CPU-platform feature)
     and reports its cell dict as JSON on stdout. The parent env is
@@ -238,28 +293,43 @@ def _grid_cell(devices, K, M, S, horizon):
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(_REPO_ROOT, "src"), _REPO_ROOT]
         + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    src = _GRID_SUB_SRC.format(K=K, M=M, S=S, horizon=horizon)
     out = subprocess.run([sys.executable, "-c", src], capture_output=True,
                          text=True, env=env, cwd=_REPO_ROOT, timeout=560)
     if out.returncode != 0:
         raise RuntimeError(
-            f"grid cell (devices={devices}) failed:\n"
+            f"{marker} cell (devices={devices}) failed:\n"
             + out.stdout + out.stderr)
     line = next((l for l in out.stdout.splitlines()
-                 if l.startswith("GRID_CELL ")), None)
+                 if l.startswith(marker + " ")), None)
     if line is None:
         raise RuntimeError(
-            f"grid cell (devices={devices}) exited 0 without a "
-            f"GRID_CELL line:\n" + out.stdout + out.stderr)
-    cell = json.loads(line[len("GRID_CELL "):])
+            f"{marker} cell (devices={devices}) exited 0 without a "
+            f"{marker} line:\n" + out.stdout + out.stderr)
+    cell = json.loads(line[len(marker) + 1:])
     if cell["devices"] != devices:
         # e.g. the forced-host-device flag stopped being honored: the
         # child fell back to fewer devices and the shard path would go
         # untested (or the scaling table mislabeled) while staying green
         raise RuntimeError(
-            f"grid cell requested {devices} devices but the child saw "
-            f"{cell['devices']}")
+            f"{marker} cell requested {devices} devices but the child "
+            f"saw {cell['devices']}")
     return cell
+
+
+def _grid_cell(devices, K, M, S, horizon, players=1):
+    return _forced_device_cell(
+        devices,
+        _GRID_SUB_SRC.format(K=K, M=M, S=S, horizon=horizon,
+                             players=players),
+        "GRID_CELL")
+
+
+def _players_cell(devices, K, M, horizon):
+    """One player-sharded single-simulation cell: all forced devices go
+    on the ``players`` axis (``make_continuum_mesh()`` default)."""
+    return _forced_device_cell(
+        devices, _PLAYERS_SUB_SRC.format(K=K, M=M, horizon=horizon),
+        "PLAYERS_CELL")
 
 
 def bandit_scale():
@@ -294,18 +364,35 @@ def bandit_scale():
     compile_wall += chunked["compile_s"]
     payload[f"chunked_K{ck}_M{cm}"] = chunked
 
-    # sharded evaluation grid: a device-scaling sweep in full mode, one
-    # multi-fake-device cell in smoke (subprocesses either way — the
-    # parent's device count is already locked)
+    # sharded evaluation grid: a device-scaling sweep in full mode; in
+    # smoke, one multi-fake-device 1-D cell plus one 2-D
+    # (data x players) cell (subprocesses either way — the parent's
+    # device count is already locked)
     if common.SMOKE:
         c = dict(SMOKE_GRID_CELL)
         grid_cells = {f"grid_dev{c['devices']}": _grid_cell(**c)}
+        c2 = dict(SMOKE_GRID2D_CELL)
+        grid_cells[f"grid2x2_dev{c2['devices']}"] = _grid_cell(**c2)
     else:
         grid_cells = {f"grid_dev{d}": _grid_cell(devices=d, **GRID_CELL)
                       for d in GRID_DEVICES}
     for name, cell in grid_cells.items():
         compile_wall += cell["compile_s"]
         payload[name] = cell
+
+    if not common.SMOKE:
+        # player-axis sharding: the ROADMAP memory cell split D ways,
+        # plus one K=10^4 fleet at 8 shards — per-device peak is the
+        # headline (state divides D ways; wall clock is bound by the
+        # container's cores, like every forced-host-device sweep)
+        for d in PLAYERS_DEVICES:
+            cell = _players_cell(devices=d, **PLAYERS_CELL)
+            compile_wall += cell["compile_s"]
+            payload[f"players_dev{d}"] = cell
+        xl = dict(PLAYERS_XL_CELL)
+        cell = _players_cell(**xl)
+        compile_wall += cell["compile_s"]
+        payload[f"players_K{xl['K']}_dev{xl['devices']}"] = cell
 
     if not common.SMOKE:
         # the memory story: stream runs, trace is only compiled — its
@@ -329,10 +416,13 @@ def bandit_scale():
         if chunked["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S:
             slow["chunked"] = chunked["steps_per_s"]
         for name, cell in grid_cells.items():
-            # gate per device so D-way lane parallelism can't mask a
-            # per-lane regression, against the grid cell's own floor
-            # (fake devices timeshare the runner's physical cores)
-            per_device = cell["grid_steps_per_s"] / cell["devices"]
+            # gate per data-shard so D-way lane parallelism can't mask
+            # a per-lane regression, against the grid cell's own floor
+            # (fake devices timeshare the runner's physical cores).
+            # Player shards of ONE lane work on the same lane-steps,
+            # so they don't divide the lane-step rate.
+            data_shards = cell["devices"] / cell.get("player_shards", 1)
+            per_device = cell["grid_steps_per_s"] / data_shards
             if per_device < SMOKE_GRID_FLOOR_STEPS_PER_S:
                 slow[name] = per_device
         if slow:
@@ -350,6 +440,9 @@ def bandit_scale():
     derived += " " + " ".join(
         f"{k}={v['grid_steps_per_s']:.0f}steps/s"
         for k, v in grid_cells.items())
+    derived += " " + " ".join(
+        f"{k}={v.get('per_device_peak_mb', 0.0):.1f}MB/dev"
+        for k, v in payload.items() if k.startswith("players_"))
     derived += f" compile_wall={compile_wall:.1f}s"
     mem_key = f"mem_K{MEM_CELL[0]}_M{MEM_CELL[1]}"
     if mem_key in payload:

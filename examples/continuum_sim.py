@@ -5,14 +5,16 @@
 0.9) vs Dec-SARSA — prints the Fig. 3 / Fig. 4 numbers.
 
   PYTHONPATH=src python examples/continuum_sim.py [--horizon 180]
+
+``--players N`` shards the fleet's player axis over N devices
+(streaming engine + `run_sim_players`; on CPU it forces N host
+devices, so the whole 2-D scaling story runs on a laptop — see
+docs/SCALING.md). Results match the unsharded run: counting
+statistics exactly, reduced float sums to f32 tolerance.
 """
 import argparse
-
-import jax
-
-from repro.continuum import (SimConfig, client_qos_satisfaction,
-                             compile_scenario, get_library, jain_fairness,
-                             make_topology, rolling_qos, run_sim)
+import os
+import sys
 
 
 def main():
@@ -24,7 +26,29 @@ def main():
                     help="named library scenario driving the run "
                          "(e.g. surge, cascade_failure; default: "
                          "stationary baseline)")
+    ap.add_argument("--players", type=int, default=1,
+                    help="shard the 30-player axis over this many "
+                         "devices (30 %% N must be 0; forces N host "
+                         "devices on CPU)")
     args = ap.parse_args()
+
+    if args.players > 1 and "--xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        # must happen before the first jax import in this process
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.players}")
+
+    import jax
+
+    from repro.continuum import (SimConfig, client_qos_satisfaction,
+                                 client_qos_satisfaction_stream,
+                                 compile_scenario, get_library,
+                                 jain_fairness, jain_fairness_stream,
+                                 make_topology, rolling_qos,
+                                 rolling_qos_series, run_sim,
+                                 run_sim_players)
+    from repro.launch.mesh import make_continuum_mesh
 
     cfg = SimConfig(horizon=args.horizon)
     warm = int(min(60.0, args.horizon / 3) / cfg.dt)
@@ -34,9 +58,13 @@ def main():
     if args.events:
         scn = get_library(cfg.horizon, 30, 10)[args.events]
         drivers = compile_scenario(scn, cfg, jax.random.PRNGKey(0))
+    if args.players > 1 and 30 % args.players:
+        sys.exit(f"--players {args.players} must divide the 30 LBs")
     print(f"topology: 30 nodes, 10 instances on nodes "
           f"{topo.instance_nodes.tolist()}"
-          + (f"; events: {args.events}" if args.events else ""))
+          + (f"; events: {args.events}" if args.events else "")
+          + (f"; player axis sharded {args.players} ways"
+             if args.players > 1 else ""))
     print(f"QoS: tau={cfg.tau*1e3:.0f}ms rho={cfg.rho} W={cfg.window}s; "
           f"120 clients x 10 req/s\n")
 
@@ -48,11 +76,23 @@ def main():
         ("proxy-mity 0.9", "proxy_mity", dict(alpha=0.9)),
         ("Dec-SARSA", "dec_sarsa", {}),
     ]:
-        outs = run_sim(name, rtt, cfg, jax.random.PRNGKey(7),
-                       drivers=drivers, **kw)
-        sat = client_qos_satisfaction(outs, cfg.rho, warm)
-        fair = jain_fairness(outs, warmup_steps=warm)
-        roll = rolling_qos(outs, int(cfg.window / cfg.dt))[warm:].mean()
+        if args.players > 1:
+            mesh = make_continuum_mesh(
+                players=args.players,
+                devices=jax.devices()[:args.players])
+            outs = run_sim_players(name, rtt, cfg, jax.random.PRNGKey(7),
+                                   drivers=drivers, warmup_steps=warm,
+                                   mesh=mesh, **kw)
+            sat = client_qos_satisfaction_stream(outs.acc, cfg.rho)
+            fair = jain_fairness_stream(outs.acc)
+            roll = rolling_qos_series(
+                outs.series, int(cfg.window / cfg.dt))[warm:].mean()
+        else:
+            trace = run_sim(name, rtt, cfg, jax.random.PRNGKey(7),
+                            drivers=drivers, **kw)
+            sat = client_qos_satisfaction(trace, cfg.rho, warm)
+            fair = jain_fairness(trace, warmup_steps=warm)
+            roll = rolling_qos(trace, int(cfg.window / cfg.dt))[warm:].mean()
         print(f"{label:18s} {sat:11.1f}% {fair:9.3f} {roll:10.3f}")
 
 

@@ -49,6 +49,15 @@ class MetricAccumulator(NamedTuple):
     variation budget accumulate over the full horizon, like their
     trace-mode counterparts.
 
+    Under player sharding (``run_sim_players``) the per-player fields
+    (leading K axis) live sharded on the ``players`` mesh axis and
+    concatenate to full width when read; the fleet-level fields
+    (``arrivals_m``, ``proc_hist``, ``ev_succ``/``ev_n``) accumulate
+    shard-local partials that one end-of-scan psum reduces — all
+    integer-valued f32 sums, so sharding never changes their values.
+    ``steps_measured`` is a pure function of the step index and stays
+    replicated.
+
     ``ev_succ``/``ev_n`` are the *event-relative* recovery windows:
     for each scenario event mark e (a step index from
     ``Drivers.marks``), slot 0 holds the fleet QoS sums over the

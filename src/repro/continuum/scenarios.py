@@ -69,10 +69,45 @@ MIN_SERVICE_TIME = 1e-4
 
 
 class Drivers(NamedTuple):
-    """Dense per-step schedules driving one simulation.
+    """Dense per-step schedules driving one simulation — THE contract
+    between the scenario compiler and the engine.
 
-    All leading axes are T (``marks`` excepted); a scenario *batch* is
-    the same pytree with an extra leading (S,) axis (`stack_drivers`).
+    This pytree is the *only* interface the simulator sees: events
+    never reach the scan; ``compile_scenario`` lowers them to these
+    arrays, and every driver path (`run_sim`, `run_sim_stream`,
+    `run_sim_grid`, `run_sim_players`, chunked scans) consumes one row
+    per step. Per step ``t`` the engine computes the effective RTT
+
+        ``rtt_t = rtt * rtt_scale[t][None, :]
+                  + min(rtt_cut_k[t][:, None], rtt_cut_m[t][None, :])``
+
+    (the caller's ``rtt`` is the *base* matrix; the ``min`` is the
+    factored rank-1 partition AND — only LB-side ∩ instance-side
+    routes pay the cut) and threads ``rtt_t`` plus the ``s_m[t]``
+    service row through placement events, maintenance, the true-μ
+    oracle and the queue recursion. ``n_clients[t]`` bounds the
+    request rounds per LB; ``active[t]`` drives Alg 3/4 placement
+    events on change. ``marks`` holds event-onset *global* step
+    indices (``-1``-padded to :data:`MAX_MARKS`) keying the streaming
+    accumulator's recovery windows.
+
+    Invariants the engine trusts blindly and ``compile_scenario``
+    enforces: ``0 <= n_clients <= cfg.max_clients``, ``s_m >=
+    MIN_SERVICE_TIME``, ``rtt_scale > 0``, cuts ``>= 0``, and at least
+    one live instance every step.
+
+    Shapes and layout: all leading axes are T (``marks`` excepted); a
+    scenario *batch* is the same pytree with an extra leading (S,)
+    lane axis (`stack_drivers`), sharded over the ``data`` mesh axis
+    by the evaluation grid; a *player-sharded* run splits the (·, K)
+    fields (``n_clients``, ``rtt_cut_k``) over the ``players`` axis
+    and replicates the (·, M) fields — see
+    ``simulator._stream_specs``. ``neutral_drivers`` produces the
+    identity schedules (constant clients, all instances live, scale 1,
+    cut 0, constant ``s_m``) that reproduce the pre-scenario engine
+    bit-for-bit; ``slice_drivers`` time-slices the per-step fields for
+    chunked horizons (marks ride whole — they are global indices,
+    like the scan's ``t_idx``).
     """
     n_clients: jax.Array   # (T, K) i32 active client slots per LB
     active: jax.Array      # (T, M) bool instance liveness

@@ -57,11 +57,32 @@ Engine structure (streaming-first):
   are independent simulations (the MP-MAB players never communicate,
   and neither do grid cells), so ``run_sim_grid`` /
   ``build_sim_grid_fn`` ``shard_map`` the vmapped scenario axis of a
-  streaming run over a 1-D device mesh. Each device scans only its
-  shard and carries its own O(K·M) accumulators; the host touches
+  streaming run over the ``data`` mesh axis. Each device scans only
+  its shard and carries its own O(K·M) accumulators; the host touches
   nothing until the (tiny) metric pytree is read. One real device
   falls back to the plain vmap — the exact same program ``get_suite``
   always ran.
+* **The player axis shards *inside* one simulation**: the bandit state
+  factorizes over players; the ONLY cross-player coupling is the
+  instance-queue recursion (same-round requests from different LBs
+  collide on shared (M,) queues). ``run_sim_players`` /
+  ``build_sim_players_fn`` therefore ``shard_map`` a streaming run
+  over the ``players`` axis of a 2-D (``data``, ``players``) mesh
+  (``launch.mesh.make_continuum_mesh``): each device holds K/D
+  players' rings/weights/KDE stats and maintenance groups, rounds
+  ``psum`` the (M,) arrival vector before the shared queue drain, and
+  the fleet-level accumulator fields are ``psum``-reduced once after
+  the scan. Two engine invariants make the sharded schedule decompose
+  exactly: every per-player random draw is keyed by global player id
+  (``repro.core.prand``), and the staggered maintenance clocks assign
+  phases per contiguous player *block* (``_stagger_groups``), so a
+  shard's due-players are a static-shape shard-local gather. Sharded
+  and unsharded runs match — counting statistics exactly, psum-reduced
+  float series to f32 reassociation tolerance
+  (tests/test_sharded_players.py); a 1-way player axis falls back to
+  the plain streaming program. Composes with the grid axis:
+  ``build_sim_grid_fn`` on a 2-D mesh shards lanes over ``data`` and
+  every lane's players over ``players``.
 """
 from __future__ import annotations
 
@@ -82,6 +103,7 @@ from repro.continuum.metrics import (MetricAccumulator, StepSeries,
 from repro.continuum.scenarios import Drivers
 from repro.core import bandit as qb
 from repro.core import baselines as bl
+from repro.core import prand
 from repro.core.kde import normal_cdf
 from repro.core.oracle import step_regret
 
@@ -116,6 +138,21 @@ class SimConfig:
         return int(round(self.horizon / self.dt))
 
 
+class PlayerSharding(NamedTuple):
+    """Static spec: split the (K,) player axis over mesh axis ``axis``.
+
+    Passed to ``build_sim_parts``/``build_sim_fn`` when the returned
+    program will run *inside* a ``shard_map`` whose mesh carries
+    ``axis`` with ``shards`` devices. The traced program then works on
+    K/shards players, keys randomness and maintenance clocks by global
+    player id, and ``psum``s the per-round arrival vector over
+    ``axis``. ``build_sim_players_fn``/``build_sim_grid_fn`` construct
+    this; it is exposed for harnesses that wrap the run themselves.
+    """
+    axis: str
+    shards: int
+
+
 class SimOutputs(NamedTuple):
     """Per-step trajectories (leading axis T) — ``trace=True`` only."""
     rewards: jax.Array      # (T, K, C) 1/0 QoS success per client slot
@@ -141,14 +178,20 @@ def _true_mu(rtt, q, cfg: SimConfig, service_time):
 
 # ---------------------------------------------------------------------------
 # Strategy adapters: dicts of closures with a common signature.
+#
+# ``init``/``select`` take ``pids`` — the (K,) i32 *global* ids of the
+# players this program instance holds (``arange(K)`` unsharded, the
+# shard's slice under player sharding). Strategies key every per-player
+# random draw off it (repro.core.prand), which is what makes a
+# player-sharded run reproduce the unsharded stream bit-for-bit.
 # ---------------------------------------------------------------------------
 
 def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int):
-    def init(rtt, active, key):
+    def init(rtt, active, key, pids):
         return qb.init_state(K, M, params, cfg.ring, cfg.reward_ring, active,
-                             key=key)
+                             key=key, pids=pids)
 
-    def select(state, key, t, active):
+    def select(state, key, t, active, pids):
         choice, state, valid = qb.select(state)
         return choice, state
 
@@ -191,11 +234,14 @@ def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
     class PMState(NamedTuple):
         weights: jax.Array
 
-    def init(rtt, active, key):
+    def init(rtt, active, key, pids):
         return PMState(bl.proxy_mity_weights(rtt, alpha, active))
 
-    def select(state, key, t, active):
-        choice = jax.random.categorical(key, jnp.log(state.weights + 1e-30), axis=-1)
+    def select(state, key, t, active, pids):
+        # per-player categorical via argmax(logits + Gumbel), with the
+        # Gumbel row keyed by global player id (shard-invariant)
+        g = prand.player_gumbel(key, pids, M)
+        choice = jnp.argmax(jnp.log(state.weights + 1e-30) + g, axis=-1)
         return choice, state
 
     def record(state, choice, lat, t, mask):
@@ -224,18 +270,26 @@ def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
                 on_activity=on_activity, weights=weights, eps=eps)
 
 
-def dec_sarsa_strategy(params: bl.DecSarsaParams, cfg: SimConfig, K: int, M: int):
+def dec_sarsa_strategy(params: bl.DecSarsaParams, cfg: SimConfig, K: int,
+                       M: int, pshard: "PlayerSharding | None" = None):
     class DSState(NamedTuple):
         inner: bl.DecSarsaState
         active: jax.Array
         pend_s: jax.Array      # state bucket used for the pending action
 
-    def init(rtt, active, key):
-        return DSState(bl.decsarsa_init(K, M, rtt, params), active,
+    def init(rtt, active, key, pids):
+        # the proximity-normalized optimistic Q init divides by the
+        # GLOBAL rtt max — under player sharding that is a pmax over
+        # the shards, the baseline's one cross-player reduction
+        rtt_max = rtt.max()
+        if pshard is not None:
+            rtt_max = jax.lax.pmax(rtt_max, pshard.axis)
+        return DSState(bl.decsarsa_init(K, M, rtt, params, rtt_max), active,
                        jnp.zeros((K,), jnp.int32))
 
-    def select(state, key, t, active):
-        choice, s = bl.decsarsa_select(state.inner, params, active, key)
+    def select(state, key, t, active, pids):
+        choice, s = bl.decsarsa_select(state.inner, params, active, key,
+                                       pids)
         return choice, state._replace(pend_s=s, active=active)
 
     def record(state, choice, lat, t, mask):
@@ -270,7 +324,8 @@ def dec_sarsa_strategy(params: bl.DecSarsaParams, cfg: SimConfig, K: int, M: int
                 on_activity=on_activity, weights=weights, eps=eps)
 
 
-def make_strategy(name: str, cfg: SimConfig, K: int, M: int, **kw):
+def make_strategy(name: str, cfg: SimConfig, K: int, M: int,
+                  pshard: "PlayerSharding | None" = None, **kw):
     if name == "qedgeproxy":
         params = kw.get("params") or qb.BanditParams(
             tau=cfg.tau, rho=cfg.rho, window=cfg.window,
@@ -280,13 +335,45 @@ def make_strategy(name: str, cfg: SimConfig, K: int, M: int, **kw):
         return proxy_mity_strategy(kw.get("alpha", 1.0), cfg, K, M)
     if name == "dec_sarsa":
         params = kw.get("params") or bl.DecSarsaParams(tau=cfg.tau)
-        return dec_sarsa_strategy(params, cfg, K, M)
+        return dec_sarsa_strategy(params, cfg, K, M, pshard)
     raise ValueError(f"unknown strategy {name!r}")
 
 
 # ---------------------------------------------------------------------------
 # Main simulation loop.
 # ---------------------------------------------------------------------------
+
+def _stagger_groups(k_phase, K_global: int, n_phases: int, width: int,
+                    lo, K_local: int) -> jax.Array:
+    """Balanced staggered maintenance clocks, shard-decomposable.
+
+    Players tile into contiguous *blocks* of ``n_phases``; block ``b``
+    assigns its members one phase each through a random bijection keyed
+    by ``fold_in(k_phase, b)`` — a pure function of global player id,
+    like every other per-player draw (``repro.core.prand``). Row ``p``
+    of the result lists the LOCAL indices (player id − ``lo``) of the
+    players due at phase ``p``, padded with the sentinel ``K_local``
+    that the maintenance scatter drops. Each phase gets exactly one
+    player per block, so per-step maintenance work stays balanced (±1
+    for the padded last block) for any K and for any contiguous shard
+    [lo, lo + K_local) of the player axis — which is what keeps the
+    gathers shard-local with a static (n_phases, width) shape under
+    ``shard_map``.
+    """
+    bids = lo // n_phases + jnp.arange(width)          # global block ids
+
+    def block_slots(b):
+        # inv[p] = the within-block slot whose player fires at phase p
+        perm = jax.random.permutation(jax.random.fold_in(k_phase, b),
+                                      n_phases)
+        return jnp.argsort(perm)
+
+    inv = jax.vmap(block_slots)(bids)                  # (W, n_phases)
+    gplayer = bids[:, None] * n_phases + inv           # global player ids
+    local = gplayer - lo
+    ok = (gplayer < K_global) & (local >= 0) & (local < K_local)
+    return jnp.where(ok, local, K_local).T.astype(jnp.int32)
+
 
 def build_sim_parts(
     strategy_name: str,
@@ -296,65 +383,109 @@ def build_sim_parts(
     fused: bool = True,
     trace: bool = True,
     warmup_steps: int = 0,
+    pshard: PlayerSharding | None = None,
     **strategy_kw,
 ):
     """The engine's two traceable halves, shared by every driver.
 
     Returns ``(init_fn, step_fn)``:
 
-    * ``init_fn(rtt, active0, key) -> (carry0, keys)`` — strategy state,
-      empty queue/accumulator, the staggered maintenance groups, and the
-      full-horizon (T, 2) per-step key array (small; chunk drivers slice
-      it so chunking never replays or forks the PRNG stream).
+    * ``init_fn(rtt, active0, key, pids=None) -> (carry0, keys)`` —
+      strategy state, empty queue/accumulator, the block-staggered
+      maintenance groups, and the full-horizon (T, 2) per-step key
+      array (small; chunk drivers slice it so chunking never replays
+      or forks the PRNG stream). ``pids`` are the global ids of the
+      players this program instance holds (defaulted to ``arange(K)``
+      unsharded; required under ``pshard``).
     * ``step_fn(rtt, marks, carry, xs) -> (carry, ys)`` — one simulator
       step. ``xs = (t_idx, n_clients_t, active_t, rtt_scale_t,
-      rtt_cut_k_t, rtt_cut_m_t, s_m_t, key_t)`` — one row of the
-      scenario ``Drivers`` plus a *global* ``t_idx``, so a chunked scan
-      is bit-identical to one full-horizon scan. The step first forms
+      rtt_cut_k_t, rtt_cut_m_t, s_m_t, key_t, group_t)`` — one row of
+      the scenario ``Drivers`` plus a *global* ``t_idx`` and the
+      maintenance-group row due this step (pre-gathered from the
+      stagger table by the horizon driver), so a chunked scan is
+      bit-identical to one full-horizon scan. The step first forms
       the effective RTT ``rtt * rtt_scale[None, :] + min(cut_k[:,
       None], cut_m[None, :])`` and the (M,) service-time row, and
       threads them through placement events, maintenance, the true-mu
       oracle and the queue recursion; with neutral drivers (scale 1,
-      cut 0, constant s_m) every computed float is bit-for-bit the
-      pre-scenario-engine value. ``ys`` is a full ``SimOutputs`` row in
+      cut 0, constant s_m) every computed float is unchanged from the
+      pre-scenario engine. ``ys`` is a full ``SimOutputs`` row in
       trace mode, a ``StepSeries`` row otherwise. ``marks`` are the
       scenario's event-onset steps for the accumulator's recovery
       windows (ignored in trace mode).
 
-    The carry is ``(state, queue, prev_active, acc, groups)`` with
-    ``acc=None`` in trace mode.
+    With ``pshard`` the returned halves are the *per-shard* program of
+    a player-sharded run (streaming only): ``K`` is still the global
+    player count, but every (K,) shape shrinks to K/shards, randomness
+    and maintenance clocks key off the shard's global player ids, the
+    round loop ``psum``s its (M,) arrival vector over ``pshard.axis``
+    before the shared queue drain, and the accumulator's fleet-level
+    fields hold shard-local partial sums (reduced once after the scan
+    by ``build_sim_fn``). Both halves must then be traced inside a
+    ``shard_map`` carrying that axis, and ``init_fn`` must be given the
+    shard's ``pids`` — its global player ids, delivered as a sharded
+    *operand* (an ``arange(K)`` split by ``P('players')``), the same
+    data path that delivers the shard its ``rtt`` rows. Identity is
+    deliberately data, not ``lax.axis_index``: the ids then cannot
+    disagree with the rows they describe.
+
+    The carry is ``(state, queue, prev_active, acc, groups, pids)``
+    with ``acc=None`` in trace mode.
     """
+    if pshard is not None and pshard.shards == 1:
+        pshard = None
+    if pshard is not None:
+        if trace:
+            raise ValueError(
+                "player sharding is streaming-only: trajectories are "
+                "O(T*K*...) — the memory the sharding exists to split")
+        if K % pshard.shards:
+            raise ValueError(
+                f"K={K} players must be a multiple of the "
+                f"{pshard.shards}-way '{pshard.axis}' mesh axis")
+    K_glob = K
+    K = K if pshard is None else K // pshard.shards   # local width below
     T, C = cfg.num_steps, cfg.max_clients
-    strat = make_strategy(strategy_name, cfg, K, M, **strategy_kw)
+    strat = make_strategy(strategy_name, cfg, K, M, pshard=pshard,
+                          **strategy_kw)
     batched_record = fused and strat.get("record_rings") is not None
     subset_maint = fused and strat.get("maintain_subset") is not None
     n_phases = max(cfg.maint_every, 1)
-    group_size = -(-K // n_phases)      # ceil: players per decision tick
+    n_blocks = -(-K_glob // n_phases)   # ceil: players per decision tick
+    # a contiguous K-wide shard touches at most ceil(K/n_phases)+1
+    # global blocks (straddling one at each edge)
+    group_width = (n_blocks if pshard is None
+                   else min(n_blocks, -(-K // n_phases) + 1))
     ev_pre_steps = max(1, int(round(cfg.ev_pre / cfg.dt)))
     ev_bucket_steps = max(1, int(round(cfg.ev_bucket / cfg.dt)))
 
-    def init_fn(rtt, active0, key):
+    def init_fn(rtt, active0, key, pids=None):
+        if pids is None:
+            if pshard is not None:
+                raise ValueError(
+                    "player-sharded init needs the shard's global player "
+                    "ids (pids) as a sharded operand")
+            pids = jnp.arange(K, dtype=jnp.int32)
         k_init, k_phase, k_scan = jax.random.split(key, 3)
-        s0 = strat["init"](rtt, active0, k_init)
+        s0 = strat["init"](rtt, active0, k_init, pids)
         q0 = jnp.zeros((M,), jnp.float32)
-        # Staggered H_d clocks (asynchronous DaemonSet timers): a random
-        # permutation split into H_d balanced groups. Fixed group size
-        # is what lets maintenance gather exactly the rows due now
-        # instead of running the O(K*M*R) estimate for all K every step;
-        # sentinel K pads the last group (dropped on scatter).
-        perm = jax.random.permutation(k_phase, K).astype(jnp.int32)
-        pad = n_phases * group_size - K
-        groups = jnp.concatenate(
-            [perm, jnp.full((pad,), K, jnp.int32)]).reshape(
-                n_phases, group_size)
+        # Staggered H_d clocks (asynchronous DaemonSet timers): each
+        # n_phases-player block spreads its members over the phases at
+        # random (_stagger_groups). Fixed group width is what lets
+        # maintenance gather exactly the rows due now instead of
+        # running the O(K*M*R) estimate for all K every step, and the
+        # block structure keeps that gather shard-local under player
+        # sharding; sentinel K marks padding (dropped on scatter).
+        groups = _stagger_groups(k_phase, K_glob, n_phases, group_width,
+                                 pids[0], K)
         acc = None if trace else qm.init_accumulator(
             K, M, C, n_marks=qs.MAX_MARKS, ev_buckets=cfg.ev_buckets)
         keys = jax.random.split(k_scan, T)
-        return (s0, q0, active0, acc, groups), keys
+        return (s0, q0, active0, acc, groups, pids), keys
 
     def step_fn(rtt, marks, carry, xs):
-        state, q, prev_active, acc, groups = carry
-        t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step = xs
+        state, q, prev_active, acc, groups, pids = carry
+        t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step, group = xs
         t = t_idx.astype(jnp.float32) * cfg.dt
 
         # --- scenario modulation: effective RTT and service row for
@@ -372,8 +503,15 @@ def build_sim_parts(
             lambda s: s,
             state)
 
-        # --- maintenance: only the player group whose clock fires ---
-        group = groups[t_idx % n_phases]
+        # --- maintenance: only the player group whose clock fires.
+        # The row arrives through xs (sliced by the scan machinery from
+        # a (T, W) table built once outside the loop) instead of an
+        # in-loop `groups[t_idx % n_phases]` gather: under shard_map at
+        # ≥4 host devices, XLA:CPU (jax 0.4.37) mis-fuses that gather
+        # of the sort-backed stagger table into the loop and some
+        # shards read another phase's row — sharded runs then maintain
+        # the wrong players (see ROADMAP; tests/test_sharded_players.py
+        # is the regression net). ---
         if subset_maint:
             state = strat["maintain_subset"](state, rtt_t, t, group)
         else:
@@ -409,9 +547,11 @@ def build_sim_parts(
             k_r = jax.random.fold_in(k_step, r)
             k_sel, k_noise = jax.random.split(k_r)
             mask = r < nc                                      # (K,)
-            choice, state = strat["select"](state, k_sel, t, act)
+            choice, state = strat["select"](state, k_sel, t, act, pids)
+            # processing noise keyed per global player id (prand), so
+            # the draw is invariant to how the K axis is sharded
             z = jnp.exp(
-                cfg.proc_sigma * jax.random.normal(k_noise, (K,)))
+                cfg.proc_sigma * prand.player_normal(k_noise, pids))
             q_seen = q[choice]
             proc = (q_seen + 1.0) * s_m[choice] * z
             lat = rtt_t[kidx, choice] + proc
@@ -422,7 +562,16 @@ def build_sim_parts(
                 state = strat["record"](state, choice, lat, t, mask)
             arr_r = jax.ops.segment_sum(
                 mask.astype(jnp.float32), choice, num_segments=M)
-            q = jnp.maximum(q + arr_r - served_per_round, 0.0)
+            # the ONE cross-player coupling: same-round requests from
+            # every LB land on the shared queues, so a player-sharded
+            # round psums its local (M,) arrivals before the drain
+            # (integer-valued f32 — the psum is exact, and the queue
+            # stays replicated across shards). `arrivals` keeps the
+            # shard-LOCAL sum: it feeds the accumulator's partial
+            # arrivals_m, reduced once after the scan.
+            arr_all = (arr_r if pshard is None
+                       else jax.lax.psum(arr_r, pshard.axis))
+            q = jnp.maximum(q + arr_all - served_per_round, 0.0)
             return (state, q, arrivals + arr_r), (choice, lat, proc)
 
         (state, q, arrivals), (ch_r, lat_r, proc_r) = jax.lax.scan(
@@ -453,7 +602,7 @@ def build_sim_parts(
             issf = issued.astype(jnp.float32)
             ys = StepSeries(succ=(rewards * issf).sum(),
                             issued=issf.sum(), regret=reg.sum())
-        return (state, q, act, acc, groups), ys
+        return (state, q, act, acc, groups, pids), ys
 
     return init_fn, step_fn
 
@@ -466,6 +615,7 @@ def build_sim_fn(
     fused: bool = True,
     trace: bool = True,
     warmup_steps: int = 0,
+    pshard: PlayerSharding | None = None,
     **strategy_kw,
 ):
     """Build a traceable ``run(rtt, drivers, key)``.
@@ -488,6 +638,15 @@ def build_sim_fn(
     fleet-scale mode. ``warmup_steps`` gates the post-warmup
     accumulator fields and is ignored in trace mode.
 
+    With ``pshard`` (see ``build_sim_parts``) the returned ``run`` is
+    the per-shard program of a player-sharded streaming simulation and
+    must be traced inside a ``shard_map`` over ``pshard.axis`` — its
+    inputs/outputs carry local (K/shards,) player slices, and the
+    fleet-level accumulator fields and the ``StepSeries`` scalars are
+    ``psum``-reduced here, once, after the scan (the per-round arrival
+    psum inside the scan is the only in-loop collective).
+    ``build_sim_players_fn`` wraps this with the right specs.
+
     ``fused=False`` forces the pre-refactor step structure (per-round
     ring scatters + full-width maintenance gated only by ``lb_mask``)
     even for strategies that support the fused path — kept as the
@@ -496,20 +655,39 @@ def build_sim_fn(
     T = cfg.num_steps
     init_fn, step_fn = build_sim_parts(
         strategy_name, cfg, K, M, fused=fused, trace=trace,
-        warmup_steps=warmup_steps, **strategy_kw)
+        warmup_steps=warmup_steps, pshard=pshard, **strategy_kw)
 
-    def run(rtt, drivers, key, service_time=None):
+    def run(rtt, drivers, key, service_time=None, pids=None):
         if service_time is not None:
             drivers = drivers._replace(s_m=jnp.broadcast_to(
                 jnp.asarray(service_time, jnp.float32), drivers.s_m.shape))
-        carry0, keys = init_fn(rtt, drivers.active[0], key)
-        xs = (jnp.arange(T),
-              *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys)
+        carry0, keys = init_fn(rtt, drivers.active[0], key, pids)
+        t_idx = jnp.arange(T)
+        # per-step maintenance rows, gathered from the stagger table
+        # ONCE outside the loop and scanned in (see step_fn)
+        grows = carry0[4][t_idx % max(cfg.maint_every, 1)]
+        xs = (t_idx,
+              *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys, grows)
         carry, ys = jax.lax.scan(
             lambda c, x: step_fn(rtt, drivers.marks, c, x), carry0, xs)
         if trace:
             return ys
-        return StreamOutputs(acc=carry[3], series=ys)
+        acc = carry[3]
+        if pshard is not None and pshard.shards > 1:
+            # fleet-level fields accumulated shard-local partials all
+            # scan long; reduce them once here. Counting fields are
+            # integer-valued f32 sums, so the psum is exact; the regret
+            # series is the one genuinely-float reduction (f32
+            # reassociation tolerance). steps_measured is a pure
+            # function of t_idx — already replicated, no reduction.
+            def allsum(x):
+                return jax.lax.psum(x, pshard.axis)
+            acc = acc._replace(arrivals_m=allsum(acc.arrivals_m),
+                               proc_hist=allsum(acc.proc_hist),
+                               ev_succ=allsum(acc.ev_succ),
+                               ev_n=allsum(acc.ev_n))
+            ys = StepSeries(*(allsum(y) for y in ys))
+        return StreamOutputs(acc=acc, series=ys)
 
     return run
 
@@ -542,7 +720,9 @@ def build_sim_chunks(
         if service_time is not None:
             drivers = drivers._replace(s_m=jnp.broadcast_to(
                 jnp.asarray(service_time, jnp.float32), drivers.s_m.shape))
-        xs = (t_idx, *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys)
+        grows = carry[4][t_idx % max(cfg.maint_every, 1)]
+        xs = (t_idx, *(getattr(drivers, f) for f in qs.STEP_FIELDS), keys,
+              grows)
         return jax.lax.scan(
             lambda c, x: step_fn(rtt, drivers.marks, c, x), carry, xs)
 
@@ -585,7 +765,7 @@ def _resolve_drivers(cfg, K, M, drivers, n_clients, active):
 
 def run_sim(
     strategy_name: str,
-    rtt: jax.Array,              # (K, M) LB->instance RTT [s]
+    rtt: jax.Array,              # (K, M) base LB->instance RTT [s]
     cfg: SimConfig,
     key: jax.Array,
     n_clients: jax.Array | None = None,   # (T, K) i32 active clients per LB
@@ -609,7 +789,7 @@ def run_sim(
 
 def run_sim_batch(
     strategy_name: str,
-    rtts: jax.Array,             # (S, K, M) one RTT matrix per scenario
+    rtts: jax.Array,             # (S, K, M) one base RTT matrix per lane
     cfg: SimConfig,
     keys: jax.Array,             # (S, 2) one PRNG key per scenario
     n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
@@ -637,6 +817,59 @@ def run_sim_batch(
                        donate_argnums=donate)(rtts, drv, keys)
 
 
+def _mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _stream_specs(mesh, lead: tuple = ()):
+    """``shard_map`` specs for a (possibly vmapped) streaming run.
+
+    Resolved per field through the logical rule table
+    (``repro.sharding.partitioning``): the player-dimension of ``rtt``,
+    the (T, K) driver rows and the per-player accumulator fields carry
+    the logical ``players`` axis; everything instance- or fleet-wide
+    (queues-adjacent (M,) schedules, the reduced accumulator fields,
+    the ``StepSeries`` scalars) is replicated across player shards.
+    ``lead`` prepends logical axes for a leading batch dimension —
+    ``("grid",)`` for the lane axis of the evaluation grid. Mesh axes
+    absent from ``mesh`` drop out, so the same specs serve the 1-D grid
+    mesh and the 2-D (``data``, ``players``) continuum mesh.
+    """
+    from repro.sharding import logical_to_spec
+
+    def spec(*axes):
+        return logical_to_spec(tuple(lead) + axes, mesh)
+
+    in_specs = (
+        spec("players", None),                    # rtt (K, M)
+        Drivers(
+            n_clients=spec(None, "players"),      # (T, K)
+            active=spec(None, None),              # (T, M) — replicated
+            rtt_scale=spec(None, None),
+            rtt_cut_k=spec(None, "players"),      # (T, K)
+            rtt_cut_m=spec(None, None),
+            s_m=spec(None, None),
+            marks=spec(None)),
+        spec(None),                               # key (2,)
+    )
+    out_specs = StreamOutputs(
+        acc=qm.MetricAccumulator(
+            succ_kc=spec("players", None),
+            n_kc=spec("players", None),
+            arrivals_m=spec(None),                # psum-reduced
+            choice_counts=spec("players", None),
+            proc_hist=spec(None, None),           # psum-reduced
+            regret_k=spec("players"),
+            vb_k=spec("players"),
+            prev_mu=spec("players", None),
+            steps_measured=spec(),                # replicated by design
+            ev_succ=spec(None, None),             # psum-reduced
+            ev_n=spec(None, None)),               # psum-reduced
+        series=StepSeries(succ=spec(None), issued=spec(None),
+                          regret=spec(None)))
+    return in_specs, out_specs
+
+
 def build_sim_grid_fn(
     strategy_name: str,
     cfg: SimConfig,
@@ -651,25 +884,36 @@ def build_sim_grid_fn(
 
     ``run_grid(rtts, drivers, keys)`` is the vmapped streaming run
     (``run_sim_batch`` shape, ``trace=False``) with the scenario/seed
-    axis ``shard_map``-ed over ``mesh`` — a 1-D mesh from
-    ``launch.mesh.make_grid_mesh()`` by default. ``drivers`` is an
-    (S, ·)-batched ``Drivers`` pytree (``scenarios.stack_drivers`` of
-    compiled scenarios), so scenario *diversity* — surges, failures,
+    axis ``shard_map``-ed over the ``data`` axis of ``mesh`` — a 1-D
+    mesh from ``launch.mesh.make_grid_mesh()`` by default. ``drivers``
+    is an (S, ·)-batched ``Drivers`` pytree (``scenarios.stack_drivers``
+    of compiled scenarios), so scenario *diversity* — surges, failures,
     drift, per-instance slowdowns — spreads across devices exactly
-    like seeds do. Grid lanes are independent (no collectives), so
-    each device scans its own S/D scenarios with per-device
-    ``MetricAccumulator``/``StepSeries`` carries; outputs stay
-    device-sharded along the scenario axis until the caller reads
-    them. When the mesh has a single device the plain ``jax.vmap``
-    body is returned unwrapped — bit-for-bit the pre-sharding grid
-    program.
+    like seeds do. Grid lanes are independent, so each device scans
+    its own S/D scenarios with per-device ``MetricAccumulator``/
+    ``StepSeries`` carries; outputs stay device-sharded along the
+    scenario axis until the caller reads them. When the mesh has a
+    single device the plain ``jax.vmap`` body is returned unwrapped —
+    bit-for-bit the pre-sharding grid program.
 
-    S not divisible by the device count is handled inside the traced
+    A 2-D (``data``, ``players``) mesh (``make_continuum_mesh``) adds
+    the second scaling axis: lanes still spread over ``data``, and
+    *inside* every lane the K players split over ``players``
+    (``PlayerSharding`` program: per-round arrival psum, shard-local
+    maintenance, reduced fleet metrics — see ``build_sim_parts``). K
+    must then divide the ``players`` axis size; lane results are
+    unchanged (counting stats exact, psum-reduced floats to f32
+    tolerance, tests/test_sharded_players.py).
+
+    S not divisible by the data-axis size is handled inside the traced
     function by padding with copies of the last scenario lane and
-    slicing the pad back off — wasted lanes, never wrong results.
-    Sharded and unsharded grids run the same per-lane program, so
-    results match the single-device vmap exactly on every accumulator
-    field (tests/test_sharded_grid.py).
+    slicing the pad back off — wasted lanes, never wrong results. On a
+    2-D mesh the traced pad is refused (an XLA sharding-propagation
+    bug mis-distributes a concat feeding the 2-axis ``shard_map``);
+    ``run_sim_grid`` pads eagerly instead. Sharded and unsharded grids
+    run the same per-lane program, so results match the single-device
+    vmap exactly on every accumulator field
+    (tests/test_sharded_grid.py, tests/test_sharded_players.py).
 
     Exposed AOT-style (like ``build_sim_fn``) so harnesses can
     ``jit(...).lower()`` it and measure compile time apart from run
@@ -678,29 +922,66 @@ def build_sim_grid_fn(
     from jax.experimental.shard_map import shard_map
 
     from repro.launch.mesh import make_grid_mesh
-    from repro.sharding import logical_to_spec
 
     mesh = make_grid_mesh() if mesh is None else mesh
-    D = int(mesh.devices.size)
+    sizes = _mesh_axis_sizes(mesh)
+    Dp = sizes.get("players", 1)
+    Dd = int(mesh.devices.size) // Dp
+    pshard = None
+    if Dp > 1:
+        if K % Dp:
+            raise ValueError(
+                f"K={K} players must be a multiple of the {Dp}-way "
+                f"'players' axis of the grid mesh (pad K or reshape "
+                f"the mesh)")
+        pshard = PlayerSharding("players", Dp)
     run = build_sim_fn(strategy_name, cfg, K, M, fused=fused, trace=False,
-                       warmup_steps=warmup_steps, **strategy_kw)
+                       warmup_steps=warmup_steps, pshard=pshard,
+                       **strategy_kw)
     vrun = jax.vmap(run, in_axes=(0, 0, 0))
-    if D == 1:
+    if int(mesh.devices.size) == 1:
         return vrun, mesh
 
-    grid = logical_to_spec(("grid",), mesh)     # P(<mesh axis>) per rules
-    # in_specs are pytree prefixes: every Drivers leaf shards on its
-    # leading scenario axis, same as rtts/keys.
-    inner = shard_map(vrun, mesh=mesh,
-                      in_specs=(grid, grid, grid),
-                      out_specs=grid, check_rep=False)
+    in_specs, out_specs = _stream_specs(mesh, lead=("grid",))
+    if pshard is None:
+        inner = shard_map(vrun, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    else:
+        # the per-shard program needs its global player ids as a
+        # SHARDED OPERAND (see build_sim_parts) — one arange(K) split
+        # over the players axis, broadcast over lanes by the vmap
+        from repro.sharding import logical_to_spec
+        vrun_p = jax.vmap(
+            lambda rtts_, drv_, keys_, pids_: run(rtts_, drv_, keys_,
+                                                  pids=pids_),
+            in_axes=(0, 0, 0, None))
+        inner_p = shard_map(
+            vrun_p, mesh=mesh,
+            in_specs=(*in_specs, logical_to_spec(("players",), mesh)),
+            out_specs=out_specs, check_rep=False)
+
+        def inner(rtts_, drv_, keys_):
+            return inner_p(rtts_, drv_, keys_,
+                           jnp.arange(K, dtype=jnp.int32))
 
     def _pad_lanes(x, pad):
         return jnp.concatenate([x, jnp.repeat(x[-1:], pad, 0)])
 
     def run_grid(rtts, drivers, keys):
         S = rtts.shape[0]
-        pad = (-S) % D
+        pad = (-S) % Dd
+        if pad and pshard is not None:
+            # In-trace padding feeds a concat into the 2-axis
+            # shard_map, and XLA's sharding propagation through it
+            # mis-distributes the operands across (data, players) —
+            # lanes then simulate with other lanes' data (observed on
+            # jax 0.4.37 CPU; neither sharding constraints nor
+            # optimization barriers stop it). Pad eagerly instead:
+            # run_sim_grid does this automatically.
+            raise ValueError(
+                f"S={S} lanes must be a multiple of the {Dd}-way data "
+                f"axis when the mesh also shards players; pre-pad the "
+                f"lane axis (run_sim_grid does) or reshape the mesh")
         if pad:
             rtts = _pad_lanes(rtts, pad)
             keys = _pad_lanes(keys, pad)
@@ -710,12 +991,16 @@ def build_sim_grid_fn(
             out = jax.tree.map(lambda x: x[:S], out)
         return out
 
+    # drivers that must pre-pad eagerly (run_sim_grid on 2-D meshes)
+    # read the lane-axis shard count from here instead of re-deriving
+    # the mesh split — one source of truth for the S-divisibility rule
+    run_grid.lane_shards = Dd if pshard is not None else 1
     return run_grid, mesh
 
 
 def run_sim_grid(
     strategy_name: str,
-    rtts: jax.Array,             # (S, K, M) one RTT matrix per scenario
+    rtts: jax.Array,             # (S, K, M) one base RTT matrix per lane
     cfg: SimConfig,
     keys: jax.Array,             # (S, 2) one PRNG key per scenario
     n_clients: jax.Array | None = None,   # (T, K), shared across scenarios
@@ -733,12 +1018,27 @@ def run_sim_grid(
     broadcast to every lane; a ``stack_drivers`` batch drives each lane
     with its own scenario. Single-device meshes degrade to the plain
     vmapped streaming grid. Defaulted driver buffers are donated.
+
+    On a 2-D (``data``, ``players``) mesh, lanes not dividing the data
+    axis are padded *eagerly* here (copies of the last lane, sliced
+    back off the outputs) — the 1-D grid pads inside the traced
+    program, but a traced pad feeding the 2-axis ``shard_map``
+    trips an XLA sharding-propagation bug (see ``build_sim_grid_fn``).
     """
     S, K, M = rtts.shape
     drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     run_grid, mesh = build_sim_grid_fn(
         strategy_name, cfg, K, M, mesh=mesh, warmup_steps=warmup_steps,
         **strategy_kw)
+    pad = (-S) % getattr(run_grid, "lane_shards", 1)
+    if pad:
+        def _pad(x):
+            return jnp.concatenate([x, jnp.repeat(x[-1:], pad, 0)])
+        rtts = _pad(rtts)
+        keys = _pad(keys)
+        if drv.n_clients.ndim == 3:
+            drv = jax.tree.map(_pad, drv)
+    S_run = S + pad
     fn = run_grid
     if drv.n_clients.ndim == 2:
         # shared schedule -> one lane per scenario; broadcast INSIDE
@@ -746,10 +1046,111 @@ def run_sim_grid(
         # of identical (T, ·) buffers
         def fn(rtts_, drv_, keys_):
             drv_b = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), drv_)
+                lambda x: jnp.broadcast_to(x[None], (S_run,) + x.shape),
+                drv_)
             return run_grid(rtts_, drv_b, keys_)
     with _quiet_donation():
-        return jax.jit(fn, donate_argnums=donate)(rtts, drv, keys)
+        out = jax.jit(fn, donate_argnums=donate)(rtts, drv, keys)
+    if pad:
+        out = jax.tree.map(lambda x: x[:S], out)
+    return out
+
+
+def build_sim_players_fn(
+    strategy_name: str,
+    cfg: SimConfig,
+    K: int,
+    M: int,
+    mesh=None,
+    warmup_steps: int = 0,
+    fused: bool = True,
+    **strategy_kw,
+):
+    """Traceable player-sharded single simulation: ``(run, mesh)``.
+
+    ``run(rtt, drivers, key)`` is ONE streaming simulation whose player
+    axis K is ``shard_map``-ed over the ``players`` axis of ``mesh`` —
+    by default ``launch.mesh.make_continuum_mesh()``, which puts every
+    device on the player axis. Each device holds K/D players' bandit
+    state (rings, weights, KDE stats — the O(K·M·R) memory), scans
+    only its shard's selection/feedback/maintenance, and the round
+    loop ``psum``s the (M,) per-round arrival vector before the shared
+    queue drain (the only in-loop collective; the queues themselves
+    stay replicated). Outputs are a full-K ``StreamOutputs``: the
+    per-player accumulator fields concatenate across shards, the
+    fleet-level fields are psum-reduced. Matches the unsharded engine
+    — counting statistics exactly, the psum-reduced regret series to
+    f32 reassociation tolerance (tests/test_sharded_players.py).
+
+    The ``players`` axis size must divide K. A mesh whose ``players``
+    axis is 1 (or absent) falls back to the plain streaming program —
+    bit-for-bit what ``run_sim_stream`` runs.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.mesh import make_continuum_mesh
+
+    mesh = make_continuum_mesh() if mesh is None else mesh
+    Dp = _mesh_axis_sizes(mesh).get("players", 1)
+    if Dp == 1:
+        run = build_sim_fn(strategy_name, cfg, K, M, fused=fused,
+                           trace=False, warmup_steps=warmup_steps,
+                           **strategy_kw)
+        return run, mesh
+    if K % Dp:
+        raise ValueError(
+            f"K={K} players must be a multiple of the {Dp}-way "
+            f"'players' mesh axis")
+    from repro.sharding import logical_to_spec
+
+    run = build_sim_fn(strategy_name, cfg, K, M, fused=fused, trace=False,
+                       warmup_steps=warmup_steps,
+                       pshard=PlayerSharding("players", Dp), **strategy_kw)
+    in_specs, out_specs = _stream_specs(mesh)
+    # global player ids ride in as a sharded operand (see
+    # build_sim_parts): the shard's identity arrives on the same data
+    # path as its rtt rows
+    inner = shard_map(
+        lambda rtt, drv, key, pids: run(rtt, drv, key, pids=pids),
+        mesh=mesh, in_specs=(*in_specs, logical_to_spec(("players",), mesh)),
+        out_specs=out_specs, check_rep=False)
+
+    def sharded_run(rtt, drivers, key):
+        return inner(rtt, drivers, key, jnp.arange(K, dtype=jnp.int32))
+
+    return sharded_run, mesh
+
+
+def run_sim_players(
+    strategy_name: str,
+    rtt: jax.Array,              # (K, M)
+    cfg: SimConfig,
+    key: jax.Array,
+    n_clients: jax.Array | None = None,   # (T, K)
+    active: jax.Array | None = None,      # (T, M)
+    drivers: Drivers | None = None,       # compiled scenario
+    warmup_steps: int = 0,
+    mesh=None,
+    **strategy_kw,
+) -> StreamOutputs:
+    """Player-sharded streaming driver: ``run_sim_stream`` semantics,
+    the K load balancers of ONE simulation split across devices.
+
+    This is the giant-fleet mode: the K=1000 × M=50 cell's ~37 MB of
+    bandit state splits D ways, opening K ≫ 10⁴ fleets whose state
+    would not fit (or not fit comfortably) on one device — see
+    docs/SCALING.md for choosing between this and the grid axis, and
+    ``make_continuum_mesh(players=...)`` for splitting devices between
+    the two. Defaulted driver buffers are donated; a 1-way player mesh
+    degrades to the plain streaming program.
+    """
+    K, M = rtt.shape
+    drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
+    run, mesh = build_sim_players_fn(
+        strategy_name, cfg, K, M, mesh=mesh, warmup_steps=warmup_steps,
+        **strategy_kw)
+    with _quiet_donation():
+        return jax.jit(run, donate_argnums=donate)(rtt, drv, key)
 
 
 def run_sim_stream(
@@ -762,6 +1163,7 @@ def run_sim_stream(
     drivers: Drivers | None = None,       # compiled scenario
     warmup_steps: int = 0,
     chunk_steps: int | None = None,
+    mesh=None,
     **strategy_kw,
 ) -> StreamOutputs:
     """Streaming run: O(K·M) device memory, O(T) scalar series on host.
@@ -773,9 +1175,24 @@ def run_sim_stream(
     one extra program; pick ``chunk_steps`` dividing ``num_steps`` to
     avoid it. Chunked and unchunked runs follow the identical per-step
     program on the identical PRNG stream.
+
+    ``mesh`` with a >1 ``players`` axis routes to ``run_sim_players``
+    (the player-sharded program); that path does not compose with
+    ``chunk_steps`` yet — the sharded scan's memory is already O(K·M/D)
+    + O(T) scalars, so chunking only matters for extreme horizons.
     """
     K, M = rtt.shape
     T = cfg.num_steps
+    if mesh is not None and _mesh_axis_sizes(mesh).get("players", 1) > 1:
+        if chunk_steps is not None:
+            raise ValueError(
+                "player sharding and chunk_steps do not compose yet: "
+                "the donated carry holds shard-local maintenance groups "
+                "that cannot round-trip the shard_map boundary")
+        return run_sim_players(
+            strategy_name, rtt, cfg, key, n_clients=n_clients,
+            active=active, drivers=drivers, warmup_steps=warmup_steps,
+            mesh=mesh, **strategy_kw)
     drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     if chunk_steps is None or chunk_steps >= T:
         run = build_sim_fn(strategy_name, cfg, K, M, trace=False,

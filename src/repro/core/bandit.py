@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kde as kde_mod
+from repro.core import prand
 from repro.core.swrr import swrr_select
 from repro.kernels import ops as kernel_ops
 
@@ -93,6 +94,7 @@ def init_state(
     reward_ring: int = 512,
     active: jax.Array | None = None,
     key: jax.Array | None = None,
+    pids: jax.Array | None = None,
 ) -> BanditState:
     """Paper Alg 1 lines 1–5: uniform weights, eps = 1 - rho.
 
@@ -101,6 +103,12 @@ def init_state(
     simulation identical weights + identical phase would make every
     player pick the *same* arm each round (herding the paper's testbed
     cannot exhibit). A random phase offset restores the async behaviour.
+
+    ``pids`` (optional, (K,) i32 *global* player ids) switches the
+    phase draw to player-indexed keying (``prand``), which is what lets
+    a player-sharded simulation initialize its shard of the state
+    bit-identically to the unsharded engine. The simulator always
+    passes it; standalone callers may omit it and get one bulk draw.
     """
     K, M, R = num_players, num_arms, ring
     if active is None:
@@ -109,6 +117,8 @@ def init_state(
     n_act = jnp.maximum(act.sum(-1, keepdims=True), 1.0)
     if key is None:
         cw0 = jnp.zeros((K, M), jnp.float32)
+    elif pids is not None:
+        cw0 = prand.player_uniform_row(key, pids, M) / jnp.maximum(n_act, 1.0)
     else:
         cw0 = jax.random.uniform(key, (K, M)) / jnp.maximum(n_act, 1.0)
     return BanditState(

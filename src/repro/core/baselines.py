@@ -16,6 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import prand
+
 
 # ---------------------------------------------------------------------------
 # proxy-mity
@@ -71,11 +73,17 @@ class DecSarsaState(NamedTuple):
 
 
 def decsarsa_init(
-    num_players: int, num_arms: int, rtt: jax.Array, params: DecSarsaParams
+    num_players: int, num_arms: int, rtt: jax.Array, params: DecSarsaParams,
+    rtt_max: jax.Array | None = None,
 ) -> DecSarsaState:
     K, M = num_players, num_arms
-    # optimistic init biased by proximity so early behaviour matches [7]
-    q0 = 0.5 + 0.5 * (1.0 - rtt / jnp.maximum(rtt.max(), 1e-9))
+    # optimistic init biased by proximity so early behaviour matches [7].
+    # rtt.max() reduces over ALL players — the one cross-player term in
+    # this baseline — so a player-sharded simulator must pass the
+    # global max (pmax over its shards) as ``rtt_max``.
+    if rtt_max is None:
+        rtt_max = rtt.max()
+    q0 = 0.5 + 0.5 * (1.0 - rtt / jnp.maximum(rtt_max, 1e-9))
     q = jnp.broadcast_to(q0[:, None, :], (K, N_LOAD_BUCKETS, M)).astype(jnp.float32)
     return DecSarsaState(
         q=jnp.array(q),
@@ -102,8 +110,14 @@ def decsarsa_select(
     params: DecSarsaParams,
     active: jax.Array,      # (M,) bool
     key: jax.Array,
+    pids: jax.Array | None = None,   # (K,) i32 global player ids
 ):
-    """eps-greedy action per player from the current state bucket."""
+    """eps-greedy action per player from the current state bucket.
+
+    With ``pids``, the exploration draws are keyed per global player id
+    (``prand``) so a player-sharded simulation reproduces the unsharded
+    stream; without it, one bulk draw (standalone callers).
+    """
     K, S, M = state.q.shape
     s = _bucket(state.last_lat, params)                     # (K,)
     qs = state.q[jnp.arange(K), s]                          # (K, M)
@@ -112,9 +126,14 @@ def decsarsa_select(
     greedy = jnp.argmax(qs, axis=-1)
     ku, kc = jax.random.split(key)
     # uniform random over active arms
-    gumbel = jax.random.gumbel(kc, (K, M))
+    if pids is not None:
+        gumbel = prand.player_gumbel(kc, pids, M)
+        u = prand.player_uniform(ku, pids)
+    else:
+        gumbel = jax.random.gumbel(kc, (K, M))
+        u = jax.random.uniform(ku, (K,))
     rand = jnp.argmax(jnp.where(active[None, :], gumbel, neg), axis=-1)
-    explore = jax.random.uniform(ku, (K,)) < state.eps
+    explore = u < state.eps
     choice = jnp.where(explore, rand, greedy)
     return choice, s
 

@@ -1,0 +1,49 @@
+"""Player-indexed randomness: shard-invariant per-player draws.
+
+The simulator shards the player axis K across devices (`shard_map`
+over the ``players`` mesh axis, see ``repro/continuum/simulator.py``).
+For a sharded run to reproduce the unsharded run bit-for-bit, every
+per-player random quantity must depend only on the *global* player id
+and the step key — never on how the (K,) axis happens to be laid out
+over devices. Drawing ``normal(key, (K,))`` breaks that: a shard
+holding players [lo, hi) cannot cheaply reproduce rows [lo, hi) of the
+full-width draw.
+
+These helpers therefore key every draw as ``fold_in(key, player_id)``
+and draw per player. A shard folds in its own global ids and gets
+exactly the numbers the unsharded engine computes for those players;
+work is O(K_local), not O(K_global). Each player's draw is an
+independent threefry stream, so the statistics match the bulk draws
+these replace.
+
+``pids`` is always the (K_local,) i32 array of *global* player ids
+(``arange(K)`` in an unsharded run).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def player_normal(key: jax.Array, pids: jax.Array) -> jax.Array:
+    """(K,) standard normal, one per player id."""
+    return jax.vmap(
+        lambda i: jax.random.normal(jax.random.fold_in(key, i)))(pids)
+
+
+def player_uniform(key: jax.Array, pids: jax.Array) -> jax.Array:
+    """(K,) uniform [0, 1), one per player id."""
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(pids)
+
+
+def player_uniform_row(key: jax.Array, pids: jax.Array, n: int) -> jax.Array:
+    """(K, n) uniform [0, 1), one row per player id."""
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i), (n,)))(pids)
+
+
+def player_gumbel(key: jax.Array, pids: jax.Array, n: int) -> jax.Array:
+    """(K, n) standard Gumbel, one row per player id (for per-player
+    categorical sampling via argmax(logits + gumbel))."""
+    return jax.vmap(
+        lambda i: jax.random.gumbel(jax.random.fold_in(key, i), (n,)))(pids)

@@ -41,3 +41,29 @@ def make_grid_mesh(devices=None):
     """
     devs = np.asarray(devices if devices is not None else jax.devices())
     return Mesh(devs.reshape(-1), ("data",))
+
+
+def make_continuum_mesh(players: int | None = None, devices=None):
+    """2-D (``data``, ``players``) mesh: the continuum-simulation mesh.
+
+    ``data`` carries independent grid lanes (scenario × seed — the
+    logical ``grid`` axis), ``players`` splits the K load balancers
+    *inside* each simulation (the logical ``players`` axis: bandit
+    rings, weights, KDE stats shard; only the per-round (M,) arrival
+    ``psum`` crosses it — see repro/continuum/simulator.py and
+    docs/SCALING.md for choosing the split).
+
+    ``players=None`` puts every device on the player axis (the
+    single-simulation, giant-fleet shape); ``players=1`` degrades to a
+    pure grid mesh; anything between splits devices ``(D // players,
+    players)``. On CPU, force fake devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first jax call.
+    """
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    n = devs.size
+    p = n if players is None else players
+    if p <= 0 or n % p:
+        raise ValueError(
+            f"players={p} must positively divide the device count {n}")
+    return Mesh(devs.reshape(n // p, p), ("data", "players"))

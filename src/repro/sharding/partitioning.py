@@ -48,11 +48,15 @@ DEFAULT_RULES: Rules = {
     "head_dim": (),
     "state": (),
     "conv": (),
-    "players": ("data",),       # bandit state scales out over front-ends
+    # player axis K *inside* one continuum simulation: bandit state
+    # (rings, weights, KDE stats) shards over the dedicated mesh axis
+    # of make_continuum_mesh; meshes without it replicate (dropped)
+    "players": ("players",),
     "arms": (),
     # evaluation-grid scenario/seed axis: lanes are independent
     # simulations, embarrassingly sharded over the flat grid mesh
-    # (launch/mesh.py::make_grid_mesh)
+    # (launch/mesh.py::make_grid_mesh) or the data axis of the 2-D
+    # continuum mesh (launch/mesh.py::make_continuum_mesh)
     "grid": ("data",),
     # decode KV-cache batch axis: defaults to the activation batch
     # sharding; the hybrid decode layout re-points it at the TP axis so

@@ -1,0 +1,220 @@
+"""Player-axis sharding parity: `run_sim_players` / 2-D `run_sim_grid`
+vs the unsharded streaming engine.
+
+The MP-MAB state factorizes over players; the ONLY cross-player
+coupling is the instance-queue recursion, which the sharded engine
+reproduces with a per-round (M,) arrival `psum`. Two engine invariants
+make the sharded schedule decompose exactly: every per-player random
+draw is keyed by global player id (repro.core.prand), and the staggered
+maintenance clocks assign phases per contiguous player block
+(`_stagger_groups`). Sharded results must therefore match the
+unsharded engine: counting statistics (QoS counts, arrival/choice
+histograms, the latency sketch, the event windows — integer-valued f32
+sums, and the per-player float fields, which see no cross-shard
+reduction at all) EXACTLY; only the psum-reduced regret series gets
+f32 reassociation tolerance.
+
+In-process tests cover the single-device fallback and the error paths;
+real multi-device parity runs in a subprocess with 8 forced host
+devices (conftest.run_sub). One subprocess checks 8-, 2- and 1-way
+player meshes on two *dynamic* library scenarios (surge,
+rolling_restart) for all three strategies, plus the composed 2-D
+(data, players) grid with scenario-diverse lanes — including the
+eagerly-padded lane path (S=3 on a 2-way data axis).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_sub
+from repro.continuum import (SimConfig, build_sim_players_fn, make_topology,
+                             run_sim_players, run_sim_stream)
+from repro.launch.mesh import make_continuum_mesh
+
+K, M = 16, 4
+CFG = SimConfig(horizon=4.0)
+WARM = 10
+
+single_device = pytest.mark.skipif(
+    len(jax.devices()) != 1,
+    reason="fallback tests need the default single-device process")
+
+# integer-valued f32 sums; sharding must not change them AT ALL
+COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts", "proc_hist",
+          "steps_measured", "ev_succ", "ev_n"}
+
+
+def _inputs():
+    rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+    return rtt, jax.random.PRNGKey(7)
+
+
+@single_device
+def test_single_device_fallback_is_the_streaming_program():
+    """A 1-way players mesh returns the plain streaming program:
+    identical floats, not just close ones."""
+    rtt, key = _inputs()
+    ref = run_sim_stream("qedgeproxy", rtt, CFG, key, warmup_steps=WARM)
+    got = run_sim_players("qedgeproxy", rtt, CFG, key, warmup_steps=WARM)
+    for name, a, b in zip(ref.acc._fields, ref.acc, got.acc):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"acc field {name}")
+    for name, a, b in zip(ref.series._fields, ref.series, got.series):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"series field {name}")
+
+
+@single_device
+def test_builder_returns_plain_run_on_one_device():
+    run, mesh = build_sim_players_fn("qedgeproxy", CFG, K, M,
+                                     warmup_steps=WARM)
+    assert dict(zip(mesh.axis_names,
+                    mesh.devices.shape)).get("players", 1) == 1
+    rtt, key = _inputs()
+    from repro.continuum import neutral_drivers
+    out = jax.jit(run)(rtt, neutral_drivers(CFG, K, M), key)
+    assert out.acc.succ_kc.shape == (K, CFG.max_clients)
+    assert out.series.succ.shape == (CFG.num_steps,)
+
+
+def test_indivisible_players_axis_raises():
+    """The players-axis size must divide K — a silent pad would issue
+    phantom requests."""
+    from repro.continuum.simulator import PlayerSharding, build_sim_parts
+    with pytest.raises(ValueError, match="multiple"):
+        build_sim_parts("qedgeproxy", CFG, 10, M, trace=False,
+                        pshard=PlayerSharding("players", 4))
+
+
+def test_player_sharding_is_streaming_only():
+    from repro.continuum.simulator import PlayerSharding, build_sim_parts
+    with pytest.raises(ValueError, match="streaming"):
+        build_sim_parts("qedgeproxy", CFG, K, M, trace=True,
+                        pshard=PlayerSharding("players", 4))
+
+
+def test_continuum_mesh_shapes():
+    devs = jax.devices()
+    mesh = make_continuum_mesh(players=1, devices=devs)
+    assert mesh.axis_names == ("data", "players")
+    with pytest.raises(ValueError, match="divide"):
+        make_continuum_mesh(players=3 * len(devs), devices=devs)
+
+
+@pytest.mark.slow
+def test_player_sharded_matches_unsharded_8dev():
+    """8/2/1-way player meshes vs the unsharded streaming engine on two
+    dynamic library scenarios, all three strategies: counting stats
+    exact, psum-reduced regret series to f32 tolerance."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, compile_scenario,
+                                     get_library, make_topology,
+                                     run_sim_players, run_sim_stream)
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, WARM = 16, 4, 10
+        cfg = SimConfig(horizon=4.0)
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        lib = get_library(cfg.horizon, K, M)
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n"}
+        for scn in ("surge", "rolling_restart"):
+            drv = compile_scenario(lib[scn], cfg, jax.random.PRNGKey(3))
+            for strat, kw in (("qedgeproxy", {}), ("dec_sarsa", {}),
+                              ("proxy_mity", dict(alpha=0.9))):
+                ref = run_sim_stream(strat, rtt, cfg, key, drivers=drv,
+                                     warmup_steps=WARM, **kw)
+                for D in (8, 2, 1):
+                    mesh = make_continuum_mesh(
+                        players=D, devices=jax.devices()[:D])
+                    got = run_sim_players(
+                        strat, rtt, cfg, key, drivers=drv,
+                        warmup_steps=WARM, mesh=mesh, **kw)
+                    for name in ref.acc._fields:
+                        a = np.asarray(getattr(ref.acc, name))
+                        b = np.asarray(getattr(got.acc, name))
+                        if name in COUNTS:
+                            np.testing.assert_array_equal(
+                                b, a, err_msg=f"{scn} {strat} D{D} {name}")
+                        else:
+                            np.testing.assert_allclose(
+                                b, a, rtol=1e-5, atol=1e-5,
+                                err_msg=f"{scn} {strat} D{D} {name}")
+                    np.testing.assert_array_equal(
+                        np.asarray(got.series.succ),
+                        np.asarray(ref.series.succ),
+                        err_msg=f"{scn} {strat} D{D} series.succ")
+                    np.testing.assert_array_equal(
+                        np.asarray(got.series.issued),
+                        np.asarray(ref.series.issued),
+                        err_msg=f"{scn} {strat} D{D} series.issued")
+                    np.testing.assert_allclose(
+                        np.asarray(got.series.regret),
+                        np.asarray(ref.series.regret),
+                        rtol=1e-4, atol=1e-4,
+                        err_msg=f"{scn} {strat} D{D} series.regret")
+                print(scn, strat, "player parity ok")
+        print("OK player parity")
+    """)
+    assert "OK player parity" in out
+
+
+@pytest.mark.slow
+def test_2d_grid_composition_matches_vmap_8dev():
+    """The composed 2-D (data, players) grid: scenario-diverse lanes
+    over `data`, every lane's K players over `players`, against the
+    plain vmap reference — 2x4, 4x2 and 2x2 meshes, S=3 lanes so the
+    eager lane-pad path is exercised on every data axis > 1."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, build_sim_fn,
+                                     compile_scenario, get_library,
+                                     make_topology, run_sim_grid,
+                                     stack_drivers)
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, S, WARM = 16, 4, 3, 10
+        cfg = SimConfig(horizon=3.0)
+        rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
+                          .lb_instance_rtt() for s in range(S)])
+        keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(S)])
+        lib = list(get_library(cfg.horizon, K, M).values())
+        drivers = stack_drivers(
+            [compile_scenario(lib[i % len(lib)], cfg,
+                              jax.random.PRNGKey(i)) for i in range(S)])
+        run = build_sim_fn("qedgeproxy", cfg, K, M, trace=False,
+                           warmup_steps=WARM)
+        ref = jax.jit(jax.vmap(run, in_axes=(0, 0, 0)))(
+            rtts, drivers, keys)
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n"}
+        for dd, dp in ((2, 4), (4, 2), (2, 2)):
+            mesh = make_continuum_mesh(players=dp,
+                                       devices=jax.devices()[:dd * dp])
+            got = run_sim_grid("qedgeproxy", rtts, cfg, keys,
+                               drivers=drivers, warmup_steps=WARM,
+                               mesh=mesh)
+            for name in ref.acc._fields:
+                a = np.asarray(getattr(ref.acc, name))
+                b = np.asarray(getattr(got.acc, name))
+                if name in COUNTS:
+                    np.testing.assert_array_equal(
+                        b, a, err_msg=f"{dd}x{dp} acc.{name}")
+                else:
+                    np.testing.assert_allclose(
+                        b, a, rtol=1e-5, atol=1e-5,
+                        err_msg=f"{dd}x{dp} acc.{name}")
+            np.testing.assert_array_equal(
+                np.asarray(got.series.succ), np.asarray(ref.series.succ),
+                err_msg=f"{dd}x{dp} series.succ")
+            np.testing.assert_allclose(
+                np.asarray(got.series.regret),
+                np.asarray(ref.series.regret), rtol=1e-4, atol=1e-4,
+                err_msg=f"{dd}x{dp} series.regret")
+            print(f"mesh {dd}x{dp} grid parity ok")
+        print("OK 2d grid parity")
+    """)
+    assert "OK 2d grid parity" in out
