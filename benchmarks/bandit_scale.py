@@ -17,6 +17,12 @@ variant:
                      scatters + full-width (K, M, R) sort+KDE
                      maintenance every step), kept as the historical
                      speedup reference on a few anchor cells.
+  * ``resilient``  — the streaming cell with the request-lifecycle
+                     resilience layer on (attempt timeout + 2
+                     deadline-bounded retries + circuit breakers):
+                     the ``resilience_overhead`` ratio per M=10 cell
+                     prices the unrolled attempt loop, and the smoke
+                     gate holds it to the same steps/s floor.
 
 Two extra cells tell the memory story end to end:
 
@@ -115,12 +121,22 @@ def _cell_inputs(K, M, cfg):
     return (_rand_rtt(K, M), drv, jax.random.PRNGKey(7))
 
 
+# the resilience-overhead row: the streaming cell re-measured with the
+# full request-lifecycle layer on (timeout + 2 deadline-bounded retries
+# + breakers), so the unrolled attempt loop and the breaker carry pay
+# their cost in the open
+RESILIENT_KNOBS = dict(attempt_timeout=0.055, max_retries=2,
+                       retry_backoff=0.002, breaker_threshold=4,
+                       breaker_cooldown=1.0)
+
+
 def _lower_cell(K, M, horizon, variant):
-    cfg = SimConfig(horizon=horizon)
+    cfg = SimConfig(horizon=horizon,
+                    **(RESILIENT_KNOBS if variant == "resilient" else {}))
     args = _cell_inputs(K, M, cfg)
     run = jax.jit(build_sim_fn(
-        "qedgeproxy", cfg, K, M,
-        fused=variant != "sequential", trace=variant != "stream"))
+        "qedgeproxy", cfg, K, M, fused=variant != "sequential",
+        trace=variant not in ("stream", "resilient")))
     return run.lower(*args), args, cfg.num_steps
 
 
@@ -342,6 +358,11 @@ def bandit_scale():
     for M in grid_m:
         for K in grid_k:
             cell = {"stream": _measure(K, M, horizon, "stream")}
+            if M == grid_m[0]:      # resilience-overhead row (one M)
+                cell["resilient"] = _measure(K, M, horizon, "resilient")
+                cell["resilience_overhead"] = (
+                    cell["resilient"]["us_per_step"]
+                    / cell["stream"]["us_per_step"])
             if (K, M) in TRACE_REF_CELLS or common.SMOKE:
                 cell["trace"] = _measure(K, M, horizon, "trace")
             if (K, M) in SEQ_REF_CELLS or common.SMOKE:
@@ -413,6 +434,14 @@ def bandit_scale():
         slow = {k: v["stream"]["steps_per_s"] for k, v in payload.items()
                 if isinstance(v, dict) and "stream" in v
                 and v["stream"]["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S}
+        # the retry/breaker path holds the same floor: the resilient
+        # cell regressing below it means the attempt unroll went
+        # quadratic or the breaker carry stopped fusing
+        slow.update({f"{k}_resilient": v["resilient"]["steps_per_s"]
+                     for k, v in payload.items()
+                     if isinstance(v, dict) and "resilient" in v
+                     and v["resilient"]["steps_per_s"]
+                     < SMOKE_FLOOR_STEPS_PER_S})
         if chunked["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S:
             slow["chunked"] = chunked["steps_per_s"]
         for name, cell in grid_cells.items():
@@ -443,6 +472,10 @@ def bandit_scale():
     derived += " " + " ".join(
         f"{k}={v.get('per_device_peak_mb', 0.0):.1f}MB/dev"
         for k, v in payload.items() if k.startswith("players_"))
+    derived += " " + " ".join(
+        f"{k}:res_x{v['resilience_overhead']:.2f}"
+        for k, v in payload.items()
+        if isinstance(v, dict) and "resilience_overhead" in v)
     derived += f" compile_wall={compile_wall:.1f}s"
     mem_key = f"mem_K{MEM_CELL[0]}_M{MEM_CELL[1]}"
     if mem_key in payload:

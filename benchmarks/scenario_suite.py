@@ -9,22 +9,57 @@ recovery statistics (worst dip, slowest recovery over the scenario's
 event marks) — the Fig 9/10-style adaptation story for regimes the
 paper never measured. EXPERIMENTS.md §Scenario-library holds the
 reference table.
+
+The ``graceful_degradation`` lane re-runs the resilience probes
+(`retry_storm`, `metastable_overload`, `flash_crowd`) under five
+request-lifecycle policies — neutral, deadline-bounded retries with
+breakers, bounded without breakers, naive unbounded retries, and a
+bounded policy whose timeout sits inside the healthy latency band —
+at the relaxed tau=150 ms QoS class that leaves an in-deadline retry
+window (EXPERIMENTS.md documents why the paper's tau=80 ms admits
+none). Policies change `SimConfig` statics, so each variant is its
+own compiled grid over the scenario lanes.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, strategy_name, timed
-from repro.continuum import (build_sim_grid_fn, client_qos_satisfaction_stream,
-                             compile_scenario, event_recovery, get_library,
+from repro.continuum import (breaker_open_fraction_stream, build_sim_grid_fn,
+                             client_qos_satisfaction_stream, compile_scenario,
+                             event_recovery, get_library,
                              jain_fairness_stream, make_topology,
-                             stack_drivers)
+                             resilience_stats_stream, stack_drivers)
 
 # contrast pair: the adaptive balancer vs the static-proximity baseline
 SUITE_STRATEGIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
 SMOKE_SCENARIOS = ("baseline", "surge", "cascade_failure", "everything")
+
+# graceful-degradation lane: scenarios x request-lifecycle policies
+DEGRADE_SCENARIOS = ("retry_storm", "metastable_overload", "flash_crowd")
+SMOKE_DEGRADE_SCENARIOS = ("retry_storm",)
+DEGRADE_POLICIES = (
+    ("neutral", {}),
+    ("bounded", dict(attempt_timeout=0.090, max_retries=2,
+                     retry_backoff=0.002, breaker_threshold=5,
+                     breaker_cooldown=1.0)),
+    ("bounded_nobrk", dict(attempt_timeout=0.090, max_retries=2,
+                           retry_backoff=0.002)),
+    ("naive", dict(attempt_timeout=0.090, max_retries=5,
+                   retry_deadline=False)),
+    # same bounded policy, timeout INSIDE the healthy queue-fluctuation
+    # band (p99 latency ~71 ms > 70 ms): records the stability knife
+    # edge — a hotspot eventually breaches the timeout depth and the
+    # retry feedback loop absorbs (EXPERIMENTS.md §Graceful-degradation)
+    ("tight", dict(attempt_timeout=0.070, max_retries=2,
+                   retry_backoff=0.002, breaker_threshold=5,
+                   breaker_cooldown=1.0)),
+)
+DEGRADE_TAU = 0.150
 
 _cache = common.register_cache({})
 
@@ -62,6 +97,78 @@ def get_scenario_suite():
     return _cache
 
 
+_degrade_cache = common.register_cache({})
+
+
+def get_degradation_suite():
+    """{(scenario, policy): StreamOutputs} over the resilience probes.
+
+    One compiled grid per policy (resilience knobs are `SimConfig`
+    statics), scenario lanes stacked exactly like the library suite;
+    shared topology/key/driver streams so the ONLY difference between
+    policy rows is the request-lifecycle layer.
+    """
+    if _degrade_cache:
+        return _degrade_cache
+    K, M = common.N_LBS, common.N_INSTANCES
+    names = list(SMOKE_DEGRADE_SCENARIOS if common.SMOKE
+                 else DEGRADE_SCENARIOS)
+    lib = get_library(common.CFG.horizon, K, M)
+    topo = make_topology(jax.random.PRNGKey(1), K, M)
+    rtt = topo.lb_instance_rtt()
+    rtts = jnp.broadcast_to(rtt[None], (len(names),) + rtt.shape)
+    keys = jnp.broadcast_to(jax.random.PRNGKey(11)[None],
+                            (len(names), 2))
+    base = dataclasses.replace(common.CFG, tau=DEGRADE_TAU)
+    # drivers depend on the schedule statics only, never the
+    # resilience knobs: one compile serves every policy row
+    drivers = stack_drivers(
+        [compile_scenario(lib[n], base, jax.random.PRNGKey(600 + i))
+         for i, n in enumerate(names)])
+
+    lowered, mesh = [], None
+    for label, knobs in DEGRADE_POLICIES:
+        cfg = dataclasses.replace(base, **knobs)
+        run_grid, mesh = build_sim_grid_fn(
+            "qedgeproxy", cfg, K, M, mesh=mesh,
+            warmup_steps=common.WARM)
+        lowered.append(jax.jit(run_grid).lower(rtts, drivers, keys))
+    for (label, _), exe in zip(DEGRADE_POLICIES,
+                               common.compile_all(lowered)):
+        outs = exe(rtts, drivers, keys)
+        for i, name in enumerate(names):
+            _degrade_cache[(name, label)] = jax.tree.map(
+                lambda x: x[i], outs)
+    _degrade_cache["names"] = names
+    return _degrade_cache
+
+
+def _degradation_payload():
+    suite = get_degradation_suite()
+    out = {}
+    for name in suite["names"]:
+        row = {}
+        for label, knobs in DEGRADE_POLICIES:
+            o = suite[(name, label)]
+            rec = event_recovery(o.acc, common.CFG.ev_bucket)
+            cell = {
+                "qos_sat_pct": client_qos_satisfaction_stream(
+                    o.acc, common.CFG.rho),
+                **resilience_stats_stream(o.acc),
+            }
+            if knobs.get("breaker_threshold"):
+                cell["breaker_open_frac"] = float(
+                    jnp.asarray(breaker_open_fraction_stream(o.acc))
+                    .mean())
+            if rec:
+                cell["worst_dip"] = min(r["dip"] for r in rec)
+                cell["unrecovered_events"] = sum(
+                    1 for r in rec if not r["recovered"])
+            row[label] = cell
+        out[name] = row
+    return out
+
+
 def scenario_suite():
     suite = get_scenario_suite()
 
@@ -87,11 +194,16 @@ def scenario_suite():
                         cell["max_recovery_s"] = max(recovered)
                 row[label] = cell
             out[name] = row
+        out["graceful_degradation"] = _degradation_payload()
         return out
 
     payload, us = timed(compute)
     derived = " ".join(
         f"{n}:qep={row['qedgeproxy']['qos_sat_pct']:.0f}%"
-        for n, row in payload.items())
+        for n, row in payload.items() if n != "graceful_degradation")
+    derived += " " + " ".join(
+        f"{n}:dip n={row['neutral'].get('worst_dip', 1.0):.2f}"
+        f"/b={row['bounded'].get('worst_dip', 1.0):.2f}"
+        for n, row in payload["graceful_degradation"].items())
     emit("scenario_suite", us, derived, payload)
     return payload

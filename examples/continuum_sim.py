@@ -30,7 +30,27 @@ def main():
                     help="shard the 30-player axis over this many "
                          "devices (30 %% N must be 0; forces N host "
                          "devices on CPU)")
+    ap.add_argument("--resilient", action="store_true",
+                    help="turn on the request-lifecycle resilience "
+                         "layer (90ms attempt timeout, 2 deadline-"
+                         "bounded retries, 5-strike breakers) at a "
+                         "relaxed tau=150ms QoS class")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint the streaming carry here every "
+                         "--checkpoint-every chunks (forces the "
+                         "chunked streaming engine)")
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--chunk-steps", type=int, default=200,
+                    help="compiled chunk length for the checkpointed "
+                         "streaming path")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir (bit-exact vs uninterrupted)")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        sys.exit("--resume needs --checkpoint-dir")
+    if args.checkpoint_dir and args.players > 1:
+        sys.exit("--checkpoint-dir does not compose with --players yet")
 
     if args.players > 1 and "--xla_force_host_platform_device_count" \
             not in os.environ.get("XLA_FLAGS", ""):
@@ -47,10 +67,15 @@ def main():
                                  jain_fairness, jain_fairness_stream,
                                  make_topology, rolling_qos,
                                  rolling_qos_series, run_sim,
-                                 run_sim_players)
+                                 run_sim_players, run_sim_stream)
     from repro.launch.mesh import make_continuum_mesh
 
     cfg = SimConfig(horizon=args.horizon)
+    if args.resilient:
+        cfg = SimConfig(horizon=args.horizon, tau=0.150,
+                        attempt_timeout=0.090, max_retries=2,
+                        retry_backoff=0.002, breaker_threshold=5,
+                        breaker_cooldown=1.0)
     warm = int(min(60.0, args.horizon / 3) / cfg.dt)
     topo = make_topology(jax.random.PRNGKey(args.scenario), 30, 10)
     rtt = topo.lb_instance_rtt()
@@ -83,6 +108,20 @@ def main():
             outs = run_sim_players(name, rtt, cfg, jax.random.PRNGKey(7),
                                    drivers=drivers, warmup_steps=warm,
                                    mesh=mesh, **kw)
+            sat = client_qos_satisfaction_stream(outs.acc, cfg.rho)
+            fair = jain_fairness_stream(outs.acc)
+            roll = rolling_qos_series(
+                outs.series, int(cfg.window / cfg.dt))[warm:].mean()
+        elif args.checkpoint_dir:
+            outs = run_sim_stream(
+                name, rtt, cfg, jax.random.PRNGKey(7), drivers=drivers,
+                warmup_steps=warm, chunk_steps=args.chunk_steps,
+                # key the subdir by the display label, not the strategy
+                # name — both proxy-mity variants share one `name`
+                checkpoint_dir=os.path.join(
+                    args.checkpoint_dir, label.replace(" ", "_").lower()),
+                checkpoint_every=args.checkpoint_every,
+                resume=args.resume, **kw)
             sat = client_qos_satisfaction_stream(outs.acc, cfg.rho)
             fair = jain_fairness_stream(outs.acc)
             roll = rolling_qos_series(

@@ -32,7 +32,7 @@ def _frac(n: int, frac: float, lo: int = 1) -> tuple[int, ...]:
 
 def get_library(horizon: float, n_nodes: int = 30, n_instances: int = 10,
                 base_clients: int = 4) -> dict[str, Scenario]:
-    """~11 named scenarios sized to ``horizon`` seconds and a K×M fleet."""
+    """~13 named scenarios sized to ``horizon`` seconds and a K×M fleet."""
     hz, K, M = horizon, n_nodes, n_instances
     kw = dict(n_nodes=K, n_instances=M, base_clients=base_clients)
     third_m = _frac(M, 1 / 3)
@@ -94,6 +94,26 @@ def get_library(horizon: float, n_nodes: int = 30, n_instances: int = 10,
                        direction="up")),
             description="start short-handed, autoscaler staggers in"
                         " replicas", **kw),
+        Scenario(
+            "retry_storm",
+            (ServiceSlowdown(start=0.35 * hz, stop=0.65 * hz,
+                             instances=_frac(M, 1 / 10), factor=6.0),),
+            description="gray failure: one instance throttles 6x — slow"
+                        " enough that its requests trip the attempt"
+                        " timeout, alive enough that liveness masking"
+                        " never fires. The healthy fleet has headroom,"
+                        " so the resilience layer decides the outcome:"
+                        " retries rescue the sick instance's requests"
+                        " while breakers eject it faster than the KDE"
+                        " window learns", **kw),
+        Scenario(
+            "metastable_overload",
+            (LoadSurge(start=0.4 * hz, stop=0.5 * hz, extra=4,
+                       fraction=0.8, ramp=0.02 * hz),),
+            description="brief over-capacity trigger, then load returns"
+                        " to normal: the fleet recovers iff retry"
+                        " amplification stays below spare capacity —"
+                        " the metastable-overload probe", **kw),
         Scenario(
             "everything",
             (ClientChurn(start=0.0, rate=0.3, max_delta=1),

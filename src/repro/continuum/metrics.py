@@ -80,6 +80,13 @@ class MetricAccumulator(NamedTuple):
     steps_measured: jax.Array  # ()   f32 count of post-warmup steps
     ev_succ: jax.Array        # (E, 1+B) QoS successes per event window
     ev_n: jax.Array           # (E, 1+B) issued requests per event window
+    # --- request-lifecycle resilience counters (per-player: shard
+    # without any reduction). With resilience off, att_k == issued and
+    # timeout_k/drop_k/open_km stay zero. ---
+    att_k: jax.Array          # (K,)  post-warmup attempts (incl. retries)
+    timeout_k: jax.Array      # (K,)  post-warmup timed-out attempts
+    drop_k: jax.Array         # (K,)  post-warmup dropped requests
+    open_km: jax.Array        # (K, M) post-warmup breaker-open step counts
 
 
 class StepSeries(NamedTuple):
@@ -89,6 +96,7 @@ class StepSeries(NamedTuple):
     succ: jax.Array     # (T,) fleet-wide QoS successes this step
     issued: jax.Array   # (T,) fleet-wide issued requests this step
     regret: jax.Array   # (T,) system regret this step
+    attempts: jax.Array  # (T,) fleet-wide attempts (offered load incl. retries)
 
 
 class StreamOutputs(NamedTuple):
@@ -117,6 +125,10 @@ def init_accumulator(K: int, M: int, C: int,
         steps_measured=jnp.zeros((), jnp.float32),
         ev_succ=jnp.zeros((n_marks, 1 + ev_buckets), jnp.float32),
         ev_n=jnp.zeros((n_marks, 1 + ev_buckets), jnp.float32),
+        att_k=jnp.zeros((K,), jnp.float32),
+        timeout_k=jnp.zeros((K,), jnp.float32),
+        drop_k=jnp.zeros((K,), jnp.float32),
+        open_km=jnp.zeros((K, M), jnp.float32),
     )
 
 
@@ -135,8 +147,18 @@ def update_accumulator(
     marks: jax.Array | None = None,   # (E,) event-onset steps, -1 padded
     ev_pre_steps: int = 1,
     ev_bucket_steps: int = 1,
+    attempts: jax.Array | None = None,   # (K, C) attempts per request slot
+    dropped: jax.Array | None = None,    # (K, C) bool: deadline exhausted
+    brk_open: jax.Array | None = None,   # (K, M) bool: breaker open now
 ) -> MetricAccumulator:
-    """One on-device accumulator update; everything here is O(K·M)."""
+    """One on-device accumulator update; everything here is O(K·M).
+
+    ``attempts``/``dropped`` default to the non-resilient identities
+    (one attempt per issued request, nothing dropped); per-slot
+    timeouts are the derived quantity ``attempts - completed`` — every
+    attempt either times out or completes, and at most one attempt of
+    a request completes.
+    """
     K, C = rewards.shape
     M, B = acc.proc_hist.shape
     issf = issued.astype(jnp.float32)
@@ -172,6 +194,13 @@ def update_accumulator(
             (rewards * issf).sum(), mode="drop")
         ev_n = ev_n.at[eidx, slot].add(issf.sum(), mode="drop")
 
+    att = issf if attempts is None else attempts.astype(jnp.float32)
+    dropf = (jnp.zeros_like(issf) if dropped is None
+             else dropped.astype(jnp.float32))
+    completed = issf * (1.0 - dropf)
+    open_upd = (acc.open_km if brk_open is None
+                else acc.open_km + meas * brk_open.astype(jnp.float32))
+
     vb_step = jnp.where(t_idx > 0, jnp.abs(mu - acc.prev_mu).max(-1), 0.0)
     return MetricAccumulator(
         succ_kc=acc.succ_kc + meas * rewards * issf,
@@ -185,6 +214,10 @@ def update_accumulator(
         steps_measured=acc.steps_measured + meas,
         ev_succ=ev_succ,
         ev_n=ev_n,
+        att_k=acc.att_k + meas * att.sum(-1),
+        timeout_k=acc.timeout_k + meas * (att - completed).sum(-1),
+        drop_k=acc.drop_k + meas * dropf.sum(-1),
+        open_km=open_upd,
     )
 
 
@@ -313,6 +346,34 @@ def variation_budget_emp(outs) -> np.ndarray:
     return np.abs(np.diff(mu, axis=0)).max(-1).sum(0)
 
 
+def resilience_stats(outs, warmup_steps: int = 0) -> dict:
+    """Request-lifecycle counters from a trace — the post-hoc
+    counterpart of ``resilience_stats_stream`` (parity-locked in
+    tests/test_streaming.py). Timeouts are derived per slot as
+    ``attempts - completed``."""
+    att = np.asarray(outs.attempts, np.float64)[warmup_steps:]
+    drop = np.asarray(outs.dropped)[warmup_steps:]
+    m = np.asarray(outs.issued)[warmup_steps:]
+    return _resilience_dict(
+        requests=m.sum(), attempts=att.sum(),
+        timeouts=(att - (m & ~drop)).sum(), drops=(drop & m).sum())
+
+
+def _resilience_dict(*, requests, attempts, timeouts, drops) -> dict:
+    requests, attempts = float(requests), float(attempts)
+    timeouts, drops = float(timeouts), float(drops)
+    return {
+        "requests": requests,
+        "attempts": attempts,
+        "retries": attempts - requests,
+        "timeouts": timeouts,
+        "drops": drops,
+        "retry_rate": (attempts - requests) / max(requests, 1.0),
+        "timeout_rate": timeouts / max(attempts, 1.0),
+        "drop_rate": drops / max(requests, 1.0),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Streaming extraction (MetricAccumulator / StepSeries).
 # ---------------------------------------------------------------------------
@@ -380,6 +441,45 @@ def cumulative_regret_series(series: StepSeries) -> np.ndarray:
 def variation_budget_stream(acc: MetricAccumulator) -> np.ndarray:
     """(K,) empirical V_k(T) partial sum (Def. 1)."""
     return np.asarray(acc.vb_k)
+
+
+def resilience_stats_stream(acc: MetricAccumulator) -> dict:
+    """Post-warmup attempt/retry/timeout/drop counters and rates."""
+    return _resilience_dict(
+        requests=np.asarray(acc.n_kc, np.float64).sum(),
+        attempts=np.asarray(acc.att_k, np.float64).sum(),
+        timeouts=np.asarray(acc.timeout_k, np.float64).sum(),
+        drops=np.asarray(acc.drop_k, np.float64).sum())
+
+
+def breaker_open_fraction_stream(acc: MetricAccumulator) -> np.ndarray:
+    """(K, M) fraction of post-warmup steps each (player, arm) breaker
+    spent open — the outlier-ejection occupancy."""
+    steps = max(float(acc.steps_measured), 1.0)
+    return np.asarray(acc.open_km, np.float64) / steps
+
+
+def goodput_offered_series(series: StepSeries, dt: float,
+                           window_steps: int) -> tuple[np.ndarray, np.ndarray]:
+    """(goodput, offered) rolling req/s from the per-step streams.
+
+    Goodput counts requests that met their QoS deadline; offered load
+    counts every attempt put on the wire (retries included). Their gap
+    is the work the fleet performed without satisfying anyone — the
+    retry-amplification signature."""
+    succ = np.asarray(series.succ, np.float64)
+    att = np.asarray(series.attempts, np.float64)
+    T = len(succ)
+    cs_s = np.concatenate([[0.0], np.cumsum(succ)])
+    cs_a = np.concatenate([[0.0], np.cumsum(att)])
+    good = np.zeros(T)
+    offered = np.zeros(T)
+    for t in range(T):
+        lo = max(0, t - window_steps + 1)
+        span = (t + 1 - lo) * dt
+        good[t] = (cs_s[t + 1] - cs_s[lo]) / span
+        offered[t] = (cs_a[t + 1] - cs_a[lo]) / span
+    return good, offered
 
 
 # ---------------------------------------------------------------------------

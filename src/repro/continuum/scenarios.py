@@ -350,9 +350,12 @@ class LinkDegrade(Event):
 @dataclass(frozen=True)
 class Partition(Event):
     """Network partition: routes from ``lbs`` to ``instances`` gain
-    ``penalty`` seconds (≫ tau: unreachable for QoS purposes, requests
-    routed there simply fail) until the heal at ``stop``. Factored as
-    min(cut_k, cut_m) — only the LB∩instance intersection pays."""
+    ``penalty`` seconds (≫ tau: unreachable for QoS purposes) until the
+    heal at ``stop``. Without the resilience layer a request routed
+    there simply fails; with ``SimConfig.attempt_timeout`` set, the
+    attempt is cut at the timeout and retried elsewhere within the
+    deadline budget (and breakers eject the unreachable arm). Factored
+    as min(cut_k, cut_m) — only the LB∩instance intersection pays."""
     stop: float = math.inf
     lbs: tuple[int, ...] = ()
     instances: tuple[int, ...] = ()

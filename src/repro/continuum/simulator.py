@@ -132,10 +132,33 @@ class SimConfig:
     ev_pre: float = 10.0
     ev_bucket: float = 2.0
     ev_buckets: int = 30
+    # --- request-lifecycle resilience (all off by default; the neutral
+    # config traces the exact pre-resilience program). An attempt
+    # exceeding ``attempt_timeout`` seconds is abandoned by the client
+    # (the instance still does the work — the arrival is not recalled)
+    # and observed only as a censored latency lower bound; with
+    # ``max_retries`` > 0 it is retried on a re-selected instance after
+    # exponential backoff (``retry_backoff * 2^(a-1)`` before attempt
+    # a), as long as the elapsed budget stays inside the request's QoS
+    # deadline tau (``retry_deadline=False`` drops that guard — the
+    # naive retry policy that amplifies overload). ``breaker_threshold``
+    # consecutive timeouts on one (player, arm) open an Envoy-style
+    # circuit breaker for ``breaker_cooldown`` seconds; see
+    # ``core.bandit.BreakerState``. ---
+    attempt_timeout: float = 0.0     # per-attempt client timeout [s]; 0 = off
+    max_retries: int = 0             # R: retry attempts after a timeout
+    retry_backoff: float = 0.005     # base backoff [s] before attempt a >= 1
+    retry_deadline: bool = True      # budget retries against tau (False = naive)
+    breaker_threshold: int = 0       # consecutive timeouts to open; 0 = off
+    breaker_cooldown: float = 2.0    # open -> half-open probe after this [s]
 
     @property
     def num_steps(self) -> int:
         return int(round(self.horizon / self.dt))
+
+    @property
+    def resilience_on(self) -> bool:
+        return self.attempt_timeout > 0.0
 
 
 class PlayerSharding(NamedTuple):
@@ -166,6 +189,8 @@ class SimOutputs(NamedTuple):
     true_mu: jax.Array      # (T, K, M) oracle success probabilities
     regret: jax.Array       # (T, K) per-step oracle regret
     eps: jax.Array          # (T, K) exploration rate (qedgeproxy) or 0
+    attempts: jax.Array     # (T, K, C) attempts per request (1 + retries)
+    dropped: jax.Array      # (T, K, C) deadline exhausted without completing
 
 
 def _true_mu(rtt, q, cfg: SimConfig, service_time):
@@ -429,8 +454,28 @@ def build_sim_parts(
     deliberately data, not ``lax.axis_index``: the ids then cannot
     disagree with the rows they describe.
 
-    The carry is ``(state, queue, prev_active, acc, groups, pids)``
-    with ``acc=None`` in trace mode.
+    The carry is ``(state, queue, prev_active, acc, groups, pids,
+    breaker)`` with ``acc=None`` in trace mode and ``breaker=None``
+    unless the config enables circuit breakers.
+
+    **Request-lifecycle resilience** (``cfg.attempt_timeout > 0``): the
+    round body unrolls ``1 + cfg.max_retries`` attempts per request.
+    Attempt 0 is the bandit's own selection (optionally vetoed by an
+    open breaker); a timed-out attempt is observed as a censored
+    latency (``core.bandit.censored_latency`` — a point mass past tau,
+    so the KDE learns "worse than the threshold", never the true
+    value), its instance KEEPS the work (the arrival stays in the queue
+    recursion — abandoned work is how retry storms amplify), and the
+    retry re-routes via ``core.bandit.retry_pick`` over the current
+    weights, excluding the failed arm and any breaker-open arms, after
+    an exponential backoff charged against the request's tau budget.
+    All of this is gated on *static* config flags: the neutral config
+    (timeout 0, R=0, breakers off) traces the byte-identical
+    pre-resilience program — bit-identity is structural, not numerical
+    luck. Every resilience state is per-player ((K,·) breaker counters,
+    per-attempt draws keyed by global player id), so it shards on the
+    ``players`` axis with no new in-loop collectives: retry arrivals
+    fold into the SAME per-round (M,) arrival psum.
     """
     if pshard is not None and pshard.shards == 1:
         pshard = None
@@ -443,6 +488,16 @@ def build_sim_parts(
             raise ValueError(
                 f"K={K} players must be a multiple of the "
                 f"{pshard.shards}-way '{pshard.axis}' mesh axis")
+    res_on = cfg.attempt_timeout > 0.0
+    if not res_on and (cfg.max_retries or cfg.breaker_threshold):
+        raise ValueError(
+            "max_retries/breaker_threshold need attempt_timeout > 0: "
+            "the per-attempt timeout is the failure signal both "
+            "mechanisms respond to")
+    brk_on = res_on and cfg.breaker_threshold > 0
+    n_attempts = 1 + (cfg.max_retries if res_on else 0)
+    censor = (qb.censored_latency(cfg.attempt_timeout, cfg.tau)
+              if res_on else 0.0)
     K_glob = K
     K = K if pshard is None else K // pshard.shards   # local width below
     T, C = cfg.num_steps, cfg.max_clients
@@ -480,11 +535,12 @@ def build_sim_parts(
                                  pids[0], K)
         acc = None if trace else qm.init_accumulator(
             K, M, C, n_marks=qs.MAX_MARKS, ev_buckets=cfg.ev_buckets)
+        brk = qb.breaker_init(K, M) if brk_on else None
         keys = jax.random.split(k_scan, T)
-        return (s0, q0, active0, acc, groups, pids), keys
+        return (s0, q0, active0, acc, groups, pids, brk), keys
 
     def step_fn(rtt, marks, carry, xs):
-        state, q, prev_active, acc, groups, pids = carry
+        state, q, prev_active, acc, groups, pids, brk = carry
         t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step, group = xs
         t = t_idx.astype(jnp.float32) * cfg.dt
 
@@ -497,11 +553,22 @@ def build_sim_parts(
 
         # --- placement events (paper Alg 3/4 trigger) ---
         changed = jnp.any(act != prev_active)
-        state = jax.lax.cond(
-            changed,
-            lambda s: strat["on_activity"](s, act, rtt_t, t),
-            lambda s: s,
-            state)
+        if brk_on:
+            # liveness flips also clear the affected breaker columns,
+            # mirroring how Alg 3/4 purge the arm's bandit data
+            state, brk = jax.lax.cond(
+                changed,
+                lambda sb: (strat["on_activity"](sb[0], act, rtt_t, t),
+                            qb.breaker_reset_arms(sb[1],
+                                                  act != prev_active)),
+                lambda sb: sb,
+                (state, brk))
+        else:
+            state = jax.lax.cond(
+                changed,
+                lambda s: strat["on_activity"](s, act, rtt_t, t),
+                lambda s: s,
+                state)
 
         # --- maintenance: only the player group whose clock fires.
         # The row arrives through xs (sliced by the scan machinery from
@@ -542,47 +609,190 @@ def build_sim_parts(
         # fallback lets the strategy read its own per-request state
         # between rounds (Dec-SARSA). Bit-for-bit identical paths
         # (tests/test_bandit_batch.py). ---
-        def round_body(rc, r):
-            state, q, arrivals = rc
-            k_r = jax.random.fold_in(k_step, r)
-            k_sel, k_noise = jax.random.split(k_r)
-            mask = r < nc                                      # (K,)
-            choice, state = strat["select"](state, k_sel, t, act, pids)
-            # processing noise keyed per global player id (prand), so
-            # the draw is invariant to how the K axis is sharded
-            z = jnp.exp(
-                cfg.proc_sigma * prand.player_normal(k_noise, pids))
-            q_seen = q[choice]
-            proc = (q_seen + 1.0) * s_m[choice] * z
-            lat = rtt_t[kidx, choice] + proc
-            if batched_record:
-                state = strat["record_feedback"](state, choice, lat,
-                                                 t, mask)
-            else:
-                state = strat["record"](state, choice, lat, t, mask)
-            arr_r = jax.ops.segment_sum(
-                mask.astype(jnp.float32), choice, num_segments=M)
-            # the ONE cross-player coupling: same-round requests from
-            # every LB land on the shared queues, so a player-sharded
-            # round psums its local (M,) arrivals before the drain
-            # (integer-valued f32 — the psum is exact, and the queue
-            # stays replicated across shards). `arrivals` keeps the
-            # shard-LOCAL sum: it feeds the accumulator's partial
-            # arrivals_m, reduced once after the scan.
-            arr_all = (arr_r if pshard is None
-                       else jax.lax.psum(arr_r, pshard.axis))
-            q = jnp.maximum(q + arr_all - served_per_round, 0.0)
-            return (state, q, arrivals + arr_r), (choice, lat, proc)
+        if not res_on:
+            def round_body(rc, r):
+                state, q, arrivals = rc
+                k_r = jax.random.fold_in(k_step, r)
+                k_sel, k_noise = jax.random.split(k_r)
+                mask = r < nc                                  # (K,)
+                choice, state = strat["select"](state, k_sel, t, act,
+                                                pids)
+                # processing noise keyed per global player id (prand),
+                # so the draw is invariant to how the K axis is sharded
+                z = jnp.exp(
+                    cfg.proc_sigma * prand.player_normal(k_noise, pids))
+                q_seen = q[choice]
+                proc = (q_seen + 1.0) * s_m[choice] * z
+                lat = rtt_t[kidx, choice] + proc
+                if batched_record:
+                    state = strat["record_feedback"](state, choice, lat,
+                                                     t, mask)
+                else:
+                    state = strat["record"](state, choice, lat, t, mask)
+                arr_r = jax.ops.segment_sum(
+                    mask.astype(jnp.float32), choice, num_segments=M)
+                # the ONE cross-player coupling: same-round requests
+                # from every LB land on the shared queues, so a
+                # player-sharded round psums its local (M,) arrivals
+                # before the drain (integer-valued f32 — the psum is
+                # exact, and the queue stays replicated across shards).
+                # `arrivals` keeps the shard-LOCAL sum: it feeds the
+                # accumulator's partial arrivals_m, reduced once after
+                # the scan.
+                arr_all = (arr_r if pshard is None
+                           else jax.lax.psum(arr_r, pshard.axis))
+                q = jnp.maximum(q + arr_all - served_per_round, 0.0)
+                return (state, q, arrivals + arr_r), (choice, lat, proc)
 
-        (state, q, arrivals), (ch_r, lat_r, proc_r) = jax.lax.scan(
-            round_body, (state, q, jnp.zeros((M,), jnp.float32)),
-            jnp.arange(C))
-        choices = ch_r.T                                       # (K, C)
-        lats = lat_r.T
-        procs = proc_r.T
-        if batched_record:
-            state = strat["record_rings"](state, choices, lats, t,
-                                          mask_all)
+            (state, q, arrivals), (ch_r, lat_r, proc_r) = jax.lax.scan(
+                round_body, (state, q, jnp.zeros((M,), jnp.float32)),
+                jnp.arange(C))
+            choices = ch_r.T                                   # (K, C)
+            lats = lat_r.T
+            procs = proc_r.T
+            if batched_record:
+                state = strat["record_rings"](state, choices, lats, t,
+                                              mask_all)
+            att_kc = mask_all.astype(jnp.int32)
+            dropped_kc = jnp.zeros_like(mask_all)
+            brk_open_step = None
+        else:
+            # --- resilient request lifecycle: 1 + R attempts, every
+            # retry re-routed, backed off, budgeted against tau, and
+            # fed back into the SAME per-round arrival psum (retry
+            # load is real load). Attempt 0 reuses the exact neutral
+            # key derivation; retry draws fold fresh salts off the
+            # round key. All attempts of a round observe the
+            # round-start queue (sub-round-resolution simplification;
+            # their arrivals hit the queue at the round boundary). ---
+            A = n_attempts
+            brk_open_step = (qb.breaker_is_open(brk, t) if brk_on
+                             else None)
+
+            def round_body(rc, r):
+                state, q, arrivals, brk_c = rc
+                k_r = jax.random.fold_in(k_step, r)
+                k_sel, k_noise = jax.random.split(k_r)
+                mask = r < nc                                  # (K,)
+                choice, state = strat["select"](state, k_sel, t, act,
+                                                pids)
+                if brk_on:
+                    # the bandit's pick stands unless its breaker is
+                    # open; the veto re-routes over the closed pool
+                    g_veto = prand.player_gumbel(
+                        jax.random.fold_in(k_r, 101), pids, M)
+                    choice = qb.breaker_veto(
+                        choice, brk_c, t, strat["weights"](state), act,
+                        g_veto, mask)
+                z = jnp.exp(
+                    cfg.proc_sigma * prand.player_normal(k_noise, pids))
+                proc = (q[choice] + 1.0) * s_m[choice] * z
+                lat = rtt_t[kidx, choice] + proc
+                timed_out = mask & (lat > cfg.attempt_timeout)
+                obs = jnp.where(timed_out, censor, lat)
+                # censored samples clip the proc sketch at the timeout
+                # (the client never observes past it)
+                proc_f = jnp.where(
+                    timed_out, jnp.minimum(proc, cfg.attempt_timeout),
+                    proc)
+                elapsed = jnp.where(
+                    mask, jnp.minimum(lat, cfg.attempt_timeout), 0.0)
+                if brk_on:
+                    brk_c = qb.breaker_update(
+                        brk_c, choice, timed_out, mask, t,
+                        cfg.breaker_threshold, cfg.breaker_cooldown)
+                feed = (strat["record_feedback"] if batched_record
+                        else strat["record"])
+                state = feed(state, choice, obs, t, mask)
+                arr = jax.ops.segment_sum(
+                    mask.astype(jnp.float32), choice, num_segments=M)
+                att_ch, att_obs, att_m = [choice], [obs], [mask]
+                completed = mask & ~timed_out
+                choice_f = choice
+                pending = timed_out
+                for a in range(1, A):
+                    p = pending
+                    backoff = cfg.retry_backoff * (2.0 ** (a - 1))
+                    if cfg.retry_deadline:
+                        # bounded policy: no retry that cannot finish
+                        # inside the request's QoS deadline
+                        p = p & (elapsed + backoff < cfg.tau)
+                    k_a = jax.random.fold_in(k_r, 1000 + a)
+                    k_pick, k_z = jax.random.split(k_a)
+                    g = prand.player_gumbel(k_pick, pids, M)
+                    open_now = (qb.breaker_is_open(brk_c, t) if brk_on
+                                else None)
+                    alt = qb.retry_pick(strat["weights"](state), act,
+                                        choice_f, open_now, g)
+                    choice_a = jnp.where(p, alt, choice_f)
+                    z_a = jnp.exp(cfg.proc_sigma
+                                  * prand.player_normal(k_z, pids))
+                    proc_a = (q[choice_a] + 1.0) * s_m[choice_a] * z_a
+                    lat_a = rtt_t[kidx, choice_a] + proc_a
+                    to_a = p & (lat_a > cfg.attempt_timeout)
+                    obs_a = jnp.where(to_a, censor, lat_a)
+                    elapsed = jnp.where(
+                        p,
+                        elapsed + backoff
+                        + jnp.minimum(lat_a, cfg.attempt_timeout),
+                        elapsed)
+                    if brk_on:
+                        brk_c = qb.breaker_update(
+                            brk_c, choice_a, to_a, p, t,
+                            cfg.breaker_threshold, cfg.breaker_cooldown)
+                    state = feed(state, choice_a, obs_a, t, p)
+                    arr = arr + jax.ops.segment_sum(
+                        p.astype(jnp.float32), choice_a, num_segments=M)
+                    att_ch.append(choice_a)
+                    att_obs.append(obs_a)
+                    att_m.append(p)
+                    choice_f = jnp.where(p, choice_a, choice_f)
+                    proc_f = jnp.where(
+                        to_a, jnp.minimum(proc_a, cfg.attempt_timeout),
+                        jnp.where(p, proc_a, proc_f))
+                    completed = completed | (p & ~to_a)
+                    pending = to_a
+
+                dropped = mask & ~completed
+                # client-perceived latency: total elapsed (attempt
+                # costs + backoffs) when the request completed, the
+                # censor sentinel (> tau => QoS miss) when it dropped
+                lat_out = jnp.where(completed, elapsed, censor)
+                att_n = sum(m.astype(jnp.int32) for m in att_m)
+                # still ONE psum per round: retries folded in above
+                arr_all = (arr if pshard is None
+                           else jax.lax.psum(arr, pshard.axis))
+                q = jnp.maximum(q + arr_all - served_per_round, 0.0)
+                ys = (choice_f, lat_out, proc_f, att_n, dropped,
+                      jnp.stack(att_ch), jnp.stack(att_obs),
+                      jnp.stack(att_m))
+                return (state, q, arrivals + arr, brk_c), ys
+
+            (state, q, arrivals, brk), ys_r = jax.lax.scan(
+                round_body,
+                (state, q, jnp.zeros((M,), jnp.float32), brk),
+                jnp.arange(C))
+            (chf_r, lat_r, proc_r, att_r, drop_r,
+             ach_r, aobs_r, am_r) = ys_r
+            choices = chf_r.T                 # (K, C) final-attempt arm
+            lats = lat_r.T
+            procs = proc_r.T
+            att_kc = att_r.T                  # (K, C) i32 attempts
+            dropped_kc = drop_r.T             # (K, C) bool
+            if batched_record:
+                # all C*A attempts land in the step's ONE fused ring
+                # scatter, columns in chronological (round-major,
+                # attempt-minor) order — record_rings_batch is generic
+                # in its column count
+                ch_all = jnp.transpose(ach_r, (2, 0, 1)).reshape(
+                    K, C * A)
+                obs_all = jnp.transpose(aobs_r, (2, 0, 1)).reshape(
+                    K, C * A)
+                m_all = jnp.transpose(am_r, (2, 0, 1)).reshape(K, C * A)
+                state = strat["record_rings"](state, ch_all, obs_all, t,
+                                              m_all)
+        # dropped requests carry the censor sentinel (> tau), so the
+        # shared reward rule scores them 0 without a special case
         rewards = (lats <= cfg.tau).astype(jnp.float32)
         issued = mask_all
 
@@ -591,18 +801,21 @@ def build_sim_parts(
                 rewards=rewards, issued=issued, choices=choices,
                 latency=lats, proc_lat=procs, arrivals=arrivals,
                 queue=q_start, weights=w_now, true_mu=mu_true, regret=reg,
-                eps=strat["eps"](state))
+                eps=strat["eps"](state), attempts=att_kc,
+                dropped=dropped_kc)
         else:
             acc = qm.update_accumulator(
                 acc, rewards=rewards, issued=issued, choices=choices,
                 procs=procs, arrivals=arrivals, regret=reg, mu=mu_true,
                 t_idx=t_idx, warmup_steps=warmup_steps, marks=marks,
                 ev_pre_steps=ev_pre_steps,
-                ev_bucket_steps=ev_bucket_steps)
+                ev_bucket_steps=ev_bucket_steps, attempts=att_kc,
+                dropped=dropped_kc, brk_open=brk_open_step)
             issf = issued.astype(jnp.float32)
             ys = StepSeries(succ=(rewards * issf).sum(),
-                            issued=issf.sum(), regret=reg.sum())
-        return (state, q, act, acc, groups, pids), ys
+                            issued=issf.sum(), regret=reg.sum(),
+                            attempts=att_kc.astype(jnp.float32).sum())
+        return (state, q, act, acc, groups, pids, brk), ys
 
     return init_fn, step_fn
 
@@ -864,9 +1077,13 @@ def _stream_specs(mesh, lead: tuple = ()):
             prev_mu=spec("players", None),
             steps_measured=spec(),                # replicated by design
             ev_succ=spec(None, None),             # psum-reduced
-            ev_n=spec(None, None)),               # psum-reduced
+            ev_n=spec(None, None),                # psum-reduced
+            att_k=spec("players"),
+            timeout_k=spec("players"),
+            drop_k=spec("players"),
+            open_km=spec("players", None)),
         series=StepSeries(succ=spec(None), issued=spec(None),
-                          regret=spec(None)))
+                          regret=spec(None), attempts=spec(None)))
     return in_specs, out_specs
 
 
@@ -1164,6 +1381,10 @@ def run_sim_stream(
     warmup_steps: int = 0,
     chunk_steps: int | None = None,
     mesh=None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    stop_at_step: int | None = None,
     **strategy_kw,
 ) -> StreamOutputs:
     """Streaming run: O(K·M) device memory, O(T) scalar series on host.
@@ -1180,6 +1401,19 @@ def run_sim_stream(
     (the player-sharded program); that path does not compose with
     ``chunk_steps`` yet — the sharded scan's memory is already O(K·M/D)
     + O(T) scalars, so chunking only matters for extreme horizons.
+
+    ``checkpoint_dir`` makes the chunked loop fault-tolerant: every
+    ``checkpoint_every`` chunks the donated carry plus the series
+    drained so far are committed atomically via
+    ``checkpoint.Checkpointer`` (snapshot on the caller thread, write
+    async). ``resume=True`` restarts from the latest checkpoint in the
+    directory — the per-step PRNG stream makes the resumed run equal
+    the uninterrupted one *exactly*, for any ``chunk_steps``, and an
+    empty directory degrades to a cold start. ``stop_at_step`` halts
+    the loop at a chunk boundary >= that step and returns the partial
+    result — the hook the kill/resume test (and any external
+    orchestrator draining a budget) uses. All three require
+    ``chunk_steps``.
     """
     K, M = rtt.shape
     T = cfg.num_steps
@@ -1195,6 +1429,10 @@ def run_sim_stream(
             mesh=mesh, **strategy_kw)
     drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
     if chunk_steps is None or chunk_steps >= T:
+        if checkpoint_dir is not None or stop_at_step is not None:
+            raise ValueError(
+                "checkpoint_dir/resume/stop_at_step need the chunked "
+                "loop: pass chunk_steps < num_steps")
         run = build_sim_fn(strategy_name, cfg, K, M, trace=False,
                            warmup_steps=warmup_steps, **strategy_kw)
         with _quiet_donation():
@@ -1203,11 +1441,44 @@ def run_sim_stream(
     init_fn, chunk_fn = build_sim_chunks(
         strategy_name, cfg, K, M, warmup_steps=warmup_steps, **strategy_kw)
     carry, keys = jax.jit(init_fn)(rtt, drv.active[0], key)
+
+    ckpt = None
+    start = 0
+    parts: list = []          # on-device chunk outputs not yet drained
+    done: StepSeries | None = None    # host-side series drained so far
+    if checkpoint_dir is not None:
+        from repro.checkpoint import Checkpointer
+        ckpt = Checkpointer(checkpoint_dir)
+        if resume and ckpt.latest_step() is not None:
+            # the carry from init_fn is only a structure template here:
+            # leaf shapes/dtypes come from the npz, so the restored
+            # series keeps its true (start,) length
+            template = {"carry": carry,
+                        "series": StepSeries(*(np.zeros(0, np.float32)
+                                               for _ in StepSeries._fields))}
+            restored, start = ckpt.restore(template)
+            carry = restored["carry"]
+            done = jax.device_get(restored["series"])
+
+    def drain() -> StepSeries | None:
+        """Fold pending device chunks into the host-side series."""
+        nonlocal parts, done
+        if parts:
+            host = jax.device_get(parts)
+            prev = [done] if done is not None else []
+            done = StepSeries(*(np.concatenate(
+                [np.asarray(getattr(p, f)) for p in prev + host])
+                for f in StepSeries._fields))
+            parts = []
+        return done
+
     # the carry aliases 1:1 to the chunk's output carry, so donation
     # reuses the state/accumulator buffers in place every chunk
     run_chunk = jax.jit(chunk_fn, donate_argnums=(1,))
-    parts = []
-    for lo in range(0, T, chunk_steps):
+    chunks_done = 0
+    for lo in range(start, T, chunk_steps):
+        if stop_at_step is not None and lo >= stop_at_step:
+            break
         hi = min(lo + chunk_steps, T)
         carry, ys = run_chunk(
             rtt, carry, jnp.arange(lo, hi), qs.slice_drivers(drv, lo, hi),
@@ -1215,8 +1486,13 @@ def run_sim_stream(
         parts.append(ys)    # on-device O(chunk) scalars; the loop only
         # depends on the donated carry, so dispatch runs ahead and the
         # single device_get below drains everything at once
-    parts = jax.device_get(parts)
-    series = StepSeries(*(np.concatenate([np.asarray(getattr(p, f))
-                                          for p in parts])
-                          for f in StepSeries._fields))
+        chunks_done += 1
+        if ckpt is not None and hi < T and chunks_done % checkpoint_every == 0:
+            # save() snapshots to numpy before returning, so the async
+            # write never races the next chunk's donation
+            ckpt.save(hi, {"carry": carry, "series": drain()},
+                      blocking=False)
+    series = drain()
+    if ckpt is not None:
+        ckpt.wait()
     return StreamOutputs(acc=carry[3], series=series)

@@ -339,6 +339,149 @@ def record_batch(
 
 
 # ---------------------------------------------------------------------------
+# Request-lifecycle resilience: circuit breakers + censored observations.
+#
+# The breaker sits BETWEEN the balancer and the wire (Envoy-style outlier
+# ejection): the bandit still owns selection, but an arm whose last
+# `threshold` attempts all timed out is ejected for `cooldown` seconds
+# and traffic re-routes over the remaining pool. After the cooldown the
+# arm is half-open: one probe request is admitted, and a single further
+# timeout re-trips the breaker while a success closes it fully. The
+# state factorizes over players — (K, M) arrays, no cross-player terms —
+# so it shards on the `players` mesh axis like the bandit state itself.
+# ---------------------------------------------------------------------------
+
+
+class BreakerState(NamedTuple):
+    """Per-(player, arm) circuit breaker state.
+
+    fails      (K, M) i32  consecutive timed-out attempts
+    open_until (K, M) f32  ejected until this sim time (NEG_INF = closed)
+    """
+
+    fails: jax.Array
+    open_until: jax.Array
+
+
+def breaker_init(num_players: int, num_arms: int) -> BreakerState:
+    return BreakerState(
+        fails=jnp.zeros((num_players, num_arms), jnp.int32),
+        open_until=jnp.full((num_players, num_arms), NEG_INF, jnp.float32))
+
+
+def breaker_is_open(brk: BreakerState, t: jax.Array) -> jax.Array:
+    """(K, M) bool: arm currently ejected for this player."""
+    return t < brk.open_until
+
+
+def breaker_update(
+    brk: BreakerState,
+    choice: jax.Array,      # (K,) arm each player attempted
+    timed_out: jax.Array,   # (K,) bool: the attempt exceeded its timeout
+    attempted: jax.Array,   # (K,) bool: player actually sent the attempt
+    t: jax.Array,
+    threshold: int,
+    cooldown: float,
+) -> BreakerState:
+    """Advance the breaker after one attempt per player.
+
+    A success fully closes the breaker (counter and ejection cleared); a
+    timeout increments the consecutive-failure counter and, at
+    `threshold`, opens the arm for `cooldown` seconds. The counter is
+    left at `threshold - 1` while open so the post-cooldown half-open
+    probe re-trips on a single failure.
+    """
+    K, M = brk.fails.shape
+    kidx = jnp.arange(K)
+    old_f = brk.fails[kidx, choice]
+    new_f = jnp.where(timed_out, old_f + 1, 0).astype(jnp.int32)
+    trip = attempted & (new_f >= threshold)
+    new_f = jnp.where(trip, threshold - 1, new_f)
+    old_ou = brk.open_until[kidx, choice]
+    new_ou = jnp.where(trip, t + cooldown,
+                       jnp.where(timed_out, old_ou, NEG_INF))
+    return BreakerState(
+        fails=brk.fails.at[kidx, choice].set(
+            jnp.where(attempted, new_f, old_f)),
+        open_until=brk.open_until.at[kidx, choice].set(
+            jnp.where(attempted, new_ou, old_ou)))
+
+
+def breaker_reset_arms(brk: BreakerState, changed: jax.Array) -> BreakerState:
+    """Clear breaker columns for arms whose liveness changed (Alg 3/4
+    placement events reset the bandit's per-arm data the same way)."""
+    row = changed[None, :]
+    return BreakerState(
+        fails=jnp.where(row, 0, brk.fails),
+        open_until=jnp.where(row, NEG_INF, brk.open_until))
+
+
+def masked_pick(weights: jax.Array, ok: jax.Array,
+                gumbel: jax.Array) -> jax.Array:
+    """(K,) weighted sample over the arms allowed by `ok` via the Gumbel
+    trick: argmax(log w + g) restricted to `ok`. Zero-weight allowed
+    arms keep a tiny floor so a pool whose weight mass is entirely
+    masked out still routes somewhere instead of an arbitrary arm 0."""
+    score = jnp.log(weights + 1e-30) + gumbel
+    return jnp.argmax(jnp.where(ok, score, NEG_INF), axis=-1)
+
+
+def breaker_veto(
+    choice: jax.Array,      # (K,) the bandit's pick
+    brk: BreakerState,
+    t: jax.Array,
+    weights: jax.Array,     # (K, M) current routing weights
+    active: jax.Array,      # (M,) instance liveness
+    gumbel: jax.Array,      # (K, M) pre-drawn Gumbel noise
+    mask: jax.Array,        # (K,) bool: player issues a request this round
+) -> jax.Array:
+    """Post-selection ejection mask: if the chosen arm is open, re-route
+    to a weighted pick over closed active arms. Fails open — when every
+    active arm is ejected the veto is waived entirely (shedding all
+    traffic would be strictly worse than probing an ejected arm)."""
+    K, M = weights.shape
+    open_now = breaker_is_open(brk, t)
+    ok = active[None, :] & ~open_now
+    ok = jnp.where(ok.any(-1, keepdims=True), ok, active[None, :])
+    alt = masked_pick(weights, ok, gumbel)
+    blocked = mask & open_now[jnp.arange(K), choice]
+    return jnp.where(blocked, alt, choice)
+
+
+def retry_pick(
+    weights: jax.Array,          # (K, M)
+    active: jax.Array,           # (M,)
+    avoid: jax.Array,            # (K,) the arm that just timed out
+    open_now: jax.Array | None,  # (K, M) bool, or None when breakers off
+    gumbel: jax.Array,           # (K, M)
+) -> jax.Array:
+    """Re-selection for a retry attempt: weighted pick over active,
+    breaker-closed arms excluding the arm that just failed. Degrades
+    gracefully rather than refusing to route: if nothing is closed the
+    breaker constraint is dropped, and if the failed arm is the only
+    active one it is retried."""
+    K, M = weights.shape
+    ok = active[None, :] & (jnp.arange(M)[None, :] != avoid[:, None])
+    if open_now is not None:
+        okb = ok & ~open_now
+        ok = jnp.where(okb.any(-1, keepdims=True), okb, ok)
+    ok = jnp.where(ok.any(-1, keepdims=True), ok, active[None, :])
+    return masked_pick(weights, ok, gumbel)
+
+
+def censored_latency(attempt_timeout: float, tau: float) -> float:
+    """Imputed observation for a timed-out (right-censored) attempt.
+
+    The client only learns `latency > attempt_timeout`; we record the
+    lower bound pushed strictly past the QoS threshold so the attempt
+    counts as a miss and the KDE sees a pessimistic point mass above
+    tau. This biases mu_hat for slow arms DOWN — the safe direction for
+    a load balancer (an arm that times out looks worse than it might
+    be, never better). Static Python float: both knobs are config."""
+    return max(float(attempt_timeout), float(tau)) + float(tau)
+
+
+# ---------------------------------------------------------------------------
 # Maintenance (Alg 1): pools, KDE estimates, scores, weights, eps schedule.
 # ---------------------------------------------------------------------------
 

@@ -9,7 +9,8 @@ Failure model: a pod (or a data-axis slice) disappears. The runtime
     restores from the last checkpoint via Checkpointer.restore with the
     new shardings),
  3. tells the router (paper Alg 4) so traffic stops flowing to the dead
-    replicas immediately, and
+    replicas immediately — ``serving.QEdgeRouter.mesh_resized`` feeds
+    ``surviving_replicas`` into the router's active mask — and
  4. resumes; when capacity returns, Alg 3 ramps it back gradually.
 """
 from __future__ import annotations

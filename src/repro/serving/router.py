@@ -86,6 +86,16 @@ class QEdgeRouter:
         act[idx] = True
         self.replicas_changed(act)
 
+    def mesh_resized(self, surviving_rows: int):
+        """Elastic re-mesh hook (fault/elastic.py step 3): after the
+        runtime shrinks the data axis, mask every replica beyond the
+        surviving rows so no microbatch routes to a dead replica group
+        — Alg 4 immediately, not after the error-count cooldown trips.
+        Growing back to ``M`` rows re-enters replicas through the Alg 3
+        zero-weight ramp."""
+        from repro.fault.elastic import surviving_replicas
+        self.replicas_changed(surviving_replicas(self.M, surviving_rows))
+
     # -- introspection -------------------------------------------------
     @property
     def weights(self) -> np.ndarray:

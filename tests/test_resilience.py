@@ -1,0 +1,272 @@
+"""Request-lifecycle resilience: timeouts, censored feedback, bounded
+retries, circuit breakers — and the two invariants the layer ships
+under: the neutral config traces the byte-identical pre-resilience
+program (checked against a committed HEAD reference), and a
+checkpointed-and-resumed chunked run reproduces the uninterrupted run
+exactly.
+
+The committed golden `tests/data/neutral_stream_ref.npz` holds the
+full streaming accumulator + per-step series of the pre-resilience
+engine (all three strategies, K=10 M=4, horizon 12 s). Bit-identity is
+structural — `attempt_timeout == 0` is a Python-level static, so the
+neutral trace never touches resilience code — but this test pins it
+against drift.
+"""
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.continuum import SimConfig, make_topology, run_sim, run_sim_stream
+from repro.continuum.metrics import (breaker_open_fraction_stream,
+                                     goodput_offered_series,
+                                     resilience_stats, resilience_stats_stream)
+from repro.core import bandit as qb
+
+K, M = 10, 4
+CFG = SimConfig(horizon=12.0)
+WARM = 30
+STRATEGIES = (("qedgeproxy", {}), ("proxy_mity", dict(alpha=0.9)),
+              ("dec_sarsa", {}))
+REF = os.path.join(os.path.dirname(__file__), "data",
+                   "neutral_stream_ref.npz")
+# deadline-bounded policy at this testbed's scale (timeout between the
+# healthy tail and tau, budget left for one in-deadline retry)
+RES = dict(attempt_timeout=0.055, max_retries=2, retry_backoff=0.002,
+           breaker_threshold=4, breaker_cooldown=1.0)
+
+
+def _inputs():
+    rtt = make_topology(jax.random.PRNGKey(2), K, M).lb_instance_rtt()
+    return rtt, jax.random.PRNGKey(5)
+
+
+# -- invariant 1: neutral config is the HEAD engine, bit for bit ------
+
+@pytest.mark.parametrize("strat,kw", STRATEGIES,
+                         ids=[s for s, _ in STRATEGIES])
+def test_neutral_bit_identity_vs_head(strat, kw):
+    rtt, key = _inputs()
+    ref = np.load(REF)
+    out = run_sim_stream(strat, rtt, CFG, key, warmup_steps=WARM, **kw)
+    for f in out.acc._fields:
+        got = np.asarray(getattr(out.acc, f))
+        if f"{strat}.acc.{f}" in ref.files:
+            np.testing.assert_array_equal(got, ref[f"{strat}.acc.{f}"],
+                                          err_msg=f"{strat} acc.{f}")
+    for f in out.series._fields:
+        got = np.asarray(getattr(out.series, f))
+        if f"{strat}.series.{f}" in ref.files:
+            np.testing.assert_array_equal(got, ref[f"{strat}.series.{f}"],
+                                          err_msg=f"{strat} series.{f}")
+    # the new counters exist but are inert in the neutral program
+    np.testing.assert_array_equal(np.asarray(out.acc.att_k),
+                                  np.asarray(out.acc.n_kc).sum(-1))
+    assert float(np.asarray(out.acc.timeout_k).sum()) == 0.0
+    assert float(np.asarray(out.acc.drop_k).sum()) == 0.0
+    assert float(np.asarray(out.acc.open_km).sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(out.series.attempts),
+                                  np.asarray(out.series.issued))
+
+
+def test_resilience_knobs_need_timeout():
+    rtt, key = _inputs()
+    with pytest.raises(ValueError, match="attempt_timeout"):
+        run_sim("qedgeproxy", rtt,
+                dataclasses.replace(CFG, max_retries=2), key)
+
+
+# -- timeout / retry / drop semantics ---------------------------------
+
+def test_unreachable_timeout_matches_neutral_trace():
+    """With a timeout no latency ever crosses, the resilient program
+    must reproduce the neutral trace value-for-value: attempt 0 uses
+    the exact neutral PRNG derivation and retries never fire."""
+    rtt, key = _inputs()
+    ref = run_sim("qedgeproxy", rtt, CFG, key)
+    got = run_sim("qedgeproxy", rtt,
+                  dataclasses.replace(CFG, attempt_timeout=10.0,
+                                      max_retries=2), key)
+    iss = np.asarray(ref.issued)
+    np.testing.assert_array_equal(np.asarray(got.issued), iss)
+    np.testing.assert_array_equal(np.asarray(got.choices)[iss],
+                                  np.asarray(ref.choices)[iss])
+    # unissued slots are meaningless (neutral: raw noise draw,
+    # resilient: censor sentinel) — compare where a request exists
+    np.testing.assert_array_equal(np.asarray(got.latency)[iss],
+                                  np.asarray(ref.latency)[iss])
+    np.testing.assert_array_equal(np.asarray(got.rewards)[iss],
+                                  np.asarray(ref.rewards)[iss])
+    np.testing.assert_array_equal(np.asarray(got.attempts),
+                                  iss.astype(np.int32))
+    assert not np.asarray(got.dropped).any()
+
+
+def test_censored_feedback_semantics():
+    """A timed-out attempt yields only a lower bound: the trace records
+    the static censor sentinel (> tau, so reward 0 with no special
+    case) and the KDE sees a pessimistic point mass past the deadline."""
+    censor = qb.censored_latency(0.02, CFG.tau)
+    assert censor > CFG.tau and censor >= 0.02 + CFG.tau
+    rtt, key = _inputs()
+    # timeout below the minimum RTT: every attempt times out, every
+    # request exhausts its budget and drops
+    out = run_sim("qedgeproxy", rtt,
+                  dataclasses.replace(CFG, attempt_timeout=1e-4,
+                                      max_retries=1), key)
+    iss = np.asarray(out.issued)
+    assert np.asarray(out.dropped)[iss].all()
+    np.testing.assert_allclose(np.asarray(out.latency)[iss],
+                               qb.censored_latency(1e-4, CFG.tau))
+    assert np.asarray(out.rewards)[iss].max() == 0.0
+    st = resilience_stats(out, WARM)
+    assert st["timeout_rate"] == pytest.approx(1.0)
+    assert st["drop_rate"] == pytest.approx(1.0)
+
+
+def test_censored_kde_update_is_pessimistic():
+    """Recording the censor sentinel drives the arm's P(lat <= tau)
+    estimate down — the safe direction for a lower bound."""
+    params = qb.BanditParams(tau=CFG.tau)
+    state = qb.init_state(1, 2, params, key=jax.random.PRNGKey(0))
+    censor = jnp.float32(qb.censored_latency(0.055, params.tau))
+    good = jnp.float32(0.01)
+    for i in range(8):
+        t = jnp.float32(0.1 * i)
+        state = qb.record(state, params, jnp.zeros((1,), jnp.int32),
+                          censor[None], t, jnp.ones((1,), bool))
+        state = qb.record(state, params, jnp.ones((1,), jnp.int32),
+                          good[None], t, jnp.ones((1,), bool))
+    state = qb.maintenance(state, params, jnp.zeros((1, 2), jnp.float32),
+                           jnp.float32(1.0))
+    mu = np.asarray(state.mu_hat)[0]
+    assert mu[0] < 0.2 < 0.8 < mu[1], mu
+
+
+def test_bounded_vs_naive_amplification():
+    """On an overloaded fleet the deadline budget caps amplification;
+    the naive policy (no budget) multiplies offered load."""
+    rtt, key = _inputs()
+    slow = dataclasses.replace(CFG, service_time=0.012)
+    bounded = run_sim_stream(
+        "qedgeproxy", rtt, dataclasses.replace(slow, **RES), key,
+        warmup_steps=WARM)
+    naive = run_sim_stream(
+        "qedgeproxy", rtt,
+        dataclasses.replace(slow, attempt_timeout=0.055, max_retries=5,
+                            retry_deadline=False), key,
+        warmup_steps=WARM)
+    sb = resilience_stats_stream(bounded.acc)
+    sn = resilience_stats_stream(naive.acc)
+    assert sb["requests"] == sn["requests"]
+    assert sb["retry_rate"] <= 1.0 + 1e-6          # deadline-capped
+    assert sn["retry_rate"] > 2 * sb["retry_rate"]  # amplification
+    good, offered = goodput_offered_series(naive.series, CFG.dt, 10)
+    assert (offered >= good - 1e-6).all()
+
+
+def test_stream_trace_parity_resilient():
+    rtt, key = _inputs()
+    cfg = dataclasses.replace(CFG, **RES)
+    tr = run_sim("qedgeproxy", rtt, cfg, key)
+    st = run_sim_stream("qedgeproxy", rtt, cfg, key, warmup_steps=WARM)
+    a = resilience_stats(tr, WARM)
+    b = resilience_stats_stream(st.acc)
+    for k in a:
+        assert a[k] == pytest.approx(b[k], rel=1e-5, abs=1e-6), k
+    frac = breaker_open_fraction_stream(st.acc)
+    assert frac.shape == (K, M) and float(frac.max()) <= 1.0
+
+
+# -- circuit breaker unit behaviour -----------------------------------
+
+def test_breaker_state_machine():
+    thr, cd = 3, 2.0
+    brk = qb.breaker_init(1, 2)
+    choice = jnp.zeros((1,), jnp.int32)
+    yes = jnp.ones((1,), bool)
+    t0 = jnp.float32(1.0)
+    for _ in range(thr - 1):
+        brk = qb.breaker_update(brk, choice, yes, yes, t0, thr, cd)
+    assert not bool(qb.breaker_is_open(brk, t0)[0, 0])
+    brk = qb.breaker_update(brk, choice, yes, yes, t0, thr, cd)   # trips
+    assert bool(qb.breaker_is_open(brk, t0)[0, 0])
+    assert not bool(qb.breaker_is_open(brk, t0 + cd + 1e-3)[0, 0])
+    # half-open: one more failure re-trips immediately
+    brk = qb.breaker_update(brk, choice, yes, yes, t0 + cd + 0.1, thr, cd)
+    assert bool(qb.breaker_is_open(brk, t0 + cd + 0.2)[0, 0])
+    # a success fully closes and resets the strike count
+    brk = qb.breaker_update(brk, choice, jnp.zeros((1,), bool), yes,
+                            t0 + 2 * cd + 0.2, thr, cd)
+    assert not bool(qb.breaker_is_open(brk, t0 + 2 * cd + 0.3)[0, 0])
+    assert int(np.asarray(brk.fails)[0, 0]) == 0
+    # untouched arm never moved
+    assert int(np.asarray(brk.fails)[0, 1]) == 0
+
+
+def test_breaker_veto_and_retry_pick():
+    w = jnp.array([[0.9, 0.1, 0.0]])
+    active = jnp.array([True, True, True])
+    g = jnp.zeros((1, 3))
+    brk = qb.breaker_init(1, 3)
+    open_arm0 = qb.BreakerState(
+        fails=brk.fails, open_until=brk.open_until.at[:, 0].set(jnp.inf))
+    t = jnp.float32(0.0)
+    # veto re-routes an open choice to the best closed arm
+    ch = qb.breaker_veto(jnp.zeros((1,), jnp.int32), open_arm0, t, w,
+                         active, g, jnp.ones((1,), bool))
+    assert int(ch[0]) == 1
+    # fail-open: every active arm ejected -> keep the original choice
+    all_open = qb.BreakerState(fails=brk.fails,
+                               open_until=jnp.full((1, 3), jnp.inf))
+    ch = qb.breaker_veto(jnp.zeros((1,), jnp.int32), all_open, t, w,
+                         active, g, jnp.ones((1,), bool))
+    assert int(ch[0]) == 0
+    # retry never lands on the arm that just timed out
+    open_now = qb.breaker_is_open(open_arm0, t)
+    alt = qb.retry_pick(w, active, jnp.ones((1,), jnp.int32), open_now, g)
+    assert int(alt[0]) == 2          # arm 0 open, arm 1 just failed
+    # ...unless there is literally nowhere else to go
+    alt = qb.retry_pick(w, jnp.array([False, True, False]),
+                        jnp.ones((1,), jnp.int32),
+                        qb.breaker_is_open(brk, t), g)
+    assert int(alt[0]) == 1
+
+
+# -- invariant 2: killed-and-resumed == uninterrupted, exactly --------
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Chunked run checkpointed every chunk, killed mid-horizon via
+    stop_at_step, resumed from disk: every accumulator and series field
+    equals the uninterrupted run bit-for-bit — including the breaker
+    state in the carry, and under a DIFFERENT resumed chunk length."""
+    rtt, key = _inputs()
+    cfg = dataclasses.replace(CFG, **RES)
+    d = str(tmp_path / "ck")
+    full = run_sim_stream("qedgeproxy", rtt, cfg, key, warmup_steps=WARM,
+                          chunk_steps=40)
+    part = run_sim_stream("qedgeproxy", rtt, cfg, key, warmup_steps=WARM,
+                          chunk_steps=40, checkpoint_dir=d,
+                          stop_at_step=80)
+    assert len(np.asarray(part.series.succ)) == 80
+    res = run_sim_stream("qedgeproxy", rtt, cfg, key, warmup_steps=WARM,
+                         chunk_steps=25, checkpoint_dir=d, resume=True)
+    for f in full.acc._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.acc, f)),
+            np.asarray(getattr(full.acc, f)), err_msg=f"acc.{f}")
+    for f in full.series._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.series, f)),
+            np.asarray(getattr(full.series, f)), err_msg=f"series.{f}")
+    shutil.rmtree(d)
+
+
+def test_checkpoint_needs_chunked_loop():
+    rtt, key = _inputs()
+    with pytest.raises(ValueError, match="chunk"):
+        run_sim_stream("qedgeproxy", rtt, CFG, key, checkpoint_dir="/tmp/x")

@@ -67,6 +67,24 @@ def test_router_learns_to_avoid_slow_replica():
     assert slow_hits / total < 0.15, (slow_hits, total)
 
 
+def test_router_masks_dead_replicas_on_mesh_shrink():
+    """elastic.py step 3: a data-axis shrink reaches the router at
+    once via surviving_replicas — no cooldown trip needed."""
+    from repro.fault.elastic import surviving_replicas
+    router = QEdgeRouter(3, 4, BanditParams(), seed=2)
+    router.mesh_resized(2)          # lost the last two replica groups
+    np.testing.assert_array_equal(np.asarray(router.state.active),
+                                  surviving_replicas(4, 2))
+    w = router.weights
+    assert np.abs(w[:, 2:]).max() == 0.0
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    for _ in range(20):             # no microbatch routes to the dead rows
+        assert np.asarray(router.route()).max() < 2
+    router.mesh_resized(4)          # capacity returns: Alg 3 ramp
+    assert bool(np.asarray(router.state.active).all())
+    assert np.abs(router.weights[:, 2:]).max() == 0.0
+
+
 def test_router_failover_and_rejoin():
     router = QEdgeRouter(2, 3, BanditParams(), seed=1)
     router.replica_failed(2)

@@ -163,6 +163,64 @@ def test_player_sharded_matches_unsharded_8dev():
 
 
 @pytest.mark.slow
+def test_resilient_sharded_matches_unsharded_8dev():
+    """Breaker/retry state shards on the players axis with no new
+    collectives: the per-player attempt/timeout/drop counters and the
+    (K, M) breaker-open occupancy are exact at 8/2/1 shards, on all
+    three strategies, under a scenario that actually trips timeouts."""
+    out = run_sub("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, compile_scenario,
+                                     get_library, make_topology,
+                                     run_sim_players, run_sim_stream)
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, WARM = 16, 4, 10
+        cfg = SimConfig(horizon=4.0, attempt_timeout=0.055, max_retries=2,
+                        retry_backoff=0.002, breaker_threshold=4,
+                        breaker_cooldown=1.0)
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        lib = get_library(cfg.horizon, K, M)
+        drv = compile_scenario(lib["hetero_slowdown"], cfg,
+                               jax.random.PRNGKey(3))
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n",
+                  "att_k", "timeout_k", "drop_k", "open_km"}
+        for strat, kw in (("qedgeproxy", {}), ("dec_sarsa", {}),
+                          ("proxy_mity", dict(alpha=0.9))):
+            ref = run_sim_stream(strat, rtt, cfg, key, drivers=drv,
+                                 warmup_steps=WARM, **kw)
+            assert float(np.asarray(ref.acc.timeout_k).sum()) > 0, \\
+                "scenario must trip timeouts for this test to bite"
+            for D in (8, 2, 1):
+                mesh = make_continuum_mesh(
+                    players=D, devices=jax.devices()[:D])
+                got = run_sim_players(
+                    strat, rtt, cfg, key, drivers=drv,
+                    warmup_steps=WARM, mesh=mesh, **kw)
+                for name in ref.acc._fields:
+                    a = np.asarray(getattr(ref.acc, name))
+                    b = np.asarray(getattr(got.acc, name))
+                    if name in COUNTS:
+                        np.testing.assert_array_equal(
+                            b, a, err_msg=f"{strat} D{D} {name}")
+                    else:
+                        np.testing.assert_allclose(
+                            b, a, rtol=1e-5, atol=1e-5,
+                            err_msg=f"{strat} D{D} {name}")
+                np.testing.assert_array_equal(
+                    np.asarray(got.series.attempts),
+                    np.asarray(ref.series.attempts),
+                    err_msg=f"{strat} D{D} series.attempts")
+            print(strat, "resilient parity ok")
+        print("OK resilient parity")
+    """)
+    assert "OK resilient parity" in out
+
+
+@pytest.mark.slow
 def test_2d_grid_composition_matches_vmap_8dev():
     """The composed 2-D (data, players) grid: scenario-diverse lanes
     over `data`, every lane's K players over `players`, against the

@@ -243,3 +243,62 @@ def test_no_marks_means_empty_event_stats(qep):
     _, stream = qep
     assert float(np.abs(np.asarray(stream.acc.ev_n)).sum()) == 0.0
     assert event_recovery(stream.acc, CFG.ev_bucket) == []
+
+
+# ---------------------------------------------------------------------------
+# Resilience-layer parity: the attempt/timeout/drop counters and the
+# breaker-state carry must stream, and must survive chunk boundaries
+# (the breaker joins the donated carry) exactly like every other field.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def resilient(rtt):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, attempt_timeout=0.055, max_retries=2,
+                              retry_backoff=0.002, breaker_threshold=4,
+                              breaker_cooldown=1.0)
+    scn = get_library(CFG.horizon, K, M)["everything"]
+    drv = compile_scenario(scn, cfg, jax.random.PRNGKey(9))
+    trace = run_sim("qedgeproxy", rtt, cfg, jax.random.PRNGKey(5),
+                    drivers=drv)
+    stream = run_sim_stream("qedgeproxy", rtt, cfg, jax.random.PRNGKey(5),
+                            drivers=drv, warmup_steps=WARM)
+    return cfg, drv, trace, stream
+
+
+def test_resilient_stream_matches_trace(resilient):
+    from repro.continuum.metrics import (resilience_stats,
+                                         resilience_stats_stream)
+    cfg, _, trace, stream = resilient
+    att = np.asarray(trace.attempts)[WARM:]
+    drop = np.asarray(trace.dropped)[WARM:]
+    iss = np.asarray(trace.issued)[WARM:]
+    np.testing.assert_allclose(np.asarray(stream.acc.att_k),
+                               att.sum((0, 2)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stream.acc.drop_k),
+                               drop.sum((0, 2)), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(stream.acc.timeout_k),
+        (att - (iss & ~drop)).sum((0, 2)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stream.series.attempts),
+                               np.asarray(trace.attempts).sum((1, 2)),
+                               atol=1e-5)
+    a = resilience_stats(trace, WARM)
+    b = resilience_stats_stream(stream.acc)
+    for k in a:
+        assert a[k] == pytest.approx(b[k], rel=1e-5, abs=1e-6), k
+    # QoS parity holds under censoring too (drops carry the sentinel)
+    assert client_qos_satisfaction_stream(stream.acc, cfg.rho) == \
+        client_qos_satisfaction(trace, cfg.rho, WARM)
+
+
+def test_resilient_chunked_matches(rtt, resilient):
+    cfg, drv, _, full = resilient
+    chunked = run_sim_stream("qedgeproxy", rtt, cfg, jax.random.PRNGKey(5),
+                             drivers=drv, warmup_steps=WARM, chunk_steps=64)
+    for name, a, b in zip(full.acc._fields, full.acc, chunked.acc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"acc field {name}")
+    for name, a, b in zip(full.series._fields, full.series, chunked.series):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"series field {name}")
