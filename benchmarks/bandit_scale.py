@@ -23,6 +23,11 @@ variant:
                      the ``resilience_overhead`` ratio per M=10 cell
                      prices the unrolled attempt loop, and the smoke
                      gate holds it to the same steps/s floor.
+  * ``controlled`` — the resilient cell plus the closed-loop control
+                     plane (reactive autoscaler + AIMD admission +
+                     capacity migration in the scan carry): the
+                     ``control_overhead`` ratio prices the policy
+                     state machine, gated on the same smoke floor.
 
 Two extra cells tell the memory story end to end:
 
@@ -130,13 +135,32 @@ RESILIENT_KNOBS = dict(attempt_timeout=0.055, max_retries=2,
                        breaker_cooldown=1.0)
 
 
+def _controlled_knobs():
+    # the control-overhead row: resilient cell + the full closed-loop
+    # control plane (reactive autoscaler over a 2-instance standby
+    # slice, AIMD admission, 2-region capacity migration), so the
+    # controller's in-carry state machine pays its per-step cost in
+    # the open
+    from repro.continuum import ControlConfig
+    return dict(RESILIENT_KNOBS,
+                control=ControlConfig(managed=2, warmup=1.0,
+                                      up_queue=2.0, down_queue=0.5,
+                                      hold=0.4, action_cooldown=2.0,
+                                      admit=True, target_queue=3.0,
+                                      regions=2))
+
+
 def _lower_cell(K, M, horizon, variant):
-    cfg = SimConfig(horizon=horizon,
-                    **(RESILIENT_KNOBS if variant == "resilient" else {}))
+    knobs = {}
+    if variant == "resilient":
+        knobs = RESILIENT_KNOBS
+    elif variant == "controlled":
+        knobs = _controlled_knobs()
+    cfg = SimConfig(horizon=horizon, **knobs)
     args = _cell_inputs(K, M, cfg)
     run = jax.jit(build_sim_fn(
         "qedgeproxy", cfg, K, M, fused=variant != "sequential",
-        trace=variant not in ("stream", "resilient")))
+        trace=variant not in ("stream", "resilient", "controlled")))
     return run.lower(*args), args, cfg.num_steps
 
 
@@ -363,6 +387,10 @@ def bandit_scale():
                 cell["resilience_overhead"] = (
                     cell["resilient"]["us_per_step"]
                     / cell["stream"]["us_per_step"])
+                cell["controlled"] = _measure(K, M, horizon, "controlled")
+                cell["control_overhead"] = (
+                    cell["controlled"]["us_per_step"]
+                    / cell["resilient"]["us_per_step"])
             if (K, M) in TRACE_REF_CELLS or common.SMOKE:
                 cell["trace"] = _measure(K, M, horizon, "trace")
             if (K, M) in SEQ_REF_CELLS or common.SMOKE:
@@ -442,6 +470,14 @@ def bandit_scale():
                      if isinstance(v, dict) and "resilient" in v
                      and v["resilient"]["steps_per_s"]
                      < SMOKE_FLOOR_STEPS_PER_S})
+        # the closed-loop control carry holds the same floor: a
+        # regression here means the controller stopped fusing into the
+        # scan (or sneaked in an extra collective)
+        slow.update({f"{k}_controlled": v["controlled"]["steps_per_s"]
+                     for k, v in payload.items()
+                     if isinstance(v, dict) and "controlled" in v
+                     and v["controlled"]["steps_per_s"]
+                     < SMOKE_FLOOR_STEPS_PER_S})
         if chunked["steps_per_s"] < SMOKE_FLOOR_STEPS_PER_S:
             slow["chunked"] = chunked["steps_per_s"]
         for name, cell in grid_cells.items():
@@ -476,6 +512,10 @@ def bandit_scale():
         f"{k}:res_x{v['resilience_overhead']:.2f}"
         for k, v in payload.items()
         if isinstance(v, dict) and "resilience_overhead" in v)
+    derived += " " + " ".join(
+        f"{k}:ctl_x{v['control_overhead']:.2f}"
+        for k, v in payload.items()
+        if isinstance(v, dict) and "control_overhead" in v)
     derived += f" compile_wall={compile_wall:.1f}s"
     mem_key = f"mem_K{MEM_CELL[0]}_M{MEM_CELL[1]}"
     if mem_key in payload:

@@ -19,21 +19,40 @@ at the relaxed tau=150 ms QoS class that leaves an in-deadline retry
 window (EXPERIMENTS.md documents why the paper's tau=80 ms admits
 none). Policies change `SimConfig` statics, so each variant is its
 own compiled grid over the scenario lanes.
+
+The ``closed_loop`` lane is the controller x scenario grid: the same
+overload probes (plus `sustained_overload`, the open-loop-unwinnable
+regime) on a fleet widened by a parked standby pool
+(`with_standby`), swept over control policies — statically parked
+(the open-loop floor), fast/slow/narrow-hysteresis reactive
+autoscalers, admission shedding, both combined, capacity migration,
+and a pre-warmed fleet (the capacity ceiling). All rows run the
+PR 6 deadline-bounded resilient request lifecycle at the paper's
+tau=80 ms — the QoS class where EXPERIMENTS.md shows retries have no
+deadline budget to rescue anything — so the lane answers whether
+*closed-loop control* (capacity, shedding) restores the rescue
+window that scheduling + retries alone cannot. Each cell records
+event-recovery depth/time plus the thrashing readouts
+(scale actions per 1k steps, admission-drop fraction, per-tenant QoS
+spread) from the controller counters.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, strategy_name, timed
-from repro.continuum import (breaker_open_fraction_stream, build_sim_grid_fn,
+from repro.continuum import (ControlConfig, breaker_open_fraction_stream,
+                             build_sim_grid_fn,
                              client_qos_satisfaction_stream, compile_scenario,
-                             event_recovery, get_library,
-                             jain_fairness_stream, make_topology,
-                             resilience_stats_stream, stack_drivers)
+                             control_stats_stream, event_recovery,
+                             get_library, jain_fairness_stream, make_topology,
+                             per_tenant_qos_spread, resilience_stats_stream,
+                             stack_drivers, with_standby)
 
 # contrast pair: the adaptive balancer vs the static-proximity baseline
 SUITE_STRATEGIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
@@ -60,6 +79,46 @@ DEGRADE_POLICIES = (
                    breaker_cooldown=1.0)),
 )
 DEGRADE_TAU = 0.150
+
+# closed-loop lane: controller x scenario grid at the paper's tau=80 ms.
+# The fleet is the base M instances + CONTROL_STANDBY parked spares
+# (with_standby appends them LAST, exactly where ControlConfig.managed
+# points); every policy row runs the PR 6 deadline-bounded resilient
+# request lifecycle so the only delta across rows is the control plane.
+CONTROL_SCENARIOS = ("retry_storm", "metastable_overload",
+                     "sustained_overload", "surge", "cascade_failure")
+SMOKE_CONTROL_SCENARIOS = ("retry_storm", "metastable_overload")
+CONTROL_STANDBY = 4
+CONTROL_RES = dict(attempt_timeout=0.055, max_retries=2,
+                   retry_backoff=0.002, breaker_threshold=4,
+                   breaker_cooldown=1.0)
+# reaction-time x hysteresis sweep around one autoscaler shape
+_AUTOSCALE = dict(managed=CONTROL_STANDBY, warmup=1.0, up_queue=2.0,
+                  down_queue=0.5, hold=0.4, action_cooldown=2.0, batch=2)
+# a standby pool nothing ever spawns: the open-loop floor at identical
+# program shape (up_queue=inf never fires, down_queue=-1 never fires)
+_PARKED = dict(managed=CONTROL_STANDBY, up_queue=math.inf,
+               down_queue=-1.0)
+CONTROL_POLICIES = (
+    ("static", ControlConfig(**_PARKED)),
+    ("autoscale_fast", ControlConfig(**_AUTOSCALE)),
+    ("autoscale_slow", ControlConfig(**{**_AUTOSCALE, "warmup": 4.0,
+                                        "hold": 2.0,
+                                        "action_cooldown": 10.0,
+                                        "batch": 1})),
+    # thresholds nearly touching + short dwell: the thrash probe the
+    # scale-actions/1k-steps column exists for
+    ("autoscale_narrow", ControlConfig(**{**_AUTOSCALE, "up_queue": 1.2,
+                                          "down_queue": 1.0, "hold": 0.2,
+                                          "action_cooldown": 1.0})),
+    ("admit", ControlConfig(**_PARKED, admit=True, target_queue=1.5)),
+    ("autoscale_admit", ControlConfig(**_AUTOSCALE, admit=True,
+                                      target_queue=1.5)),
+    ("migrate", ControlConfig(**_PARKED, regions=2)),
+    # every instance (standby included) live from t=0 with no
+    # controller at all: the capacity ceiling closed loops chase
+    ("prewarmed", None),
+)
 
 _cache = common.register_cache({})
 
@@ -169,6 +228,86 @@ def _degradation_payload():
     return out
 
 
+_control_cache = common.register_cache({})
+
+
+def get_control_suite():
+    """{(scenario, policy): StreamOutputs} for the controller grid.
+
+    One compiled grid per control policy (`ControlConfig` is a
+    `SimConfig` static), scenario lanes stacked like the other suites;
+    shared topology/key/driver streams over the standby-widened fleet
+    so the ONLY difference between policy rows is the control plane.
+    """
+    if _control_cache:
+        return _control_cache
+    K, M = common.N_LBS, common.N_INSTANCES
+    M_tot = M + CONTROL_STANDBY
+    names = list(SMOKE_CONTROL_SCENARIOS if common.SMOKE
+                 else CONTROL_SCENARIOS)
+    lib = get_library(common.CFG.horizon, K, M)
+    topo = make_topology(jax.random.PRNGKey(1), K, M_tot)
+    rtt = topo.lb_instance_rtt()
+    rtts = jnp.broadcast_to(rtt[None], (len(names),) + rtt.shape)
+    keys = jnp.broadcast_to(jax.random.PRNGKey(11)[None],
+                            (len(names), 2))
+    base = dataclasses.replace(common.CFG, **CONTROL_RES)
+    # the schedules never depend on the control knobs: one compile of
+    # the standby-widened drivers serves every policy row
+    drivers = stack_drivers(
+        [compile_scenario(with_standby(lib[n], CONTROL_STANDBY), base,
+                          jax.random.PRNGKey(700 + i))
+         for i, n in enumerate(names)])
+
+    lowered, mesh = [], None
+    for label, ctl in CONTROL_POLICIES:
+        cfg = dataclasses.replace(base, control=ctl)
+        run_grid, mesh = build_sim_grid_fn(
+            "qedgeproxy", cfg, K, M_tot, mesh=mesh,
+            warmup_steps=common.WARM)
+        lowered.append(jax.jit(run_grid).lower(rtts, drivers, keys))
+    for (label, _), exe in zip(CONTROL_POLICIES,
+                               common.compile_all(lowered)):
+        outs = exe(rtts, drivers, keys)
+        for i, name in enumerate(names):
+            _control_cache[(name, label)] = jax.tree.map(
+                lambda x: x[i], outs)
+    _control_cache["names"] = names
+    return _control_cache
+
+
+def _control_payload():
+    suite = get_control_suite()
+    out = {}
+    for name in suite["names"]:
+        row = {}
+        for label, _ in CONTROL_POLICIES:
+            o = suite[(name, label)]
+            rec = event_recovery(o.acc, common.CFG.ev_bucket)
+            spread = per_tenant_qos_spread(o.acc)
+            cell = {
+                "qos_sat_pct": client_qos_satisfaction_stream(
+                    o.acc, common.CFG.rho),
+                "jain": jain_fairness_stream(o.acc),
+                "tenant_qos_spread": spread["spread"],
+                "tenant_qos_min": spread["min"],
+                "drop_rate": resilience_stats_stream(
+                    o.acc)["drop_rate"],
+            }
+            if rec:
+                cell["worst_dip"] = min(r["dip"] for r in rec)
+                recovered = [r["recovery_s"] for r in rec
+                             if r["recovered"]]
+                cell["unrecovered_events"] = len(rec) - len(recovered)
+                if recovered:
+                    cell["max_recovery_s"] = max(recovered)
+            if o.ctrl is not None:
+                cell.update(control_stats_stream(o.acc, o.ctrl))
+            row[label] = cell
+        out[name] = row
+    return out
+
+
 def scenario_suite():
     suite = get_scenario_suite()
 
@@ -195,15 +334,29 @@ def scenario_suite():
                 row[label] = cell
             out[name] = row
         out["graceful_degradation"] = _degradation_payload()
+        out["closed_loop"] = _control_payload()
         return out
 
     payload, us = timed(compute)
+    _special = ("graceful_degradation", "closed_loop")
     derived = " ".join(
         f"{n}:qep={row['qedgeproxy']['qos_sat_pct']:.0f}%"
-        for n, row in payload.items() if n != "graceful_degradation")
+        for n, row in payload.items() if n not in _special)
     derived += " " + " ".join(
         f"{n}:dip n={row['neutral'].get('worst_dip', 1.0):.2f}"
         f"/b={row['bounded'].get('worst_dip', 1.0):.2f}"
         for n, row in payload["graceful_degradation"].items())
+    def _best_ctl(row):
+        # best closed-loop policy (prewarmed is the open-loop oracle)
+        name = max((p for p in row if p not in ("static", "prewarmed")),
+                   key=lambda p: row[p]["qos_sat_pct"])
+        return name, row[name]["qos_sat_pct"]
+
+    derived += " " + " ".join(
+        "{n}:qos s={s:.0f}/c={c:.0f}({p})/p={pre:.0f}%".format(
+            n=n, s=row["static"]["qos_sat_pct"],
+            c=_best_ctl(row)[1], p=_best_ctl(row)[0],
+            pre=row["prewarmed"]["qos_sat_pct"])
+        for n, row in payload["closed_loop"].items())
     emit("scenario_suite", us, derived, payload)
     return payload

@@ -1,4 +1,7 @@
-"""Fault-tolerant checkpointing (atomic, async, elastic-restorable)."""
-from repro.checkpoint.checkpointer import Checkpointer
+"""Fault-tolerant checkpointing (atomic, async, elastic-restorable,
+integrity-verified)."""
+from repro.checkpoint.checkpointer import (SCHEMA_VERSION,
+                                           CheckpointCorruptError,
+                                           Checkpointer)
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointCorruptError", "SCHEMA_VERSION"]

@@ -1,0 +1,393 @@
+"""Closed-loop control plane: reactive autoscaling, admission control,
+capacity migration — the orchestrator that *answers* overload instead of
+scheduling around it.
+
+The scenario engine is open-loop by design: every schedule is fixed at
+compile time, so the infrastructure never fights back and the repro
+cannot study the control interaction a real continuum always has — K
+bandit balancers adapting *while* an orchestrator reshapes the arm set
+(the continuous re-orchestration loop of Bisicchia et al., PAPERS.md).
+This module closes the loop. A small policy state machine rides in the
+simulator's ``lax.scan`` carry (next to the PR 6 breaker state),
+observes per-step aggregates the engine already computes — per-arm
+queue depth, fleet QoS / timeout rates, drop counts — and feeds back
+into the *effective* drivers each step:
+
+* **Reactive autoscaler** (``managed`` > 0): the last ``managed``
+  instances of the fleet are the controller's own deployment — a
+  standby pool it spawns and kills on aggregate backlog. Spawned
+  instances serve only after a ``warmup`` delay (container cold start);
+  decisions pass a dwell (``hold``) + hysteresis (``up_queue`` >
+  ``down_queue``) + ``action_cooldown`` filter, the classic guard rails
+  against control-loop thrash. Scenario liveness always wins: the
+  controller cannot resurrect an instance the scenario killed
+  (``act_eff = act & up``), and if its mask would darken the whole
+  fleet the veto is waived (fail-open, like the breaker).
+* **Admission control** (``admit``): per-player token buckets at the
+  balancer edge. A fleet-level AIMD admitted-fraction (multiplicative
+  decrease while the backlog/QoS signal is hot, additive increase when
+  healthy, floored at ``admit_floor``) sets each bucket's refill rate;
+  requests beyond the bucket are *shed* — they never reach a queue,
+  but they count as issued QoS misses (a denied client is a failed
+  client; shedding can only win by protecting the admitted majority,
+  never by shrinking the denominator).
+* **Capacity migration** (``regions`` > 1): instances partition into
+  contiguous regions; when one region's backlog-per-instance leads the
+  coldest by ``mig_threshold``, a ``mig_step`` share of service
+  capacity moves hot-ward (``s_m`` scales by the inverse share, total
+  capacity conserved) — Nezami et al.'s decentralized placement loop
+  reduced to its capacity term.
+
+Sharding & parity contract (the engine invariants this composes with):
+
+* Every decision input is *replicated* across player shards: the (M,)
+  queue is already psum-replicated by the round loop, scenario drivers
+  are replicated, and the per-step fleet QoS/timeout observation is
+  psum-reduced once per step (``simulator.step_fn``) — the control
+  plane's ONE new in-loop collective. Per-player state (token buckets,
+  shed counters) is driven only by shard-local inputs. Replicated
+  state therefore evolves identically on every shard with no further
+  communication.
+* The whole layer is gated on *static* config: a ``None`` or neutral
+  :class:`ControlConfig` (``enabled == False``) traces the
+  byte-identical open-loop program — parity is structural, not
+  numerical luck (tests/test_control.py).
+* The carry is an ordinary pytree: it streams through chunked
+  ``run_sim_stream``, checkpoints and resumes bit-exactly, and needs
+  no randomness (decisions are deterministic functions of replicated
+  observations — no ``prand`` keys).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ControlConfig:
+    """Static knobs of the closed-loop controller (all mechanisms off
+    by default: the default instance is *neutral* and traces the
+    byte-identical open-loop program).
+
+    Autoscaler (active when ``managed`` > 0): the LAST ``managed``
+    instance indices form the standby pool. ``start_up=False`` parks
+    them at t=0 (the usual study: base fleet + spare capacity the
+    controller may buy). ``up_queue``/``down_queue`` are hysteresis
+    thresholds on fleet backlog per live instance; the signal must
+    hold for ``hold`` seconds, actions are ``action_cooldown`` seconds
+    apart and move ``batch`` instances; spawns serve after ``warmup``
+    seconds.
+
+    Admission (active when ``admit``): shed when backlog per live
+    instance exceeds ``target_queue``, rolling QoS falls below
+    ``qos_floor``, or the fleet timeout rate exceeds
+    ``timeout_ceiling`` (signals EMA-smoothed over ``qos_window``
+    seconds). AIMD: ×``admit_md`` per hot step, +``admit_ai``/s when
+    healthy, clamped to [``admit_floor``, 1]. Buckets hold at most
+    ``burst`` tokens.
+
+    Migration (active when ``regions`` > 1): see module docstring.
+    """
+    # --- reactive autoscaler ---
+    managed: int = 0
+    start_up: bool = False
+    warmup: float = 2.0
+    up_queue: float = 8.0
+    down_queue: float = 1.0
+    hold: float = 1.0
+    action_cooldown: float = 5.0
+    batch: int = 1
+    # --- admission control (token-bucket load shedding) ---
+    admit: bool = False
+    target_queue: float = 6.0
+    qos_floor: float = 0.0
+    timeout_ceiling: float = math.inf
+    admit_md: float = 0.9
+    admit_ai: float = 0.25
+    admit_floor: float = 0.2
+    burst: float = 16.0
+    qos_window: float = 2.0
+    # --- capacity migration between regions ---
+    regions: int = 0
+    mig_threshold: float = 4.0
+    mig_step: float = 0.1
+    mig_cooldown: float = 5.0
+    share_min: float = 0.25
+    share_max: float = 4.0
+
+    @property
+    def enabled(self) -> bool:
+        """False == neutral: no mechanism active, no carry state, the
+        open-loop program byte-for-byte."""
+        return self.managed > 0 or self.admit or self.regions > 1
+
+
+def control_enabled(cfg) -> bool:
+    """Static gate ``simulator.build_sim_parts`` keys the whole control
+    path on (``cfg`` is a ``SimConfig``)."""
+    ctl = getattr(cfg, "control", None)
+    return ctl is not None and ctl.enabled
+
+
+class ControlState(NamedTuple):
+    """Controller dynamics carried through the scan. Fleet-level fields
+    ((M,)/(R,)/scalars) are replicated across player shards; ``tokens``
+    is the only per-player field and stays shard-local."""
+    ctrl_on: jax.Array     # (M,) bool desired on/off for managed instances
+    ready_at: jax.Array    # (M,) f32 spawn warm-up deadline [s]
+    up_dwell: jax.Array    # ()  f32 seconds the scale-up signal has held
+    down_dwell: jax.Array  # ()  f32 seconds the scale-down signal has held
+    cool_until: jax.Array  # ()  f32 no scale action before this time
+    admit_frac: jax.Array  # ()  f32 AIMD admitted fraction in [floor, 1]
+    tokens: jax.Array      # (K,) f32 per-player admission token buckets
+    ema_qos: jax.Array     # ()  f32 rolling fleet QoS success ratio
+    ema_timeout: jax.Array  # () f32 rolling fleet timeout-per-attempt ratio
+    share: jax.Array       # (R,) f32 per-region capacity shares (mean 1)
+    mig_cool: jax.Array    # ()  f32 no migration before this time
+
+
+class ControlCounters(NamedTuple):
+    """Control-action accounting (post-warmup, like the accumulator's
+    measured fields) — the thrash/shed readouts ride on these."""
+    shed_k: jax.Array          # (K,) requests shed at admission per player
+    admit_frac_sum: jax.Array  # ()  sum of admit_frac per measured step
+    scale_up: jax.Array        # ()  scale-up actions
+    scale_down: jax.Array      # ()  scale-down actions
+    migrations: jax.Array      # ()  capacity-migration actions
+    ctrl_up_m: jax.Array       # (M,) steps each managed instance served
+    steps: jax.Array           # ()  measured steps
+
+
+class ControlCarry(NamedTuple):
+    state: ControlState
+    counters: ControlCounters
+
+
+def _managed_mask(ccfg: ControlConfig, M: int) -> np.ndarray:
+    return np.arange(M) >= M - min(ccfg.managed, M)
+
+
+def _region_ids(ccfg: ControlConfig, M: int) -> np.ndarray:
+    R = max(ccfg.regions, 1)
+    return (np.arange(M) * R) // M
+
+
+def control_init(ccfg: ControlConfig, K: int, M: int) -> ControlCarry:
+    """Fresh carry. ``K`` is the LOCAL player width under player
+    sharding (buckets/shed are shard-local); (M,)/(R,) fields replicate."""
+    managed = jnp.asarray(_managed_mask(ccfg, M))
+    R = max(ccfg.regions, 1)
+    state = ControlState(
+        ctrl_on=managed & bool(ccfg.start_up),
+        ready_at=jnp.full((M,), -jnp.inf, jnp.float32),
+        up_dwell=jnp.zeros((), jnp.float32),
+        down_dwell=jnp.zeros((), jnp.float32),
+        cool_until=jnp.full((), -jnp.inf, jnp.float32),
+        admit_frac=jnp.ones((), jnp.float32),
+        tokens=jnp.full((K,), ccfg.burst, jnp.float32),
+        ema_qos=jnp.ones((), jnp.float32),
+        ema_timeout=jnp.zeros((), jnp.float32),
+        share=jnp.ones((R,), jnp.float32),
+        mig_cool=jnp.full((), -jnp.inf, jnp.float32),
+    )
+    counters = ControlCounters(
+        shed_k=jnp.zeros((K,), jnp.float32),
+        admit_frac_sum=jnp.zeros((), jnp.float32),
+        scale_up=jnp.zeros((), jnp.float32),
+        scale_down=jnp.zeros((), jnp.float32),
+        migrations=jnp.zeros((), jnp.float32),
+        ctrl_up_m=jnp.zeros((M,), jnp.float32),
+        steps=jnp.zeros((), jnp.float32),
+    )
+    return ControlCarry(state, counters)
+
+
+def control_actuate(
+    ccfg: ControlConfig,
+    dt: float,
+    t: jax.Array,            # scalar f32 sim time
+    carry: ControlCarry,
+    q: jax.Array,            # (M,) queue depth at step start (replicated)
+    act: jax.Array,          # (M,) scenario liveness this step
+    nc: jax.Array,           # (K,) scheduled client slots per LB (local)
+    s_m: jax.Array,          # (M,) scheduled service-time row
+    measf: jax.Array,        # scalar f32 1.0 once past warmup_steps
+):
+    """Step-start control pass: advance the policy state machine on the
+    replicated observations, return the *effective* drivers.
+
+    Returns ``(carry, act_eff, nc_adm, s_m_eff, shed_k)``: the
+    controller-masked liveness, the admitted client slots (``nc_adm <=
+    nc``; the gap is shed at the balancer edge), the migration-scaled
+    service row, and the (K,) f32 shed count this step. Every branch is
+    statically gated on the config, so a policy with e.g. admission off
+    pays nothing for it.
+    """
+    st, cnt = carry
+    M = act.shape[0]
+    managed = jnp.asarray(_managed_mask(ccfg, M))
+    tf = jnp.asarray(t, jnp.float32)
+
+    # effective liveness BEFORE this step's decisions: newly spawned
+    # capacity only serves once its warm-up has elapsed
+    def eff_active(state: ControlState) -> jax.Array:
+        if ccfg.managed <= 0:
+            return act
+        up = jnp.where(managed, state.ctrl_on & (tf >= state.ready_at),
+                       True)
+        eff = act & up
+        # fail-open: never let the controller darken the whole fleet
+        return jnp.where(eff.any(), eff, act)
+
+    act0 = eff_active(st)
+    live_n = jnp.maximum(act0.sum(), 1).astype(jnp.float32)
+    qbar = q.sum() / live_n          # fleet backlog per live instance
+
+    # --- reactive autoscaler: dwell + hysteresis + cooldown ---
+    if ccfg.managed > 0:
+        up_cond = qbar > ccfg.up_queue
+        down_cond = qbar < ccfg.down_queue
+        up_dwell = jnp.where(up_cond, st.up_dwell + dt, 0.0)
+        down_dwell = jnp.where(down_cond, st.down_dwell + dt, 0.0)
+        can_act = tf >= st.cool_until
+        parked = managed & ~st.ctrl_on & act   # dead standby can't spawn
+        on = managed & st.ctrl_on
+        do_up = (up_cond & (up_dwell >= ccfg.hold) & can_act
+                 & parked.any())
+        do_down = (down_cond & (down_dwell >= ccfg.hold) & can_act
+                   & on.any())
+        spawn = parked & (jnp.cumsum(parked) <= ccfg.batch)
+        kill = on & (jnp.cumsum(on[::-1])[::-1] <= ccfg.batch)
+        ctrl_on = jnp.where(do_up, st.ctrl_on | spawn, st.ctrl_on)
+        ctrl_on = jnp.where(do_down, ctrl_on & ~kill, ctrl_on)
+        ready_at = jnp.where(do_up & spawn, tf + ccfg.warmup, st.ready_at)
+        acted = do_up | do_down
+        st = st._replace(
+            ctrl_on=ctrl_on, ready_at=ready_at,
+            up_dwell=jnp.where(acted, 0.0, up_dwell),
+            down_dwell=jnp.where(acted, 0.0, down_dwell),
+            cool_until=jnp.where(acted, tf + ccfg.action_cooldown,
+                                 st.cool_until))
+        cnt = cnt._replace(
+            scale_up=cnt.scale_up + measf * do_up,
+            scale_down=cnt.scale_down + measf * do_down)
+    act_eff = eff_active(st)
+
+    # --- capacity migration: hottest region borrows from the coldest ---
+    if ccfg.regions > 1:
+        rid = jnp.asarray(_region_ids(ccfg, M))
+        counts = jnp.asarray(np.bincount(_region_ids(ccfg, M),
+                                         minlength=max(ccfg.regions, 1)),
+                             jnp.float32)
+        rq = jax.ops.segment_sum(q, rid,
+                                 num_segments=max(ccfg.regions, 1)) / counts
+        hot, cold = jnp.argmax(rq), jnp.argmin(rq)
+        gap = rq[hot] - rq[cold]
+        do_mig = (gap > ccfg.mig_threshold) & (tf >= st.mig_cool)
+        delta = jnp.minimum(jnp.minimum(
+            ccfg.mig_step, st.share[cold] - ccfg.share_min),
+            ccfg.share_max - st.share[hot])
+        delta = jnp.maximum(delta, 0.0) * do_mig
+        share = (st.share.at[hot].add(delta).at[cold].add(-delta))
+        st = st._replace(
+            share=share,
+            mig_cool=jnp.where(do_mig, tf + ccfg.mig_cooldown,
+                               st.mig_cool))
+        cnt = cnt._replace(migrations=cnt.migrations + measf * do_mig)
+        s_m_eff = s_m / share[rid]
+    else:
+        s_m_eff = s_m
+
+    # --- admission: AIMD fraction drives per-player token buckets ---
+    if ccfg.admit:
+        hot = qbar > ccfg.target_queue
+        if ccfg.qos_floor > 0.0:
+            hot = hot | (st.ema_qos < ccfg.qos_floor)
+        if math.isfinite(ccfg.timeout_ceiling):
+            hot = hot | (st.ema_timeout > ccfg.timeout_ceiling)
+        frac = jnp.where(hot, st.admit_frac * ccfg.admit_md,
+                         jnp.minimum(1.0, st.admit_frac + ccfg.admit_ai * dt))
+        frac = jnp.clip(frac, ccfg.admit_floor, 1.0)
+        ncf = nc.astype(jnp.float32)
+        tokens = jnp.minimum(st.tokens + frac * ncf, ccfg.burst)
+        adm = jnp.minimum(ncf, jnp.floor(tokens)).astype(jnp.int32)
+        tokens = tokens - adm.astype(jnp.float32)
+        shed = ncf - adm.astype(jnp.float32)
+        st = st._replace(admit_frac=frac, tokens=tokens)
+        cnt = cnt._replace(shed_k=cnt.shed_k + measf * shed)
+        nc_adm = adm
+    else:
+        shed = jnp.zeros_like(nc, jnp.float32)
+        nc_adm = nc
+
+    cnt = cnt._replace(
+        admit_frac_sum=cnt.admit_frac_sum + measf * st.admit_frac,
+        ctrl_up_m=cnt.ctrl_up_m + measf * (managed & act_eff),
+        steps=cnt.steps + measf)
+    return ControlCarry(st, cnt), act_eff, nc_adm, s_m_eff, shed
+
+
+def control_observe(ccfg: ControlConfig, carry: ControlCarry,
+                    obs: jax.Array, dt: float) -> ControlCarry:
+    """Step-end observation pass: fold the fleet-total ``obs = [succ,
+    issued, timeouts, attempts]`` (psum-reduced under player sharding —
+    the layer's one new collective) into the rolling EMAs the admission
+    signal reads next step."""
+    st, cnt = carry
+    a = dt / max(ccfg.qos_window, dt)
+    succ, iss, to, att = obs[0], obs[1], obs[2], obs[3]
+    qos = succ / jnp.maximum(iss, 1.0)
+    tor = to / jnp.maximum(att, 1.0)
+    st = st._replace(
+        ema_qos=(1.0 - a) * st.ema_qos + a * qos,
+        ema_timeout=(1.0 - a) * st.ema_timeout + a * tor)
+    return ControlCarry(st, cnt)
+
+
+# ---------------------------------------------------------------------------
+# Readouts.
+# ---------------------------------------------------------------------------
+
+def control_stats_stream(acc, ctrl: ControlCounters) -> dict:
+    """Control-action accounting from a streaming run: thrash
+    (scale actions per 1k steps), admission-drop fraction (shed over
+    *scheduled* requests — ``acc.n_kc`` counts shed requests as issued
+    QoS misses, so the two denominators agree), mean admitted fraction
+    and standby occupancy."""
+    steps = max(float(np.asarray(ctrl.steps)), 1.0)
+    shed = float(np.asarray(ctrl.shed_k, np.float64).sum())
+    requests = float(np.asarray(acc.n_kc, np.float64).sum())
+    up = float(np.asarray(ctrl.scale_up))
+    down = float(np.asarray(ctrl.scale_down))
+    occ = np.asarray(ctrl.ctrl_up_m, np.float64)
+    return {
+        "scale_up": up,
+        "scale_down": down,
+        "scale_actions_per_1k_steps": (up + down) / steps * 1e3,
+        "migrations": float(np.asarray(ctrl.migrations)),
+        "shed": shed,
+        "admission_drop_frac": shed / max(requests, 1.0),
+        "mean_admit_frac": float(np.asarray(ctrl.admit_frac_sum)) / steps,
+        "standby_up_mean": float(occ.sum()) / steps,
+    }
+
+
+def per_tenant_qos_spread(acc) -> dict:
+    """Per-player (tenant) QoS dispersion — the fairness cost of
+    admission shedding and autoscaler churn. Players with no issued
+    requests are excluded."""
+    s = np.asarray(acc.succ_kc, np.float64).sum(-1)
+    n = np.asarray(acc.n_kc, np.float64).sum(-1)
+    has = n > 0
+    if not has.any():
+        return {"min": 0.0, "max": 0.0, "mean": 0.0, "std": 0.0,
+                "spread": 0.0}
+    r = s[has] / n[has]
+    return {"min": float(r.min()), "max": float(r.max()),
+            "mean": float(r.mean()), "std": float(r.std()),
+            "spread": float(r.max() - r.min())}

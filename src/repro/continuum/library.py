@@ -115,6 +115,15 @@ def get_library(horizon: float, n_nodes: int = 30, n_instances: int = 10,
                         " amplification stays below spare capacity —"
                         " the metastable-overload probe", **kw),
         Scenario(
+            "sustained_overload",
+            (LoadSurge(start=0.45 * hz, extra=4, fraction=0.8,
+                       ramp=0.02 * hz),),
+            description="over-capacity surge that never ends: no"
+                        " scheduling policy can restore QoS — only"
+                        " added capacity (closed-loop autoscaling of a"
+                        " standby pool) or admission shedding can, the"
+                        " control-plane discriminator", **kw),
+        Scenario(
             "everything",
             (ClientChurn(start=0.0, rate=0.3, max_delta=1),
              LoadSurge(start=0.3 * hz, extra=2, fraction=0.5),

@@ -100,8 +100,13 @@ class StepSeries(NamedTuple):
 
 
 class StreamOutputs(NamedTuple):
+    """``ctrl`` carries the control plane's ``ControlCounters`` when a
+    closed-loop config is enabled (``repro.continuum.control``) and is
+    ``None`` — an empty pytree subtree — on every open-loop run, so
+    existing consumers and tree maps are untouched."""
     acc: MetricAccumulator
     series: StepSeries
+    ctrl: object = None
 
 
 def init_accumulator(K: int, M: int, C: int,
@@ -150,6 +155,7 @@ def update_accumulator(
     attempts: jax.Array | None = None,   # (K, C) attempts per request slot
     dropped: jax.Array | None = None,    # (K, C) bool: deadline exhausted
     brk_open: jax.Array | None = None,   # (K, M) bool: breaker open now
+    served: jax.Array | None = None,     # (K, C) bool: reached an instance
 ) -> MetricAccumulator:
     """One on-device accumulator update; everything here is O(K·M).
 
@@ -158,10 +164,17 @@ def update_accumulator(
     timeouts are the derived quantity ``attempts - completed`` — every
     attempt either times out or completes, and at most one attempt of
     a request completes.
+
+    ``served`` defaults to ``issued``. The control plane's admission
+    shedding passes the admitted subset instead: shed slots are issued
+    from the client's view (QoS misses in ``n_kc`` and the event
+    windows) but never reached an instance, so they must stay out of
+    the routing histogram and the latency sketch.
     """
     K, C = rewards.shape
     M, B = acc.proc_hist.shape
     issf = issued.astype(jnp.float32)
+    servf = issf if served is None else served.astype(jnp.float32)
     meas = (t_idx >= warmup_steps).astype(jnp.float32)
 
     # per-instance latency sketch + per-(LB, instance) routing histogram:
@@ -169,11 +182,11 @@ def update_accumulator(
     pbin = jnp.clip(jnp.searchsorted(jnp.asarray(_PROC_EDGES), procs),
                     0, B - 1).astype(jnp.int32)
     hist_upd = jax.ops.segment_sum(
-        issf.ravel(), (choices * B + pbin).ravel(),
+        servf.ravel(), (choices * B + pbin).ravel(),
         num_segments=M * B).reshape(M, B)
     kidx = jnp.arange(K, dtype=jnp.int32)[:, None]
     choice_upd = jax.ops.segment_sum(
-        issf.ravel(), (kidx * M + choices).ravel(),
+        servf.ravel(), (kidx * M + choices).ravel(),
         num_segments=K * M).reshape(K, M)
 
     # event-relative recovery windows: route this step's fleet-wide

@@ -50,6 +50,7 @@ global state.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import warnings
 from dataclasses import dataclass
@@ -400,6 +401,28 @@ class Scenario:
     n_instances: int = 10
     base_clients: int = 4
     description: str = ""
+
+
+def with_standby(scn: Scenario, count: int) -> Scenario:
+    """Widen a scenario's fleet by ``count`` standby instances.
+
+    The new instances take the LAST indices of the widened M, so every
+    event in the timeline (library events target leading-index
+    fractions of the original fleet) keeps hitting exactly the
+    instances it did before — the standby pool is untouched capacity.
+    This is the closed-loop study's topology helper: a
+    ``control.ControlConfig(managed=count, ...)`` makes that trailing
+    pool the autoscaler's own deployment, parked at t=0 and spawned
+    only when the controller reacts, so open- and closed-loop rows of
+    the same scenario face the identical base fleet and timeline.
+    """
+    if count < 0:
+        raise ValueError(f"standby count must be >= 0, got {count}")
+    return dataclasses.replace(
+        scn, n_instances=scn.n_instances + count,
+        description=(scn.description +
+                     f" [+{count} standby instances]" if count else
+                     scn.description))
 
 
 def compile_scenario(scn: Scenario, cfg, key) -> Drivers:

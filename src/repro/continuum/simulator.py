@@ -96,6 +96,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.continuum import control as qc
 from repro.continuum import metrics as qm
 from repro.continuum import scenarios as qs
 from repro.continuum.metrics import (MetricAccumulator, StepSeries,
@@ -151,6 +152,12 @@ class SimConfig:
     retry_deadline: bool = True      # budget retries against tau (False = naive)
     breaker_threshold: int = 0       # consecutive timeouts to open; 0 = off
     breaker_cooldown: float = 2.0    # open -> half-open probe after this [s]
+    # --- closed-loop control plane (reactive autoscaling, admission
+    # shedding, capacity migration; ``repro.continuum.control``). None
+    # or a neutral ControlConfig (``enabled == False``) traces the
+    # byte-identical open-loop program — same parity discipline as the
+    # resilience knobs above. ---
+    control: "qc.ControlConfig | None" = None
 
     @property
     def num_steps(self) -> int:
@@ -159,6 +166,10 @@ class SimConfig:
     @property
     def resilience_on(self) -> bool:
         return self.attempt_timeout > 0.0
+
+    @property
+    def control_on(self) -> bool:
+        return qc.control_enabled(self)
 
 
 class PlayerSharding(NamedTuple):
@@ -455,8 +466,32 @@ def build_sim_parts(
     disagree with the rows they describe.
 
     The carry is ``(state, queue, prev_active, acc, groups, pids,
-    breaker)`` with ``acc=None`` in trace mode and ``breaker=None``
-    unless the config enables circuit breakers.
+    breaker, control)`` with ``acc=None`` in trace mode,
+    ``breaker=None`` unless the config enables circuit breakers, and
+    ``control=None`` unless ``cfg.control`` enables a closed-loop
+    mechanism.
+
+    **Closed-loop control plane** (``cfg.control`` enabled): a
+    ``control.ControlCarry`` rides in the scan next to the breaker
+    state. At step start ``control_actuate`` advances the policy state
+    machine on the replicated observations (per-arm queue depth, the
+    EMAs fed back at the previous step end) and swaps in the
+    *effective* drivers: controller-masked instance liveness (reactive
+    autoscaler over the managed standby pool, with warm-up +
+    hysteresis), admitted client slots (per-player token buckets; the
+    shed remainder counts as issued QoS misses but never reaches a
+    queue or the routing statistics), and the migration-scaled service
+    row. Placement events, maintenance, the true-mu oracle, regret and
+    the queue recursion all see only the effective values — a
+    controller spawn/kill IS a placement event to the bandit. At step
+    end ``control_observe`` folds the fleet QoS/timeout totals into
+    the rolling EMAs; under player sharding that (4,) observation is
+    ``psum``-reduced — the control plane's ONE new in-loop collective
+    (every other decision input is already replicated, and per-player
+    controller state is shard-local). Like the resilience layer, the
+    whole path is gated on *static* config: a ``None``/neutral
+    ``ControlConfig`` traces the byte-identical open-loop program
+    (tests/test_control.py).
 
     **Request-lifecycle resilience** (``cfg.attempt_timeout > 0``): the
     round body unrolls ``1 + cfg.max_retries`` attempts per request.
@@ -495,6 +530,12 @@ def build_sim_parts(
             "the per-attempt timeout is the failure signal both "
             "mechanisms respond to")
     brk_on = res_on and cfg.breaker_threshold > 0
+    ctl_on = qc.control_enabled(cfg)
+    ccfg = cfg.control
+    if ctl_on and trace:
+        raise ValueError(
+            "the control plane is streaming-only: closed-loop runs are "
+            "fleet-scale by construction (set trace=False)")
     n_attempts = 1 + (cfg.max_retries if res_on else 0)
     censor = (qb.censored_latency(cfg.attempt_timeout, cfg.tau)
               if res_on else 0.0)
@@ -536,13 +577,31 @@ def build_sim_parts(
         acc = None if trace else qm.init_accumulator(
             K, M, C, n_marks=qs.MAX_MARKS, ev_buckets=cfg.ev_buckets)
         brk = qb.breaker_init(K, M) if brk_on else None
+        # K here is the LOCAL width: controller token buckets and shed
+        # counters are per-player and stay shard-local
+        ctl = qc.control_init(ccfg, K, M) if ctl_on else None
         keys = jax.random.split(k_scan, T)
-        return (s0, q0, active0, acc, groups, pids, brk), keys
+        return (s0, q0, active0, acc, groups, pids, brk, ctl), keys
 
     def step_fn(rtt, marks, carry, xs):
-        state, q, prev_active, acc, groups, pids, brk = carry
+        state, q, prev_active, acc, groups, pids, brk, ctl = carry
         t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step, group = xs
         t = t_idx.astype(jnp.float32) * cfg.dt
+
+        # --- closed-loop control plane (statically gated): advance the
+        # policy state machine on the replicated step-start
+        # observations and swap in the EFFECTIVE drivers. Everything
+        # downstream — placement events, maintenance, the true-mu
+        # oracle, regret, the queue drain — sees only the effective
+        # values, so a controller spawn/kill fires the same Alg 3/4
+        # trigger as a scenario liveness flip. ``nc`` becomes the
+        # ADMITTED slot count (what the rounds execute); ``nc_sched``
+        # keeps the scheduled demand for client-facing accounting. ---
+        if ctl_on:
+            measf = (t_idx >= warmup_steps).astype(jnp.float32)
+            nc_sched = nc
+            ctl, act, nc, s_m, _shed = qc.control_actuate(
+                ccfg, cfg.dt, t, ctl, q, act, nc, s_m, measf)
 
         # --- scenario modulation: effective RTT and service row for
         # THIS step. The partition term is the factored rank-1 AND
@@ -591,7 +650,12 @@ def build_sim_parts(
         reg = step_regret(w_now, mu_true, act)
         q_start = q
 
-        mask_all = jnp.arange(C)[None, :] < nc[:, None]        # (K, C)
+        if ctl_on:
+            mask_adm = jnp.arange(C)[None, :] < nc[:, None]    # admitted
+            mask_all = jnp.arange(C)[None, :] < nc_sched[:, None]
+        else:
+            mask_all = jnp.arange(C)[None, :] < nc[:, None]    # (K, C)
+            mask_adm = mask_all
         # service is continuous: drain dt/C of capacity per round so
         # in-step arrivals and departures interleave (a step-end-only
         # drain would overstate in-step queueing by ~C/2 requests).
@@ -652,8 +716,8 @@ def build_sim_parts(
             procs = proc_r.T
             if batched_record:
                 state = strat["record_rings"](state, choices, lats, t,
-                                              mask_all)
-            att_kc = mask_all.astype(jnp.int32)
+                                              mask_adm)
+            att_kc = mask_adm.astype(jnp.int32)
             dropped_kc = jnp.zeros_like(mask_all)
             brk_open_step = None
         else:
@@ -791,6 +855,19 @@ def build_sim_parts(
                 m_all = jnp.transpose(am_r, (2, 0, 1)).reshape(K, C * A)
                 state = strat["record_rings"](state, ch_all, obs_all, t,
                                               m_all)
+        if ctl_on and ccfg.admit:
+            # admission-shed slots: issued from the client's view (a
+            # denied client is a failed client — shedding can only win
+            # by protecting the admitted majority, never by shrinking
+            # the QoS denominator) but never served: censor the
+            # latency past tau, mark them dropped with zero attempts,
+            # and keep them out of the routing/latency statistics.
+            shed_kc = mask_all & ~mask_adm
+            lats = jnp.where(shed_kc, jnp.inf, lats)
+            dropped_kc = dropped_kc | shed_kc
+            served_kc = mask_adm
+        else:
+            served_kc = None
         # dropped requests carry the censor sentinel (> tau), so the
         # shared reward rule scores them 0 without a special case
         rewards = (lats <= cfg.tau).astype(jnp.float32)
@@ -810,12 +887,28 @@ def build_sim_parts(
                 t_idx=t_idx, warmup_steps=warmup_steps, marks=marks,
                 ev_pre_steps=ev_pre_steps,
                 ev_bucket_steps=ev_bucket_steps, attempts=att_kc,
-                dropped=dropped_kc, brk_open=brk_open_step)
+                dropped=dropped_kc, brk_open=brk_open_step,
+                served=served_kc)
             issf = issued.astype(jnp.float32)
             ys = StepSeries(succ=(rewards * issf).sum(),
                             issued=issf.sum(), regret=reg.sum(),
                             attempts=att_kc.astype(jnp.float32).sum())
-        return (state, q, act, acc, groups, pids, brk), ys
+        if ctl_on:
+            # step-end feedback: fold the fleet QoS/timeout totals into
+            # the rolling EMAs the admission signal reads next step.
+            # Under player sharding this (4,) observation must be
+            # global or the replicated controller state would diverge
+            # across shards — the control plane's ONE new in-loop
+            # collective.
+            issf_c = issued.astype(jnp.float32)
+            attf_c = att_kc.astype(jnp.float32)
+            compl_c = issf_c * (1.0 - dropped_kc.astype(jnp.float32))
+            obs = jnp.stack([(rewards * issf_c).sum(), issf_c.sum(),
+                             (attf_c - compl_c).sum(), attf_c.sum()])
+            if pshard is not None:
+                obs = jax.lax.psum(obs, pshard.axis)
+            ctl = qc.control_observe(ccfg, ctl, obs, cfg.dt)
+        return (state, q, act, acc, groups, pids, brk, ctl), ys
 
     return init_fn, step_fn
 
@@ -900,7 +993,13 @@ def build_sim_fn(
                                ev_succ=allsum(acc.ev_succ),
                                ev_n=allsum(acc.ev_n))
             ys = StepSeries(*(allsum(y) for y in ys))
-        return StreamOutputs(acc=acc, series=ys)
+        # control counters ride out with the stream: fleet-level fields
+        # are replicated across player shards by construction (every
+        # decision input is replicated), shed_k is per-player and
+        # concatenates like the other (K,) accumulator fields
+        ctl = carry[7]
+        return StreamOutputs(acc=acc, series=ys,
+                             ctrl=ctl.counters if ctl is not None else None)
 
     return run
 
@@ -1034,7 +1133,7 @@ def _mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def _stream_specs(mesh, lead: tuple = ()):
+def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False):
     """``shard_map`` specs for a (possibly vmapped) streaming run.
 
     Resolved per field through the logical rule table
@@ -1083,7 +1182,15 @@ def _stream_specs(mesh, lead: tuple = ()):
             drop_k=spec("players"),
             open_km=spec("players", None)),
         series=StepSeries(succ=spec(None), issued=spec(None),
-                          regret=spec(None), attempts=spec(None)))
+                          regret=spec(None), attempts=spec(None)),
+        ctrl=(None if not ctrl_on else qc.ControlCounters(
+            shed_k=spec("players"),               # per-player, shard-local
+            admit_frac_sum=spec(),                # replicated by design
+            scale_up=spec(),
+            scale_down=spec(),
+            migrations=spec(),
+            ctrl_up_m=spec(None),                 # fleet-level, replicated
+            steps=spec())))
     return in_specs, out_specs
 
 
@@ -1159,7 +1266,8 @@ def build_sim_grid_fn(
     if int(mesh.devices.size) == 1:
         return vrun, mesh
 
-    in_specs, out_specs = _stream_specs(mesh, lead=("grid",))
+    in_specs, out_specs = _stream_specs(mesh, lead=("grid",),
+                                        ctrl_on=qc.control_enabled(cfg))
     if pshard is None:
         inner = shard_map(vrun, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
@@ -1323,7 +1431,8 @@ def build_sim_players_fn(
     run = build_sim_fn(strategy_name, cfg, K, M, fused=fused, trace=False,
                        warmup_steps=warmup_steps,
                        pshard=PlayerSharding("players", Dp), **strategy_kw)
-    in_specs, out_specs = _stream_specs(mesh)
+    in_specs, out_specs = _stream_specs(mesh,
+                                        ctrl_on=qc.control_enabled(cfg))
     # global player ids ride in as a sharded operand (see
     # build_sim_parts): the shard's identity arrives on the same data
     # path as its rtt rows
@@ -1495,4 +1604,6 @@ def run_sim_stream(
     series = drain()
     if ckpt is not None:
         ckpt.wait()
-    return StreamOutputs(acc=carry[3], series=series)
+    ctl = carry[7]
+    return StreamOutputs(acc=carry[3], series=series,
+                         ctrl=ctl.counters if ctl is not None else None)

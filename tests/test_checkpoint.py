@@ -1,4 +1,6 @@
-"""Checkpointer: round trip, atomicity, GC, async, elastic restore."""
+"""Checkpointer: round trip, atomicity, GC, async, elastic restore,
+and integrity (checksum + schema version refuse corrupted resumes)."""
+import json
 import os
 
 import jax
@@ -6,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import (SCHEMA_VERSION, CheckpointCorruptError,
+                              Checkpointer)
 
 
 @pytest.fixture
@@ -64,3 +67,88 @@ def test_restore_missing_raises(tmp_path, tree):
     ck = Checkpointer(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         ck.restore(tree)
+
+
+# ---------------------------------------------------------------------------
+# Integrity: schema version + content checksum.
+# ---------------------------------------------------------------------------
+
+def _npz_path(tmp_path, step):
+    return os.path.join(str(tmp_path), f"step_{step:08d}", "arrays.npz")
+
+
+def _manifest_path(tmp_path, step):
+    return os.path.join(str(tmp_path), f"step_{step:08d}", "manifest.json")
+
+
+def test_manifest_carries_schema_and_checksum(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, tree)
+    with open(_manifest_path(tmp_path, 3)) as f:
+        m = json.load(f)
+    assert m["schema"] == SCHEMA_VERSION
+    assert m["checksum"].startswith("sha256:")
+    assert ck.verify(3)["step"] == 3
+
+
+def test_truncated_checkpoint_refused(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, tree)
+    npz = _npz_path(tmp_path, 4)
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        ck.restore(tree)
+
+
+def test_bitflipped_checkpoint_refused(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, tree)
+    npz = _npz_path(tmp_path, 5)
+    with open(npz, "r+b") as f:
+        f.seek(os.path.getsize(npz) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        ck.restore(tree)
+
+
+def test_garbage_manifest_refused(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(6, tree)
+    with open(_manifest_path(tmp_path, 6), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointCorruptError, match="unreadable manifest"):
+        ck.restore(tree)
+
+
+def test_future_schema_refused(tmp_path, tree):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, tree)
+    path = _manifest_path(tmp_path, 7)
+    with open(path) as f:
+        m = json.load(f)
+    m["schema"] = SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(CheckpointCorruptError, match="schema version"):
+        ck.restore(tree)
+
+
+def test_v1_checkpoint_without_checksum_still_restores(tmp_path, tree):
+    # pre-integrity checkpoints have neither schema nor checksum fields;
+    # they must keep restoring (manifest-only check)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(8, tree)
+    path = _manifest_path(tmp_path, 8)
+    with open(path) as f:
+        m = json.load(f)
+    del m["schema"], m["checksum"]
+    with open(path, "w") as f:
+        json.dump(m, f)
+    restored, step = ck.restore(tree)
+    assert step == 8
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 tree, restored)

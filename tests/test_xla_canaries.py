@@ -1,0 +1,189 @@
+"""XLA:CPU miscompile canaries: the two ORIGINAL shard_map patterns the
+sharded engine ships workarounds for.
+
+PR 5's player/grid sharding hit two wrong-answer (not crash) XLA:CPU
+bugs on the pinned jax 0.4.37 with >= 4 host devices:
+
+1. An in-loop ``groups[t % n_phases]`` gather of the sort-backed
+   stagger table under ``shard_map``: XLA fuses the gather into the
+   scan loop and some shards read another phase's row — sharded runs
+   maintain the wrong players. Workaround: ``build_sim_fn`` gathers
+   the (T, W) row table ONCE outside the loop and scans it in.
+2. A traced lane-pad ``concatenate`` feeding the 2-axis (data,
+   players) ``shard_map``: sharding propagation mis-distributes the
+   concat's operands and lanes simulate with other lanes' data.
+   Workaround: ``run_sim_grid`` pads eagerly on the host and
+   ``build_sim_grid_fn`` refuses the traced pad.
+
+These tests reconstruct the original patterns from the live engine
+pieces (``build_sim_parts`` / ``build_sim_fn`` + the real sharding
+specs) and compare against the unsharded/eager-padded reference. They
+``xfail(strict=True)`` on 0.4.37 — the failure is the expected state,
+and it is re-verified on every run so silent environment drift can't
+hide it. The day a jax upgrade fixes either bug, the canary XPASSes
+and fails the suite loudly: that is the signal that the corresponding
+workaround (and this canary) can be retired. Each subprocess exits 0
+either way and reports parity via stdout, so a genuine crash still
+fails the test (and the xfail) with the captured traceback.
+"""
+import jax
+import pytest
+
+from conftest import run_sub
+
+MISCOMPILES = jax.__version__ == "0.4.37"
+
+
+@pytest.mark.slow
+@pytest.mark.xfail(
+    condition=MISCOMPILES, strict=True,
+    reason="XLA:CPU on jax 0.4.37 mis-fuses the in-loop stagger-table "
+           "gather under shard_map at >= 4 devices (see "
+           "simulator.step_fn; workaround: pre-gathered rows via xs)")
+def test_canary_inloop_stagger_gather():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from repro.continuum import (SimConfig, compile_scenario,
+                                     get_library, make_topology,
+                                     run_sim_stream)
+        from repro.continuum import scenarios as qs
+        from repro.continuum.metrics import StepSeries, StreamOutputs
+        from repro.continuum.simulator import (PlayerSharding,
+                                               build_sim_parts,
+                                               _stream_specs)
+        from repro.launch.mesh import make_continuum_mesh
+        from repro.sharding import logical_to_spec
+
+        K, M, WARM = 16, 4, 10
+        cfg = SimConfig(horizon=4.0)
+        T = cfg.num_steps
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        drv = compile_scenario(get_library(cfg.horizon, K, M)["surge"],
+                               cfg, jax.random.PRNGKey(3))
+        ref = run_sim_stream("qedgeproxy", rtt, cfg, key, drivers=drv,
+                             warmup_steps=WARM)
+        n_ph = max(cfg.maint_every, 1)
+        ok = True
+        for D in (8, 4):
+            mesh = make_continuum_mesh(players=D,
+                                       devices=jax.devices()[:D])
+            init_fn, step_fn = build_sim_parts(
+                "qedgeproxy", cfg, K, M, trace=False, warmup_steps=WARM,
+                pshard=PlayerSharding("players", D))
+
+            def run(rtt_, drivers, key_, pids):
+                carry0, keys = init_fn(rtt_, drivers.active[0], key_,
+                                       pids)
+                xs = (jnp.arange(T),
+                      *(getattr(drivers, f) for f in qs.STEP_FIELDS),
+                      keys)
+
+                def body(c, x):
+                    # the ORIGINAL pattern: gather the due maintenance
+                    # row from the carry-resident table INSIDE the loop
+                    grow = c[4][x[0] % n_ph]
+                    return step_fn(rtt_, drivers.marks, c, (*x, grow))
+
+                carry, ys = jax.lax.scan(body, carry0, xs)
+                acc = carry[3]
+
+                def allsum(v):
+                    return jax.lax.psum(v, "players")
+
+                acc = acc._replace(arrivals_m=allsum(acc.arrivals_m),
+                                   proc_hist=allsum(acc.proc_hist),
+                                   ev_succ=allsum(acc.ev_succ),
+                                   ev_n=allsum(acc.ev_n))
+                return StreamOutputs(
+                    acc=acc, series=StepSeries(*(allsum(y) for y in ys)),
+                    ctrl=None)
+
+            in_specs, out_specs = _stream_specs(mesh)
+            inner = shard_map(
+                run, mesh=mesh,
+                in_specs=(*in_specs,
+                          logical_to_spec(("players",), mesh)),
+                out_specs=out_specs, check_rep=False)
+            got = jax.jit(lambda r, d, k: inner(
+                r, d, k, jnp.arange(K, dtype=jnp.int32)))(rtt, drv, key)
+            for f in ("succ_kc", "n_kc", "choice_counts", "arrivals_m"):
+                a = np.asarray(getattr(ref.acc, f))
+                b = np.asarray(getattr(got.acc, f))
+                if not np.array_equal(a, b):
+                    ok = False
+                    print(f"D={D} {f}: max|delta|="
+                          f"{float(np.abs(a - b).max())}")
+        print("CANARY OK" if ok else "CANARY MISCOMPILED")
+    """)
+    assert "CANARY OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.xfail(
+    condition=MISCOMPILES, strict=True,
+    reason="XLA:CPU on jax 0.4.37 mis-distributes a traced lane-pad "
+           "concat feeding the 2-axis (data, players) shard_map (see "
+           "build_sim_grid_fn; workaround: run_sim_grid pads eagerly)")
+def test_canary_traced_lane_pad_concat():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from repro.continuum import (SimConfig, compile_scenario,
+                                     get_library, make_topology,
+                                     run_sim_grid, stack_drivers)
+        from repro.continuum.simulator import (PlayerSharding,
+                                               build_sim_fn,
+                                               _stream_specs)
+        from repro.launch.mesh import make_continuum_mesh
+        from repro.sharding import logical_to_spec
+
+        K, M, S, WARM = 16, 4, 3, 10
+        cfg = SimConfig(horizon=3.0)
+        rtts = jnp.stack([make_topology(jax.random.PRNGKey(s), K, M)
+                          .lb_instance_rtt() for s in range(S)])
+        keys = jnp.stack([jax.random.PRNGKey(100 + s)
+                          for s in range(S)])
+        lib = list(get_library(cfg.horizon, K, M).values())
+        drivers = stack_drivers(
+            [compile_scenario(lib[i % len(lib)], cfg,
+                              jax.random.PRNGKey(i)) for i in range(S)])
+        mesh = make_continuum_mesh(players=2, devices=jax.devices()[:4])
+        Dd = 2
+        run = build_sim_fn("qedgeproxy", cfg, K, M, trace=False,
+                           warmup_steps=WARM,
+                           pshard=PlayerSharding("players", 2))
+        vrun = jax.vmap(lambda r, d, k, p: run(r, d, k, pids=p),
+                        in_axes=(0, 0, 0, None))
+        in_specs, out_specs = _stream_specs(mesh, lead=("grid",))
+        inner = shard_map(
+            vrun, mesh=mesh,
+            in_specs=(*in_specs, logical_to_spec(("players",), mesh)),
+            out_specs=out_specs, check_rep=False)
+
+        def pad(x):
+            return jnp.concatenate(
+                [x, jnp.repeat(x[-1:], (-S) % Dd, 0)])
+
+        def grid_traced_pad(rtts_, drv_, keys_):
+            # the ORIGINAL pattern: pad S=3 lanes to the 2-way data
+            # axis INSIDE the traced program
+            out = inner(pad(rtts_), jax.tree.map(pad, drv_),
+                        pad(keys_), jnp.arange(K, dtype=jnp.int32))
+            return jax.tree.map(lambda x: x[:S], out)
+
+        got = jax.jit(grid_traced_pad)(rtts, drivers, keys)
+        ref = run_sim_grid("qedgeproxy", rtts, cfg, keys,
+                           drivers=drivers, warmup_steps=WARM,
+                           mesh=mesh)             # eager host-side pad
+        ok = True
+        for f in ("succ_kc", "n_kc", "choice_counts", "arrivals_m"):
+            a = np.asarray(getattr(ref.acc, f))
+            b = np.asarray(getattr(got.acc, f))
+            if not np.array_equal(a, b):
+                ok = False
+                print(f"{f}: max|delta|={float(np.abs(a - b).max())}")
+        print("CANARY OK" if ok else "CANARY MISCOMPILED")
+    """)
+    assert "CANARY OK" in out
