@@ -7,9 +7,17 @@ emits steps/sec, µs/step, per-cell compile seconds and per-cell peak
 device memory (XLA ``memory_analysis``: temp + output buffers) per
 variant:
 
-  * ``stream``     — the fleet-scale hot path: scanned round loop,
-                     metric accumulators carried on device, O(K·M)
-                     memory independent of the horizon (trace=False).
+  * ``stream``     — the fleet-scale hot path: the FUSED round
+                     (``SimConfig.fused_round``, kernels/ops.round_step
+                     — all C rounds of a step in one dispatch), metric
+                     accumulators carried on device, O(K·M) memory
+                     independent of the horizon (trace=False). This is
+                     the cell the smoke floor gates, so the fused path
+                     cannot regress and stay green.
+  * ``round_scan`` — the streaming cell with only ``fused_round``
+                     disabled (per-step lax.scan over the C rounds):
+                     ``round_fusion_speedup`` isolates what the round
+                     megakernel buys on the anchor cells.
   * ``trace``      — same step structure but materializing the full
                      (T, K, C)/(T, K, M) trajectories (trace=True);
                      the memory baseline the streaming engine deprecates.
@@ -96,7 +104,14 @@ SMOKE_GRID_M = (10,)
 # Cells that also run the references: small, mid and large K*M anchor
 # the speedup / memory trends without paying the sequential reference's
 # full-width maintenance (minutes of wall clock) on every cell.
-SEQ_REF_CELLS = ((30, 10), (100, 50), (300, 50))
+# The K=1000 x M=50 anchor joined the sequential references once the
+# bitonic maintenance sort made its full-width (50k, 64) pass ~60 ms
+# instead of ~350 ms/step: the headline fused-vs-pre-PR-1 speedup is
+# now measured on the ROADMAP cell itself, not extrapolated.
+SEQ_REF_CELLS = ((30, 10), (100, 50), (300, 50), (1000, 50))
+# round_scan (only the round scan differs from stream) runs on the
+# same cells — it is cheap everywhere.
+ROUND_REF_CELLS = SEQ_REF_CELLS
 TRACE_REF_CELLS = ((30, 10), (100, 50), (300, 50), (1000, 50))
 MEM_CELL = (1000, 50, 120.0)        # K, M, horizon [s] for the memory story
 # CI floor for the smoke gate (stream + chunked cells, K<=100 x M=10 at
@@ -156,11 +171,18 @@ def _lower_cell(K, M, horizon, variant):
         knobs = RESILIENT_KNOBS
     elif variant == "controlled":
         knobs = _controlled_knobs()
+    elif variant == "round_scan":
+        # the streaming cell with ONLY the round megakernel disabled
+        # (the per-step scan over C rounds stays): isolates what round
+        # fusion itself buys, where ``sequential`` prices the whole
+        # pre-PR-1 step structure
+        knobs = dict(fused_round=False)
     cfg = SimConfig(horizon=horizon, **knobs)
     args = _cell_inputs(K, M, cfg)
     run = jax.jit(build_sim_fn(
         "qedgeproxy", cfg, K, M, fused=variant != "sequential",
-        trace=variant not in ("stream", "resilient", "controlled")))
+        trace=variant not in ("stream", "resilient", "controlled",
+                              "round_scan")))
     return run.lower(*args), args, cfg.num_steps
 
 
@@ -395,9 +417,15 @@ def bandit_scale():
                 cell["trace"] = _measure(K, M, horizon, "trace")
             if (K, M) in SEQ_REF_CELLS or common.SMOKE:
                 cell["sequential"] = _measure(K, M, horizon, "sequential")
+            if (K, M) in ROUND_REF_CELLS or common.SMOKE:
+                cell["round_scan"] = _measure(K, M, horizon, "round_scan")
             if "sequential" in cell:
                 cell["step_speedup"] = (cell["sequential"]["us_per_step"]
                                         / cell["stream"]["us_per_step"])
+            if "round_scan" in cell:
+                cell["round_fusion_speedup"] = (
+                    cell["round_scan"]["us_per_step"]
+                    / cell["stream"]["us_per_step"])
             if "trace" in cell and "per_device_peak_mb" in cell["trace"]:
                 cell["hbm_ratio"] = (
                     cell["trace"]["per_device_peak_mb"]
@@ -508,6 +536,10 @@ def bandit_scale():
     derived += " " + " ".join(
         f"{k}={v.get('per_device_peak_mb', 0.0):.1f}MB/dev"
         for k, v in payload.items() if k.startswith("players_"))
+    derived += " " + " ".join(
+        f"{k}:round_x{v['round_fusion_speedup']:.2f}"
+        for k, v in payload.items()
+        if isinstance(v, dict) and "round_fusion_speedup" in v)
     derived += " " + " ".join(
         f"{k}:res_x{v['resilience_overhead']:.2f}"
         for k, v in payload.items()

@@ -1,0 +1,103 @@
+"""Roofline row for the fused simulator round (EXPERIMENTS.md §Roofline).
+
+Stands the previously dry-run-only ``repro.roofline`` package up
+against a *measured* program: the fused streaming cell (K=1000 × M=50
+in full mode) is AOT-compiled, its per-step FLOPs / HBM bytes come from
+XLA's ``cost_analysis`` and its collective traffic from the optimized
+HLO (``roofline.collective_bytes``), and the same executable is then
+run so the artifact carries achieved FLOP/s and bytes/s next to the
+model's compute/memory/collective bounds.
+
+The peaks in ``roofline.hw`` are the TPU-v5e deployment target, so on
+this CPU container the "vs peak" ratios read as *headroom on the
+target part*, not host efficiency — the honest quantities measured
+here are us/step, the arithmetic intensity of the fused step, and
+which roof the program would sit under at deployment. The artifact
+lands in results/benchmarks/roofline_round.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import emit, timed
+from repro import roofline
+from repro.roofline import hw
+from repro.continuum import Scenario, SimConfig, build_sim_fn, compile_scenario
+
+FULL_CELL = (1000, 50, 5.0)     # K, M, horizon [s]: the ROADMAP memory cell
+SMOKE_CELL = (30, 10, 2.0)
+
+
+def _cost(exe) -> dict:
+    """Normalize ``cost_analysis`` across jax versions (dict vs [dict])."""
+    c = exe.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c or {})
+
+
+def roofline_round():
+    import numpy as np
+    import jax.numpy as jnp
+
+    K, M, horizon = SMOKE_CELL if common.SMOKE else FULL_CELL
+    cfg = SimConfig(horizon=horizon)        # fused_round on by default
+    T = cfg.num_steps
+    rng = np.random.default_rng(0)
+    rtt = jnp.asarray(rng.uniform(0.002, 0.04, (K, M)), jnp.float32)
+    drv = compile_scenario(Scenario("baseline", n_nodes=K, n_instances=M),
+                           cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+
+    t0 = time.perf_counter()
+    lowered = jax.jit(build_sim_fn(
+        "qedgeproxy", cfg, K, M, trace=False)).lower(rtt, drv, key)
+    exe = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    cost = _cost(exe)
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    coll = roofline.collective_bytes(exe.as_text())
+    coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))
+    terms = roofline.roofline_terms(flops / T, hbm_bytes / T, coll_total / T)
+
+    _, us = timed(exe, rtt, drv, key)
+    us_per_step = us / T
+    run_s = us / 1e6
+    achieved_flops = flops / run_s
+    achieved_bw = hbm_bytes / run_s
+
+    payload = {
+        "cell": {"K": K, "M": M, "horizon_s": horizon, "steps": T},
+        "compile_s": compile_s,
+        "per_step": {
+            "flops": flops / T,
+            "hbm_bytes": hbm_bytes / T,
+            "collective_bytes": coll_total / T,
+            "intensity_flops_per_byte": flops / max(hbm_bytes, 1.0),
+            "us_per_step": us_per_step,
+        },
+        "roofline": terms,            # model bounds on the target part
+        "measured": {
+            "backend": jax.default_backend(),
+            "run_s": run_s,
+            "steps_per_s": T / run_s,
+            "achieved_flops_per_s": achieved_flops,
+            "achieved_bytes_per_s": achieved_bw,
+            # headroom vs the deployment target's roofs, not host
+            # efficiency (see module docstring)
+            "peak_flops_ratio": achieved_flops / hw.PEAK_FLOPS_BF16,
+            "peak_hbm_ratio": achieved_bw / hw.HBM_BW,
+        },
+        "collectives": coll,
+    }
+    derived = (f"K{K}xM{M} {T / run_s:.0f}steps/s "
+               f"intensity={flops / max(hbm_bytes, 1.0):.2f}F/B "
+               f"bound={terms['dominant']} "
+               f"model_step={terms['bound_s'] * 1e6:.1f}us")
+    emit("roofline_round", us_per_step, derived, payload)
+    return payload

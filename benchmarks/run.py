@@ -16,7 +16,7 @@ import argparse
 import sys
 
 from benchmarks import (bandit_scale, beyond, common, figures, footprint,
-                        scenario_suite)
+                        roofline_round, scenario_suite)
 
 ALL = {
     # paper §VII figures
@@ -38,6 +38,7 @@ ALL = {
     # harness + scale-out throughput (perf trajectory)
     "suite_build": common.suite_build,
     "bandit_scale": bandit_scale.bandit_scale,
+    "roofline_round": roofline_round.roofline_round,
     # beyond-paper
     "beyond_paper_variants": beyond.beyond_paper_variants,
 }

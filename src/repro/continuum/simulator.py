@@ -107,6 +107,7 @@ from repro.core import baselines as bl
 from repro.core import prand
 from repro.core.kde import normal_cdf
 from repro.core.oracle import step_regret
+from repro.kernels import ops as kernel_ops
 
 
 @dataclass(frozen=True)
@@ -158,6 +159,14 @@ class SimConfig:
     # byte-identical open-loop program — same parity discipline as the
     # resilience knobs above. ---
     control: "qc.ControlConfig | None" = None
+    # --- fused round megakernel (kernels/ops.round_step): collapse the
+    # C-round scan body to one fused call with the bandit block's state
+    # resident across rounds (VMEM on the Pallas path, an unrolled
+    # XLA fusion on CPU). Bit-identical to the scan by construction
+    # (tests/test_round_fused.py); auto-falls-back to the scan whenever
+    # a feature needs the per-round structure (resilience attempts,
+    # player sharding's per-round arrival psum, sequential strategies).
+    fused_round: bool = True
 
     @property
     def num_steps(self) -> int:
@@ -255,10 +264,38 @@ def qedgeproxy_strategy(params: qb.BanditParams, cfg: SimConfig, K: int, M: int)
     def eps(state):
         return state.eps
 
+    def fused_round(state, q, nc, act, t, rtt_t, s_m, served, k_step, pids):
+        # all C rounds in one fused call: the per-round PRNG stream is
+        # batched up front (each element is exactly the draw the scan
+        # makes — a pure function of (step key, round, player id)), and
+        # kernels/ops.round_step replays selection, queue recursion,
+        # feedback control and the ring scatter bit-identically.
+        C = cfg.max_clients
+        ks = jax.vmap(
+            lambda r: jax.random.split(jax.random.fold_in(k_step, r))
+        )(jnp.arange(C))
+        z = jnp.exp(cfg.proc_sigma * jax.vmap(
+            lambda kk: prand.player_normal(kk, pids))(ks[:, 1]))
+        out = kernel_ops.round_step(
+            state.weights, state.cw, state.err, state.cooldown_until,
+            state.in_pool, state.active,
+            state.lat_buf, state.ts_buf, state.ptr,
+            state.r_buf, state.rts_buf, state.rptr,
+            q, nc, z, rtt_t, s_m, served, t,
+            tau=params.tau, err_thresh=params.err_thresh,
+            cooldown=params.cooldown)
+        state = state._replace(
+            weights=out.weights, cw=out.cw, err=out.err,
+            cooldown_until=out.cooldown_until, in_pool=out.in_pool,
+            lat_buf=out.lat_buf, ts_buf=out.ts_buf, ptr=out.ptr,
+            r_buf=out.r_buf, rts_buf=out.rts_buf, rptr=out.rptr)
+        return state, out.q, out.arrivals, out.choices, out.lats, out.procs
+
     return dict(init=init, select=select, record=record, maintain=maintain,
                 maintain_subset=maintain_subset,
                 record_feedback=record_feedback, record_rings=record_rings,
-                on_activity=on_activity, weights=weights, eps=eps)
+                on_activity=on_activity, weights=weights, eps=eps,
+                fused_round=fused_round)
 
 
 def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
@@ -301,9 +338,26 @@ def proxy_mity_strategy(alpha: float, cfg: SimConfig, K: int, M: int):
     def eps(state):
         return jnp.zeros((K,), jnp.float32)
 
+    def fused_round(state, q, nc, act, t, rtt_t, s_m, served, k_step, pids):
+        # stateless selection from fixed weights: the batched Gumbel
+        # rows reproduce the scan's per-round draws exactly, and the
+        # scatter-free jnp path is already the fused form.
+        C = cfg.max_clients
+        ks = jax.vmap(
+            lambda r: jax.random.split(jax.random.fold_in(k_step, r))
+        )(jnp.arange(C))
+        gum = jax.vmap(
+            lambda kk: prand.player_gumbel(kk, pids, M))(ks[:, 0])
+        z = jnp.exp(cfg.proc_sigma * jax.vmap(
+            lambda kk: prand.player_normal(kk, pids))(ks[:, 1]))
+        q, arrivals, choices, lats, procs = kernel_ops.round_step_gumbel(
+            state.weights, q, nc, z, gum, rtt_t, s_m, served)
+        return state, q, arrivals, choices, lats, procs
+
     return dict(init=init, select=select, record=record, maintain=maintain,
                 record_feedback=record_feedback, record_rings=record_rings,
-                on_activity=on_activity, weights=weights, eps=eps)
+                on_activity=on_activity, weights=weights, eps=eps,
+                fused_round=fused_round)
 
 
 def dec_sarsa_strategy(params: bl.DecSarsaParams, cfg: SimConfig, K: int,
@@ -546,6 +600,17 @@ def build_sim_parts(
                           **strategy_kw)
     batched_record = fused and strat.get("record_rings") is not None
     subset_maint = fused and strat.get("maintain_subset") is not None
+    # The fused-round megakernel replaces the whole C-round scan body
+    # (selection, queue recursion, feedback control, ring scatter) with
+    # one kernels/ops.round_step call — statically gated, like every
+    # other exactness-sensitive fast path, on the features that need
+    # per-round structure being off: resilience unrolls attempts inside
+    # the round, player sharding needs the per-round (M,) arrival psum
+    # (a collective cannot live inside a pallas_call), and sequential
+    # strategies read their own state between rounds.
+    fused_round_on = (cfg.fused_round and fused and not res_on
+                      and pshard is None and batched_record
+                      and strat.get("fused_round") is not None)
     n_phases = max(cfg.maint_every, 1)
     n_blocks = -(-K_glob // n_phases)   # ceil: players per decision tick
     # a contiguous K-wide shard touches at most ceil(K/n_phases)+1
@@ -673,7 +738,14 @@ def build_sim_parts(
         # fallback lets the strategy read its own per-request state
         # between rounds (Dec-SARSA). Bit-for-bit identical paths
         # (tests/test_bandit_batch.py). ---
-        if not res_on:
+        if not res_on and fused_round_on:
+            state, q, arrivals, choices, lats, procs = strat["fused_round"](
+                state, q, nc, act, t, rtt_t, s_m, served_per_round,
+                k_step, pids)
+            att_kc = mask_adm.astype(jnp.int32)
+            dropped_kc = jnp.zeros_like(mask_all)
+            brk_open_step = None
+        elif not res_on:
             def round_body(rc, r):
                 state, q, arrivals = rc
                 k_r = jax.random.fold_in(k_step, r)

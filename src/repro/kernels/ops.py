@@ -7,6 +7,7 @@ two paths are numerically locked by tests/test_kernels_*.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -18,20 +19,39 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kde as _kde
 from repro.kernels import ref
+from repro.kernels import round_fused as _round
 from repro.kernels import ssd as _ssd
 from repro.kernels import xla_flash
+
+_VALID_MODES = ("auto", "pallas", "interpret", "ref")
 
 # "auto"  : pallas on TPU else reference
 # "pallas": force pallas (compiled)
 # "interpret": pallas kernel body in interpret mode (CPU validation)
 # "ref"   : force the pure-jnp oracle
-_MODE = "auto"
+# REPRO_KERNEL_MODE pins the process-wide default (CI's interpret lane).
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+assert _MODE in _VALID_MODES, _MODE
 
 
 def set_mode(mode: str) -> None:
     global _MODE
-    assert mode in ("auto", "pallas", "interpret", "ref"), mode
+    assert mode in _VALID_MODES, mode
     _MODE = mode
+
+
+@contextlib.contextmanager
+def mode(m: str):
+    """Scoped `set_mode`: restores the previous mode on exit, so tests
+    and benchmarks can't leak a forced backend into each other."""
+    assert m in _VALID_MODES, m
+    global _MODE
+    prev = _MODE
+    _MODE = m
+    try:
+        yield
+    finally:
+        _MODE = prev
 
 
 def _use_pallas() -> bool | str:
@@ -111,6 +131,41 @@ def kde_success_prob(lat, mask, tau, bandwidth):
         return _kde.kde_success_prob(
             lat, mask, tau, bandwidth, interpret=(use == "interpret"))
     return ref.kde_success_prob(lat, mask, tau, bandwidth)
+
+
+def round_step(weights, cw, err, cooldown_until, in_pool, active,
+               lat_buf, ts_buf, ptr, r_buf, rts_buf, rptr,
+               q, nc, z, rtt_t, s_m, served_per_round, t,
+               tau: float, err_thresh: int, cooldown: float):
+    """Fused simulator round: all C SWRR rounds of one step.
+
+    Selection -> shared-queue recursion -> feedback control -> ring
+    scatter, with the player block's bandit state resident in VMEM on
+    the Pallas path. Both paths are bit-identical by construction
+    (tests/test_round_fused.py); returns `ref.RoundStepOut`.
+    """
+    use = _use_pallas()
+    if use:
+        return _round.round_step_swrr(
+            weights, cw, err, cooldown_until, in_pool, active,
+            lat_buf, ts_buf, ptr, r_buf, rts_buf, rptr,
+            q, nc, z, rtt_t, s_m, served_per_round, t,
+            tau=tau, err_thresh=err_thresh, cooldown=cooldown,
+            interpret=(use == "interpret"))
+    return ref.round_step_swrr(
+        weights, cw, err, cooldown_until, in_pool, active,
+        lat_buf, ts_buf, ptr, r_buf, rts_buf, rptr,
+        q, nc, z, rtt_t, s_m, served_per_round, t,
+        tau=tau, err_thresh=err_thresh, cooldown=cooldown)
+
+
+def round_step_gumbel(weights, q, nc, z, gum, rtt_t, s_m, served_per_round):
+    """Fused proxy-of-MITY round (no kernel needed: selection is
+    queue-independent, so the scatter-free batched jnp path IS the
+    fused form — one argmax over (C,K,M) plus a tiny (M,)-queue scan).
+    Returns (q, arrivals, choices, lats, procs)."""
+    return ref.round_step_gumbel(weights, q, nc, z, gum, rtt_t, s_m,
+                                 served_per_round)
 
 
 def bandit_maintenance_stats(lat, mask, rtt, tau, rho, min_bandwidth=1e-4):

@@ -1,0 +1,282 @@
+"""Pallas TPU megakernel: one simulator step's C SWRR rounds, fused.
+
+The per-round hot path (SWRR selection -> shared-queue recursion ->
+feedback control -> ring write) is ~a dozen XLA ops whose (K, M) and
+(K, M, R) intermediates round-trip HBM every round. This kernel runs
+the whole step with the bandit block resident in VMEM:
+
+  grid = (C, nb), ROUND-major (block index fastest): for each round r,
+  every player block b executes in sequence. TPU grids are sequential
+  and revisited output blocks keep their contents, so a block's
+  weights / SWRR credits / error counters / cooldowns / pool bits /
+  latency+reward rings live in its VMEM output window across all C
+  rounds — they are read from HBM once (the r == 0 copy-in) and
+  written once.
+
+  The cross-player coupling — same-round requests from every block
+  land on the shared (M,) queues — rides in three (1, M) outputs with
+  constant index maps, visible to every grid step: ``arr_round``
+  accumulates the current round's arrivals block by block and the LAST
+  block of each round applies the queue drain, so round r+1's blocks
+  observe exactly the queue state the unfused scan computes.
+
+Gathers and scatters become onehot-masked selects (sum of one value
+plus exact zeros; compare-select writes), which is what makes the
+kernel bit-identical to the jnp oracle (``ref.round_step_swrr``) —
+the ring writes follow the sequential per-round semantics of
+``core.bandit.record``, the proven equivalent of the oracle's batch
+scatter (tests/test_bandit_batch.py).
+
+What stays OUTSIDE the kernel, by design: the per-step PRNG batch (a
+pure (C, K) function of the step key, shared with the oracle), the
+per-round (M,) arrival psum under player sharding (a collective cannot
+live inside a pallas_call — sharded runs fall back to the unfused
+scan), and the MetricAccumulator reduction (cross-player histograms
+over the (K, C) outputs this kernel emits; O(K*C) per step, nothing to
+win in VMEM). See docs/ARCHITECTURE.md.
+
+Bool blocks (in_pool, active) follow the kde.py precedent: passed
+as-is, i1 support caveat documented there. CI locks interpret mode;
+the compiled path is auto-gated to TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import RoundStepOut
+
+BLOCK_K = 64    # (bk, M, R) f32 ring blocks, in+out, lane-padded: ~7 MB
+                # of VMEM at M=50, R=64 — comfortably under the ~16 MB/core
+
+
+def _round_kernel(tau, err_thresh, cooldown, nb,
+                  # inputs
+                  t_ref, nc_ref, z_ref, rtt_ref, sm_ref, served_ref,
+                  act_ref, w_in, cw_in, err_in, cd_in, pool_in,
+                  lat_in, ts_in, ptr_in, rb_in, rts_in, rp_in, q_in,
+                  # outputs
+                  w_o, cw_o, err_o, cd_o, pool_o,
+                  lat_o, ts_o, ptr_o, rb_o, rts_o, rp_o,
+                  q_o, arr_o, arrtot_o, ch_o, latv_o, proc_o):
+    r = pl.program_id(0)
+    b = pl.program_id(1)
+
+    # --- copy-in: the block's state enters VMEM once, at round 0 ---
+    @pl.when(r == 0)
+    def _():
+        w_o[...] = w_in[...]
+        cw_o[...] = cw_in[...]
+        err_o[...] = err_in[...]
+        cd_o[...] = cd_in[...]
+        pool_o[...] = pool_in[...]
+        lat_o[...] = lat_in[...]
+        ts_o[...] = ts_in[...]
+        ptr_o[...] = ptr_in[...]
+        rb_o[...] = rb_in[...]
+        rts_o[...] = rts_in[...]
+        rp_o[...] = rp_in[...]
+
+    @pl.when((r == 0) & (b == 0))
+    def _():
+        q_o[...] = q_in[...]
+        arrtot_o[...] = jnp.zeros_like(arrtot_o)
+
+    @pl.when(b == 0)
+    def _():
+        arr_o[...] = jnp.zeros_like(arr_o)
+
+    t = t_ref[0]
+    w = w_o[...]
+    cw = cw_o[...]
+    bk, M = w.shape
+    R = lat_o.shape[2]
+    Rq = rb_o.shape[1]
+    mask = r < nc_ref[..., 0]                           # (bk,)
+    q = q_o[0, :]                                       # (M,)
+    z_r = z_ref[0, :]                                   # (bk,)
+    arm = jax.lax.broadcasted_iota(jnp.int32, (bk, M), 1)
+
+    # --- SWRR selection (core.swrr.swrr_select) ---
+    total = jnp.sum(w, axis=-1, keepdims=True)
+    cw = cw + w
+    choice = jnp.argmax(cw, axis=-1)                    # (bk,)
+    onehot = choice[:, None] == arm                     # (bk, M) bool
+    onehot_f = onehot.astype(cw.dtype)
+    cw = cw - onehot_f * total
+
+    # --- latency: gathers as onehot-selects (exact) ---
+    q_seen = jnp.sum(jnp.where(onehot, q[None, :], 0.0), axis=-1)
+    s_sel = jnp.sum(jnp.where(onehot, sm_ref[...], 0.0), axis=-1)
+    proc = (q_seen + 1.0) * s_sel * z_r
+    rtt_sel = jnp.sum(jnp.where(onehot, rtt_ref[...], 0.0), axis=-1)
+    lat = rtt_sel + proc
+
+    # --- feedback control (core.bandit._record_control) ---
+    reward = (lat <= tau).astype(jnp.float32)
+    err_b = err_o[...]
+    old_err = jnp.sum(jnp.where(onehot, err_b, 0), axis=-1)
+    new_err = jnp.where(reward > 0, 0, old_err + 1).astype(jnp.int32)
+    trip = mask & (new_err >= err_thresh)
+    err_val = jnp.where(mask, jnp.where(trip, 0, new_err), old_err)
+    err_o[...] = jnp.where(onehot, err_val[:, None], err_b)
+    cd_b = cd_o[...]
+    cd_old = jnp.sum(jnp.where(onehot, cd_b, 0.0), axis=-1)
+    cd_val = jnp.where(trip, t + cooldown, cd_old)
+    cd_o[...] = jnp.where(onehot, cd_val[:, None], cd_b)
+    tripped = onehot & trip[:, None]
+    pool = pool_o[...] & ~tripped
+    pool_o[...] = pool
+    act_row = act_ref[...]                              # (1, M)
+    w2 = jnp.where(tripped, 0.0, w)
+    wsum = jnp.sum(w2, axis=-1, keepdims=True)
+    remaining = pool & act_row
+    rem_any = jnp.any(remaining, axis=-1, keepdims=True)
+    fallback = jnp.where(rem_any, remaining,
+                         act_row & ~tripped).astype(jnp.float32)
+    fallback = fallback / jnp.maximum(
+        jnp.sum(fallback, axis=-1, keepdims=True), 1.0)
+    w_o[...] = jnp.where(wsum > 0, w2 / jnp.maximum(wsum, 1e-30), fallback)
+    cw_o[...] = jnp.where(tripped, 0.0, cw)
+
+    # --- ring writes, sequential `core.bandit.record` semantics ---
+    ptr_b = ptr_o[...]                                  # (bk, M) i32
+    p_sel = jnp.sum(jnp.where(onehot, ptr_b, 0), axis=-1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (bk, M, R), 2)
+    wr = (onehot & mask[:, None])[:, :, None] & (slot == p_sel[:, None, None])
+    lat_o[...] = jnp.where(wr, lat[:, None, None], lat_o[...])
+    ts_o[...] = jnp.where(wr, t, ts_o[...])
+    ptr_o[...] = jnp.where(onehot & mask[:, None], (ptr_b + 1) % R, ptr_b)
+    rp_b = rp_o[..., 0]                                 # (bk,)
+    rq_slot = jax.lax.broadcasted_iota(jnp.int32, (bk, Rq), 1)
+    wrr = (rq_slot == rp_b[:, None]) & mask[:, None]
+    rb_o[...] = jnp.where(wrr, reward[:, None], rb_o[...])
+    rts_o[...] = jnp.where(wrr, t, rts_o[...])
+    rp_o[...] = jnp.where(mask, (rp_b + 1) % Rq, rp_b)[:, None]
+
+    # --- per-request outputs ---
+    ch_o[...] = choice[:, None]
+    latv_o[...] = lat[:, None]
+    proc_o[...] = proc[:, None]
+
+    # --- shared-queue coupling: accumulate this block's arrivals;
+    # the round's LAST block applies the drain so round r+1 reads the
+    # exact queue state the unfused scan computes ---
+    arr_blk = jnp.sum(
+        jnp.where(onehot & mask[:, None], 1.0, 0.0), axis=0)   # (M,)
+    arr_o[...] = arr_o[...] + arr_blk[None, :]
+    arrtot_o[...] = arrtot_o[...] + arr_blk[None, :]
+
+    @pl.when(b == nb - 1)
+    def _():
+        q_o[...] = jnp.maximum(
+            q_o[...] + arr_o[...] - served_ref[...], 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tau", "err_thresh", "cooldown", "interpret",
+                     "block_k"))
+def round_step_swrr(
+    weights, cw, err, cooldown_until, in_pool, active,
+    lat_buf, ts_buf, ptr, r_buf, rts_buf, rptr,
+    q, nc, z, rtt_t, s_m, served_per_round, t,
+    tau: float, err_thresh: int, cooldown: float,
+    interpret: bool = False, block_k: int = BLOCK_K,
+) -> RoundStepOut:
+    """Pallas round megakernel; same contract as ``ref.round_step_swrr``.
+
+    Pads the player axis to a block multiple (padded rows carry nc=0 /
+    zero weights, so they issue nothing and their state is sliced off).
+    """
+    K, M, R = lat_buf.shape
+    C = z.shape[0]
+    Rq = r_buf.shape[1]
+    bk = min(block_k, K)
+    pad = (-K) % bk
+    if pad:
+        p2 = ((0, pad), (0, 0))
+        weights = jnp.pad(weights, p2)
+        cw = jnp.pad(cw, p2)
+        err = jnp.pad(err, p2)
+        cooldown_until = jnp.pad(cooldown_until, p2)
+        in_pool = jnp.pad(in_pool, p2)
+        lat_buf = jnp.pad(lat_buf, ((0, pad), (0, 0), (0, 0)))
+        ts_buf = jnp.pad(ts_buf, ((0, pad), (0, 0), (0, 0)))
+        ptr = jnp.pad(ptr, p2)
+        r_buf = jnp.pad(r_buf, p2)
+        rts_buf = jnp.pad(rts_buf, p2)
+        rptr = jnp.pad(rptr, (0, pad))
+        nc = jnp.pad(nc, (0, pad))
+        z = jnp.pad(z, ((0, 0), (0, pad)), constant_values=1.0)
+        rtt_t = jnp.pad(rtt_t, p2)
+    Kp = K + pad
+    nb = Kp // bk
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1)
+
+    state_spec = pl.BlockSpec((bk, M), lambda r, b: (b, 0))
+    ring_spec = pl.BlockSpec((bk, M, R), lambda r, b: (b, 0, 0))
+    rring_spec = pl.BlockSpec((bk, Rq), lambda r, b: (b, 0))
+    col_spec = pl.BlockSpec((bk, 1), lambda r, b: (b, 0))
+    row_spec = pl.BlockSpec((1, M), lambda r, b: (0, 0))
+    out_col_spec = pl.BlockSpec((bk, 1), lambda r, b: (b, r))
+
+    outs = pl.pallas_call(
+        functools.partial(_round_kernel, float(tau), int(err_thresh),
+                          float(cooldown), nb),
+        grid=(C, nb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda r, b: (0,)),               # t
+            col_spec,                                            # nc
+            pl.BlockSpec((1, bk), lambda r, b: (r, b)),          # z
+            state_spec,                                          # rtt
+            row_spec,                                            # s_m
+            row_spec,                                            # served
+            row_spec,                                            # active
+            state_spec, state_spec, state_spec, state_spec,      # w cw err cd
+            state_spec,                                          # in_pool
+            ring_spec, ring_spec, state_spec,                    # lat ts ptr
+            rring_spec, rring_spec, col_spec,                    # rb rts rptr
+            row_spec,                                            # q
+        ],
+        out_specs=(
+            state_spec, state_spec, state_spec, state_spec, state_spec,
+            ring_spec, ring_spec, state_spec,
+            rring_spec, rring_spec, col_spec,
+            row_spec, row_spec, row_spec,
+            out_col_spec, out_col_spec, out_col_spec,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Kp, M), jnp.float32),          # weights
+            jax.ShapeDtypeStruct((Kp, M), jnp.float32),          # cw
+            jax.ShapeDtypeStruct((Kp, M), jnp.int32),            # err
+            jax.ShapeDtypeStruct((Kp, M), jnp.float32),          # cooldown
+            jax.ShapeDtypeStruct((Kp, M), jnp.bool_),            # in_pool
+            jax.ShapeDtypeStruct((Kp, M, R), jnp.float32),       # lat_buf
+            jax.ShapeDtypeStruct((Kp, M, R), jnp.float32),       # ts_buf
+            jax.ShapeDtypeStruct((Kp, M), jnp.int32),            # ptr
+            jax.ShapeDtypeStruct((Kp, Rq), jnp.float32),         # r_buf
+            jax.ShapeDtypeStruct((Kp, Rq), jnp.float32),         # rts_buf
+            jax.ShapeDtypeStruct((Kp, 1), jnp.int32),            # rptr
+            jax.ShapeDtypeStruct((1, M), jnp.float32),           # q
+            jax.ShapeDtypeStruct((1, M), jnp.float32),           # arr_round
+            jax.ShapeDtypeStruct((1, M), jnp.float32),           # arrivals
+            jax.ShapeDtypeStruct((Kp, C), jnp.int32),            # choices
+            jax.ShapeDtypeStruct((Kp, C), jnp.float32),          # lats
+            jax.ShapeDtypeStruct((Kp, C), jnp.float32),          # procs
+        ),
+        interpret=interpret,
+    )(t_arr, nc[:, None], z, rtt_t, s_m[None, :],
+      served_per_round[None, :], active[None, :],
+      weights, cw, err, cooldown_until, in_pool,
+      lat_buf, ts_buf, ptr, r_buf, rts_buf, rptr[:, None], q[None, :])
+
+    (w_o, cw_o, err_o, cd_o, pool_o, lat_o, ts_o, ptr_o, rb_o, rts_o,
+     rp_o, q_o, _arr_round, arrtot_o, ch_o, latv_o, proc_o) = outs
+    return RoundStepOut(
+        w_o[:K], cw_o[:K], err_o[:K], cd_o[:K], pool_o[:K],
+        lat_o[:K], ts_o[:K], ptr_o[:K], rb_o[:K], rts_o[:K], rp_o[:K, 0],
+        q_o[0], arrtot_o[0], ch_o[:K], latv_o[:K], proc_o[:K])

@@ -8,10 +8,27 @@ import textwrap
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(params=["ref", "interpret"])
+def kernel_mode(request):
+    """Run the test once per kernel backend: the pure-jnp oracle and
+    the Pallas kernel body in interpret mode, scoped via ops.mode() so
+    no test can leak a forced backend. When REPRO_KERNEL_MODE pins a
+    single mode (CI's interpret lane), the other param is skipped
+    rather than silently overridden."""
+    from repro.kernels import ops as kernel_ops
+
+    pinned = os.environ.get("REPRO_KERNEL_MODE")
+    if pinned in ("ref", "interpret") and pinned != request.param:
+        pytest.skip(f"REPRO_KERNEL_MODE={pinned} pins the backend")
+    with kernel_ops.mode(request.param):
+        yield request.param
 
 
 def run_sub(code: str):

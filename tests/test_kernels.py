@@ -1,8 +1,12 @@
-"""Pallas kernel sweeps: interpret-mode kernel body vs pure-jnp oracle.
+"""Pallas kernel sweeps, routed through the ops dispatch layer.
 
 Per instructions: sweep shapes/dtypes per kernel, assert_allclose
 against ref.py; hypothesis (requirements-dev.txt, optional) drives the
-KDE kernel's input space.
+KDE kernel's input space. Every call goes through ``repro.kernels.ops``
+under the ``kernel_mode`` fixture, so each case runs twice: once with
+the dispatcher forced to the pure-jnp oracle (locks the ``ref`` routing
+and any XLA-side impl it picks) and once with the Pallas kernel body in
+interpret mode — the same code path CI's interpret lane exercises.
 """
 import jax
 import jax.numpy as jnp
@@ -16,11 +20,9 @@ try:
 except ImportError:        # pragma: no cover - exercised in slim containers
     HAVE_HYPOTHESIS = False
 
-from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.kde import kde_success_prob
-from repro.kernels.ssd import ssd
+from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.kernels
 
 RNG = np.random.default_rng(42)
 
@@ -42,36 +44,33 @@ def _tol(dtype):
     (1, 4, 4, 64, 256),     # gemma3-style head_dim
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype):
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype, kernel_mode):
     q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), dtype)
     k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
     v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
-    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
-                          interpret=True)
+    got = ops.attention(q, k, v, causal=True)
     want = ref.attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
 @pytest.mark.parametrize("window", [16, 96, 1024])
-def test_flash_attention_sliding_window(window):
+def test_flash_attention_sliding_window(window, kernel_mode):
     B, Hq, Hkv, S, D = 1, 4, 2, 256, 32
     q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), jnp.float32)
     k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
     v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
-    got = flash_attention(q, k, v, causal=True, window=window,
-                          block_q=64, block_k=64, interpret=True)
+    got = ops.attention(q, k, v, causal=True, window=window)
     want = ref.attention(q, k, v, causal=True, window=window)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
-def test_flash_attention_noncausal():
+def test_flash_attention_noncausal(kernel_mode):
     B, Hq, Hkv, S, D = 1, 2, 2, 128, 32
     q = jnp.asarray(RNG.normal(0, 1, (B, Hq, S, D)), jnp.float32)
     k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
     v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
-    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
-                          interpret=True)
+    got = ops.attention(q, k, v, causal=False)
     want = ref.attention(q, k, v, causal=False)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
@@ -80,6 +79,13 @@ def test_flash_attention_noncausal():
 # decode attention
 # ---------------------------------------------------------------------------
 
+@pytest.fixture
+def naive_decode(monkeypatch):
+    # ref-mode dispatch defaults to the lowcast (bf16-operand) XLA
+    # impl, which is intentionally looser than the f32 tolerance here.
+    monkeypatch.setenv("REPRO_DECODE_IMPL", "naive")
+
+
 @pytest.mark.parametrize("B,Hq,Hkv,S,D", [
     (2, 8, 2, 300, 64),
     (1, 4, 4, 128, 32),
@@ -87,28 +93,29 @@ def test_flash_attention_noncausal():
     (1, 25, 5, 96, 64),     # hymba head counts
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_attention_sweep(B, Hq, Hkv, S, D, dtype):
+def test_decode_attention_sweep(B, Hq, Hkv, S, D, dtype, kernel_mode,
+                                naive_decode):
     q = jnp.asarray(RNG.normal(0, 1, (B, Hq, D)), dtype)
     k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
     v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), dtype)
     ln = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
-    got = decode_attention(q, k, v, ln, block_k=128, interpret=True)
+    got = ops.decode_attention(q, k, v, ln)
     want = ref.decode_attention(q, k, v, ln)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
-def test_decode_attention_length_masks_tail():
+def test_decode_attention_length_masks_tail(kernel_mode, naive_decode):
     B, Hq, Hkv, S, D = 1, 2, 1, 64, 16
     q = jnp.asarray(RNG.normal(0, 1, (B, Hq, D)), jnp.float32)
     k = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
     v = jnp.asarray(RNG.normal(0, 1, (B, Hkv, S, D)), jnp.float32)
     ln = jnp.asarray([10], jnp.int32)
-    got = decode_attention(q, k, v, ln, block_k=32, interpret=True)
+    got = ops.decode_attention(q, k, v, ln)
     # poison the tail: result must not change
     k2 = k.at[:, :, 10:].set(99.0)
     v2 = v.at[:, :, 10:].set(-99.0)
-    got2 = decode_attention(q, k2, v2, ln, block_k=32, interpret=True)
+    got2 = ops.decode_attention(q, k2, v2, ln)
     np.testing.assert_allclose(got, got2, atol=1e-6)
 
 
@@ -122,13 +129,13 @@ def test_decode_attention_length_masks_tail():
     (2, 130, 2, 16, 8, 32),     # S not a chunk multiple
     (1, 256, 2, 64, 128, 128),  # mamba2-1.3b-like dims
 ])
-def test_ssd_sweep(B, S, H, P, N, c):
+def test_ssd_sweep(B, S, H, P, N, c, kernel_mode):
     x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
     dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
     A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
     Bm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
     Cm = jnp.asarray(RNG.normal(0, 1, (B, S, N)), jnp.float32)
-    got = ssd(x, dt, A, Bm, Cm, chunk=c, interpret=True)
+    got = ops.ssd(x, dt, A, Bm, Cm, chunk=c)
     want = ref.ssd(x, dt, A, Bm, Cm)
     np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
 
@@ -143,7 +150,7 @@ def test_ssd_decode_step_consistent_with_scan():
     want = ref.ssd(x, dt, A, Bm, Cm)
     h = jnp.zeros((B, H, N, P), jnp.float32)
     for t in range(S):
-        h, y = ref.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+        h, y = ops.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
                                    Cm[:, t])
         np.testing.assert_allclose(y, want[:, t], rtol=1e-4, atol=1e-4)
 
@@ -153,13 +160,37 @@ def test_ssd_decode_step_consistent_with_scan():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("rows,R", [(8, 16), (300, 64), (1024, 128)])
-def test_kde_kernel_sweep(rows, R):
+def test_kde_kernel_sweep(rows, R, kernel_mode):
     lat = jnp.asarray(RNG.exponential(0.03, (rows, R)), jnp.float32)
     mask = jnp.asarray(RNG.random((rows, R)) < 0.7)
     bw = jnp.asarray(RNG.uniform(1e-3, 1e-2, rows), jnp.float32)
-    got = kde_success_prob(lat, mask, 0.08, bw, interpret=True)
+    got = ops.kde_success_prob(lat, mask, 0.08, bw)
     want = ref.kde_success_prob(lat, mask, 0.08, bw)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("rows,R", [(17, 8), (300, 64), (1000, 512)])
+def test_maintenance_stats_sweep(rows, R, kernel_mode):
+    lat = jnp.asarray(RNG.exponential(0.03, (rows, R)), jnp.float32)
+    mask = jnp.asarray(RNG.random((rows, R)) < 0.7)
+    rtt = jnp.asarray(RNG.uniform(0.001, 0.05, rows), jnp.float32)
+    got = ops.bandit_maintenance_stats(lat, mask, rtt, 0.08, 0.9)
+    want = ref.bandit_maintenance_stats(lat, mask, rtt, 0.08, 0.9)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_bitonic_sort_matches_sort():
+    """The branchless bitonic network that replaces XLA:CPU's scalar
+    jnp.sort in the maintenance quantile must be bitwise-identical to
+    np.sort for the values it sees (finite, non-negative, duplicates)."""
+    for rows, R in ((5000, 64), (17, 8), (3, 16), (100, 512)):
+        x = RNG.exponential(1.0, (rows, R)).astype(np.float32)
+        x[:, :: max(R // 4, 1)] = 0.0          # duplicated exact values
+        x[0, :2] = np.finfo(np.float32).max    # sentinel-sized entries
+        got = np.asarray(ref._bitonic_sort_rows(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, np.sort(x, axis=-1))
 
 
 if HAVE_HYPOTHESIS:
@@ -171,7 +202,8 @@ if HAVE_HYPOTHESIS:
         lat = jnp.asarray(rng.exponential(0.05, (rows, R)), jnp.float32)
         mask = jnp.asarray(rng.random((rows, R)) < 0.5)
         bw = jnp.asarray(rng.uniform(1e-4, 1e-1, rows), jnp.float32)
-        got = kde_success_prob(lat, mask, tau, bw, interpret=True)
+        with ops.mode("interpret"):
+            got = ops.kde_success_prob(lat, mask, tau, bw)
         want = ref.kde_success_prob(lat, mask, tau, bw)
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
         assert ((np.asarray(got) >= 0) & (np.asarray(got) <= 1)).all()

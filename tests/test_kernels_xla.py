@@ -7,6 +7,10 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.xla_flash import attention_blockwise, decode_attention_lowcast
 
+# XLA-only impls (no Pallas body): the marker keeps them in the CI
+# kernel lane, but there is no interpret variant to parametrize over.
+pytestmark = pytest.mark.kernels
+
 RNG = np.random.default_rng(3)
 
 

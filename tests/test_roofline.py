@@ -1,0 +1,95 @@
+"""Roofline package arithmetic on hand-computed specs, plus a smoke
+test of the measured ``roofline_round`` benchmark row."""
+import numpy as np
+import pytest
+
+from repro import roofline
+from repro.roofline import hw
+
+
+def test_roofline_terms_hand_computed():
+    # exactly one second on each roof, by construction
+    t = roofline.roofline_terms(flops=hw.PEAK_FLOPS_BF16,
+                                hbm_bytes=hw.HBM_BW,
+                                coll_bytes=hw.ICI_BW_PER_LINK * 4,
+                                ici_links=4)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    assert t["bound_s"] == pytest.approx(1.0)
+
+
+def test_roofline_terms_dominant():
+    t = roofline.roofline_terms(flops=2 * hw.PEAK_FLOPS_BF16,
+                                hbm_bytes=hw.HBM_BW,
+                                coll_bytes=0.0)
+    assert t["dominant"] == "compute"
+    assert t["bound_s"] == pytest.approx(2.0)
+    t = roofline.roofline_terms(flops=0.0, hbm_bytes=3 * hw.HBM_BW,
+                                coll_bytes=hw.ICI_BW_PER_LINK)
+    assert t["dominant"] == "memory"
+    assert t["bound_s"] == pytest.approx(3.0)
+    # halving the links doubles the collective term
+    a = roofline.roofline_terms(1.0, 1.0, 1e9, ici_links=4)
+    b = roofline.roofline_terms(1.0, 1.0, 1e9, ici_links=2)
+    assert b["collective_s"] == pytest.approx(2 * a["collective_s"])
+
+
+def test_collective_bytes_hand_computed():
+    hlo = """
+  %ar = f32[1024,256] all-reduce(f32[1024,256] %x), to_apply=%sum
+  %ag = bf16[64,128] all-gather(bf16[32,128] %y), dimensions={0}
+  %cp = f32[16] collective-permute(f32[16] %z)
+  %add = f32[8,8] add(f32[8,8] %a, f32[8,8] %b)
+"""
+    out = roofline.collective_bytes(hlo)
+    # all-reduce moves ~2x its payload per chip in a ring
+    assert out["all-reduce"] == 1024 * 256 * 4 * 2.0
+    assert out["all-gather"] == 64 * 128 * 2 * 1.0
+    assert out["collective-permute"] == 16 * 4 * 1.0
+    assert out["all-to-all"] == 0.0
+    assert out["_counts"]["all-reduce"] == 1
+
+
+def test_collective_bytes_async_pairs_counted_once():
+    hlo = """
+  %s = f32[100] all-reduce-start(f32[100] %x), to_apply=%sum
+  %d = f32[100] all-reduce-done(f32[100] %s)
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-reduce"] == 100 * 4 * 2.0
+    assert out["_counts"]["all-reduce"] == 1
+
+
+def test_model_flops():
+    assert roofline.model_flops(1e9, 1e9, 1e12, "train") == 6e21
+    # inference counts active params only (MoE)
+    assert roofline.model_flops(1e9, 2e8, 1e12, "inference") == 2.0 * 2e8 * 1e12
+
+
+def test_hw_bytes_table():
+    assert hw.BYTES["f32"] == 4
+    assert hw.BYTES["bf16"] == 2
+    assert hw.BYTES["pred"] == 1
+
+
+def test_roofline_round_smoke(monkeypatch, tmp_path):
+    """The measured benchmark row on a tiny cell: per-step FLOPs/bytes
+    finite and nonzero, intensity nonzero, every model term positive."""
+    from benchmarks import common
+    from benchmarks.roofline_round import roofline_round
+
+    monkeypatch.setattr(common, "SMOKE", True)
+    # emit() writes the JSON artifact — keep the smoke payload out of
+    # the committed full-cell results/benchmarks/roofline_round.json
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    payload = roofline_round()
+    ps = payload["per_step"]
+    assert np.isfinite(ps["flops"]) and ps["flops"] > 0
+    assert np.isfinite(ps["hbm_bytes"]) and ps["hbm_bytes"] > 0
+    assert np.isfinite(ps["intensity_flops_per_byte"])
+    assert ps["intensity_flops_per_byte"] > 0
+    assert payload["roofline"]["bound_s"] > 0
+    assert payload["roofline"]["dominant"] in ("compute", "memory",
+                                               "collective")
+    assert payload["measured"]["steps_per_s"] > 0

@@ -1,0 +1,264 @@
+"""Differential conformance harness for the fused round megakernel.
+
+The repo's credibility rests on bit-exact parity claims, so the fused
+round (kernels/ops.round_step behind ``SimConfig.fused_round``) ships
+INSIDE this harness, not next to it: every counting statistic of a
+fused run must equal the unfused round-scan engine bit for bit across
+the full differential matrix — 3 strategies × resilience on/off ×
+control on/off × 8/2/1-way player shards × chunked/unchunked — and the
+same assertion must hold for every kernel backend (``ref`` oracle and
+the Pallas body in interpret mode, via the shared ``kernel_mode``
+fixture).
+
+Two cells of the matrix exercise the fused kernel's *fallback*
+contract rather than the kernel itself: resilience unrolls attempts
+inside the round and player sharding needs the per-round (M,) arrival
+psum (a collective cannot live inside a pallas_call), so there
+``fused_round=True`` must statically fall back to the scan and change
+nothing. Everywhere else the fused call is live and the comparison is
+kernel-vs-scan.
+
+Under CI's interpret lane (REPRO_KERNEL_MODE=interpret) the whole
+module runs with the Pallas kernel body executing every fused round,
+which is what "verified in interpret mode on CPU CI" means.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:        # pragma: no cover - exercised in slim containers
+    HAVE_HYPOTHESIS = False
+
+from conftest import run_sub
+from repro.continuum import SimConfig, make_topology, run_sim_stream
+from repro.continuum.control import ControlConfig
+from repro.continuum.simulator import PlayerSharding, build_sim_parts
+
+pytestmark = pytest.mark.kernels
+
+K, M = 12, 4
+HORIZON = 3.0
+WARM = 5
+
+STRATEGIES = (("qedgeproxy", {}), ("proxy_mity", dict(alpha=0.9)),
+              ("dec_sarsa", {}))
+# the closed-loop policy from tests/test_control.py, scaled to this
+# testbed: standby instances, admission shedding, 2 regions
+CTL = ControlConfig(managed=2, warmup=0.5, up_queue=2.0, down_queue=0.3,
+                    hold=0.3, action_cooldown=1.0, batch=1,
+                    admit=True, target_queue=3.0, admit_floor=0.3,
+                    regions=2, mig_threshold=2.0, mig_step=0.1)
+RES = dict(attempt_timeout=0.06, max_retries=1, breaker_threshold=3)
+
+
+def _inputs(seed=0, k=K, m=M):
+    rtt = make_topology(jax.random.PRNGKey(seed), k, m).lb_instance_rtt()
+    return rtt, jax.random.PRNGKey(seed + 7)
+
+
+def _assert_identical(fused, unfused, ctx=""):
+    """Fused == unfused bit for bit: no cross-shard reduction separates
+    the two programs, so EVERY accumulator field and series is exact —
+    counting stats and floats alike."""
+    for name in fused.acc._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.acc, name)),
+            np.asarray(getattr(unfused.acc, name)),
+            err_msg=f"{ctx} acc.{name}")
+    for name in fused.series._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.series, name)),
+            np.asarray(getattr(unfused.series, name)),
+            err_msg=f"{ctx} series.{name}")
+
+
+def _pair(strategy, seed=0, chunk=None, **cfg_kw):
+    rtt, key = _inputs(seed)
+    out = {}
+    for fr in (True, False):
+        cfg = SimConfig(horizon=HORIZON, fused_round=fr, **cfg_kw)
+        kw = dict(STRATEGIES)[strategy]
+        out[fr] = run_sim_stream(strategy, rtt, cfg, key,
+                                 warmup_steps=WARM,
+                                 chunk_steps=chunk if fr else None, **kw)
+    return out[True], out[False]
+
+
+# ---------------------------------------------------------------------------
+# the core matrix: strategies × {open-loop, resilient, closed-loop}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", [s for s, _ in STRATEGIES])
+@pytest.mark.parametrize("variant", ["plain", "resilient", "controlled"])
+def test_fused_matches_unfused(strategy, variant):
+    cfg_kw = {}
+    if variant == "resilient":
+        cfg_kw = dict(RES)       # fused statically falls back: must be a no-op
+    elif variant == "controlled":
+        cfg_kw = dict(control=CTL)
+    fused, unfused = _pair(strategy, **cfg_kw)
+    _assert_identical(fused, unfused, f"{strategy}/{variant}")
+
+
+def test_gating_is_static():
+    """The fused path must be OFF whenever a feature needs the
+    per-round structure — asserted on the builder's traced program, not
+    on run outputs (a fallback bug would otherwise only show as a perf
+    regression)."""
+    from repro.continuum.simulator import make_strategy
+    cfg = SimConfig(horizon=HORIZON)
+    # sequential engine (fused=False) never uses the megakernel
+    init_fn, _ = build_sim_parts("qedgeproxy", cfg, K, M, fused=False,
+                                 trace=False)
+    # resilience on: build must succeed and stay bit-exact (covered
+    # above); player sharding: must also build
+    build_sim_parts("qedgeproxy", SimConfig(horizon=HORIZON, **RES),
+                    K, M, trace=False)
+    build_sim_parts("qedgeproxy", cfg, K, M, trace=False,
+                    pshard=PlayerSharding("players", 2))
+    # dec_sarsa advertises no fused_round closure
+    assert make_strategy("dec_sarsa", cfg, K, M).get("fused_round") is None
+    assert make_strategy("qedgeproxy", cfg, K, M).get("fused_round")
+    assert make_strategy("proxy_mity", cfg, K, M).get("fused_round")
+
+
+# ---------------------------------------------------------------------------
+# kernel backends: the same differential assertion per ops mode
+# ---------------------------------------------------------------------------
+
+def test_round_kernel_conformance_per_mode(kernel_mode):
+    """ref oracle AND Pallas-interpret kernel body, against the unfused
+    scan — shorter horizon, interpret executes the kernel per step."""
+    rtt, key = _inputs(3)
+    cfg_f = SimConfig(horizon=1.5, fused_round=True)
+    cfg_u = SimConfig(horizon=1.5, fused_round=False)
+    fused = run_sim_stream("qedgeproxy", rtt, cfg_f, key)
+    unfused = run_sim_stream("qedgeproxy", rtt, cfg_u, key)
+    _assert_identical(fused, unfused, f"mode={kernel_mode}")
+
+
+def test_round_kernel_block_padding(kernel_mode):
+    """K not a multiple of the player block: padded rows must issue
+    nothing and leave every output row untouched."""
+    if kernel_mode == "ref":
+        pytest.skip("direct kernel call: interpret covers the body; "
+                    "the ref oracle IS the expected value")
+    from repro.kernels import ref, round_fused
+    k, m, C, R, Rq = 5, 3, 4, 8, 16
+    rng = np.random.default_rng(11)
+    args = dict(
+        weights=jnp.asarray(rng.dirichlet(np.ones(m), k), jnp.float32),
+        cw=jnp.asarray(rng.normal(0, 0.1, (k, m)), jnp.float32),
+        err=jnp.asarray(rng.integers(0, 3, (k, m)), jnp.int32),
+        cooldown_until=jnp.full((k, m), -1e30, jnp.float32),
+        in_pool=jnp.ones((k, m), bool),
+        active=jnp.ones((m,), bool),
+        lat_buf=jnp.zeros((k, m, R), jnp.float32),
+        ts_buf=jnp.full((k, m, R), -1e30, jnp.float32),
+        ptr=jnp.asarray(rng.integers(0, R, (k, m)), jnp.int32),
+        r_buf=jnp.zeros((k, Rq), jnp.float32),
+        rts_buf=jnp.full((k, Rq), -1e30, jnp.float32),
+        rptr=jnp.asarray(rng.integers(0, Rq, (k,)), jnp.int32),
+        q=jnp.asarray(rng.uniform(0, 2, (m,)), jnp.float32),
+        nc=jnp.asarray(rng.integers(0, C + 1, (k,)), jnp.int32),
+        z=jnp.asarray(rng.lognormal(0, 0.25, (C, k)), jnp.float32),
+        rtt_t=jnp.asarray(rng.uniform(0.005, 0.08, (k, m)), jnp.float32),
+        s_m=jnp.full((m,), 0.0055, jnp.float32),
+        served_per_round=jnp.full((m,), 0.1 / (C * 0.0055), jnp.float32),
+        t=jnp.float32(2.0),
+    )
+    statics = dict(tau=0.08, err_thresh=2, cooldown=1.0)
+    want = ref.round_step_swrr(**args, **statics)
+    got = round_fused.round_step_swrr(
+        **args, **statics, interpret=True,
+        block_k=4)    # forces one padded block (5 -> 8 rows)
+    for name, a, b in zip(want._fields, want, got):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"round_fused {name}")
+
+
+# ---------------------------------------------------------------------------
+# chunked horizons
+# ---------------------------------------------------------------------------
+
+def test_fused_chunked_matches_unfused_unchunked():
+    fused_chunked, unfused = _pair("qedgeproxy", chunk=7)
+    _assert_identical(fused_chunked, unfused, "chunked")
+
+
+# ---------------------------------------------------------------------------
+# player shards: 8/2/1-way sharded runs auto-fall-back to the scan and
+# must still match the unsharded FUSED engine exactly on counting stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fused_vs_sharded_8dev():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, make_topology,
+                                     run_sim_players, run_sim_stream)
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, WARM = 16, 4, 10
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n"}
+        fused = run_sim_stream(
+            "qedgeproxy", rtt, SimConfig(horizon=4.0, fused_round=True),
+            key, warmup_steps=WARM)
+        for D in (8, 2, 1):
+            mesh = make_continuum_mesh(players=D, devices=jax.devices()[:D])
+            got = run_sim_players(
+                "qedgeproxy", rtt, SimConfig(horizon=4.0, fused_round=True),
+                key, warmup_steps=WARM, mesh=mesh)
+            for name in fused.acc._fields:
+                a = np.asarray(getattr(fused.acc, name))
+                b = np.asarray(getattr(got.acc, name))
+                if name in COUNTS:
+                    np.testing.assert_array_equal(
+                        b, a, err_msg=f"D{D} {name}")
+                else:
+                    np.testing.assert_allclose(
+                        b, a, rtol=1e-5, atol=1e-5, err_msg=f"D{D} {name}")
+            np.testing.assert_array_equal(
+                np.asarray(got.series.succ), np.asarray(fused.series.succ),
+                err_msg=f"D{D} series.succ")
+            print("D", D, "ok")
+        print("OK fused-vs-sharded")
+    """)
+    assert "OK fused-vs-sharded" in out
+
+
+# ---------------------------------------------------------------------------
+# randomized configs (hypothesis optional, per PR 1 convention)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=5)
+    @given(st.integers(0, 2**16), st.integers(1, 6), st.sampled_from([2, 3, 5]),
+           st.sampled_from([8, 16, 12]), st.floats(0.05, 0.12),
+           st.booleans())
+    def test_fused_matches_unfused_random_config(seed, max_clients, m, ring,
+                                                 tau, controlled):
+        k = 7
+        rtt = make_topology(jax.random.PRNGKey(seed), k, m).lb_instance_rtt()
+        key = jax.random.PRNGKey(seed ^ 0x5bd1)
+        cfg_kw = dict(horizon=1.5, max_clients=max_clients, ring=ring,
+                      reward_ring=32, tau=tau,
+                      control=CTL if controlled else None)
+        fused = run_sim_stream(
+            "qedgeproxy", rtt, SimConfig(fused_round=True, **cfg_kw), key)
+        unfused = run_sim_stream(
+            "qedgeproxy", rtt, SimConfig(fused_round=False, **cfg_kw), key)
+        _assert_identical(fused, unfused, f"random seed={seed}")
+else:
+    def test_fused_random_config_needs_hypothesis():
+        pytest.importorskip("hypothesis")
