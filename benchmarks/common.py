@@ -28,6 +28,7 @@ To exercise the sharded path on CPU (CI or this container):
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 from repro.continuum import (Scenario, SimConfig, build_sim_grid_fn,
                              compile_scenario, make_topology, stack_drivers)
 from repro.launch.mesh import make_grid_mesh
+from repro.obs import provenance as obs_provenance
 
 SCENARIOS = (1, 2, 3, 4, 5)
 STRATEGIES = (
@@ -155,8 +157,9 @@ def get_suite():
     SUITE_TIMINGS["devices"] = int(mesh.devices.size)
     for (label, kw), exe in zip(STRATEGIES, compiled):
         t0 = time.perf_counter()
-        outs = exe(rtts, drivers, keys)
-        jax.block_until_ready(outs)
+        with maybe_profile(f"suite_run_{label}"):
+            outs = exe(rtts, drivers, keys)
+            jax.block_until_ready(outs)
         t_run = time.perf_counter() - t0
         SUITE_TIMINGS[label] = {"run_s": t_run,
                                 "scenarios": len(SCENARIOS),
@@ -184,12 +187,41 @@ def suite_build():
 
 
 def emit(name: str, us_per_call: float, derived, payload=None):
-    """CSV line per the harness contract + JSON artifact."""
+    """CSV line per the harness contract + JSON artifact.
+
+    Every dict payload is stamped with a ``provenance`` block (schema
+    version, git sha, jax version, backend, device count, hash of the
+    suite's ``SimConfig``) via ``repro.obs.provenance`` — additive keys,
+    so artifact readers that index the payload shape are untouched.
+    ``repro.obs.provenance.validate_all(RESULTS_DIR)`` round-trips the
+    directory (the obs CI lane runs it)."""
     print(f"{name},{us_per_call:.1f},{derived}")
     os.makedirs(RESULTS_DIR, exist_ok=True)
     if payload is not None:
+        if isinstance(payload, dict):
+            obs_provenance.stamp(payload, CFG,
+                                 extra={"benchmark": name, "smoke": SMOKE})
         with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
             json.dump(payload, f, indent=1, default=float)
+
+
+@contextlib.contextmanager
+def maybe_profile(name: str):
+    """Optional ``jax.profiler`` capture around a benchmark phase.
+
+    Off unless ``REPRO_PROFILE_DIR`` is set; then each wrapped phase
+    writes a TensorBoard-loadable trace under
+    ``$REPRO_PROFILE_DIR/<name>/``. Keeping the hook here (the one
+    place every benchmark already imports) means any cell can be
+    profiled without touching benchmark code."""
+    prof_dir = os.environ.get("REPRO_PROFILE_DIR", "")
+    if not prof_dir:
+        yield
+        return
+    out = os.path.join(prof_dir, name)
+    os.makedirs(out, exist_ok=True)
+    with jax.profiler.trace(out):
+        yield
 
 
 def timed(fn, *args, repeat=1, **kw):

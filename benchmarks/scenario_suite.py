@@ -46,13 +46,10 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, strategy_name, timed
-from repro.continuum import (ControlConfig, breaker_open_fraction_stream,
-                             build_sim_grid_fn,
-                             client_qos_satisfaction_stream, compile_scenario,
-                             control_stats_stream, event_recovery,
-                             get_library, jain_fairness_stream, make_topology,
-                             per_tenant_qos_spread, resilience_stats_stream,
+from repro.continuum import (ControlConfig, build_sim_grid_fn,
+                             compile_scenario, get_library, make_topology,
                              stack_drivers, with_standby)
+from repro.obs.registry import stream_cell
 
 # contrast pair: the adaptive balancer vs the static-proximity baseline
 SUITE_STRATEGIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
@@ -209,21 +206,14 @@ def _degradation_payload():
         row = {}
         for label, knobs in DEGRADE_POLICIES:
             o = suite[(name, label)]
-            rec = event_recovery(o.acc, common.CFG.ev_bucket)
-            cell = {
-                "qos_sat_pct": client_qos_satisfaction_stream(
-                    o.acc, common.CFG.rho),
-                **resilience_stats_stream(o.acc),
-            }
-            if knobs.get("breaker_threshold"):
-                cell["breaker_open_frac"] = float(
-                    jnp.asarray(breaker_open_fraction_stream(o.acc))
-                    .mean())
-            if rec:
-                cell["worst_dip"] = min(r["dip"] for r in rec)
-                cell["unrecovered_events"] = sum(
-                    1 for r in rec if not r["recovered"])
-            row[label] = cell
+            # shared registry cell builder (repro.obs.registry): same
+            # key set the hand-rolled dict produced, so the artifact
+            # shape is unchanged
+            row[label] = stream_cell(
+                o, rho=common.CFG.rho, bucket_s=common.CFG.ev_bucket,
+                resilience=True,
+                breaker_frac=bool(knobs.get("breaker_threshold")),
+                max_recovery=False)
         out[name] = row
     return out
 
@@ -283,27 +273,9 @@ def _control_payload():
         row = {}
         for label, _ in CONTROL_POLICIES:
             o = suite[(name, label)]
-            rec = event_recovery(o.acc, common.CFG.ev_bucket)
-            spread = per_tenant_qos_spread(o.acc)
-            cell = {
-                "qos_sat_pct": client_qos_satisfaction_stream(
-                    o.acc, common.CFG.rho),
-                "jain": jain_fairness_stream(o.acc),
-                "tenant_qos_spread": spread["spread"],
-                "tenant_qos_min": spread["min"],
-                "drop_rate": resilience_stats_stream(
-                    o.acc)["drop_rate"],
-            }
-            if rec:
-                cell["worst_dip"] = min(r["dip"] for r in rec)
-                recovered = [r["recovery_s"] for r in rec
-                             if r["recovered"]]
-                cell["unrecovered_events"] = len(rec) - len(recovered)
-                if recovered:
-                    cell["max_recovery_s"] = max(recovered)
-            if o.ctrl is not None:
-                cell.update(control_stats_stream(o.acc, o.ctrl))
-            row[label] = cell
+            row[label] = stream_cell(
+                o, rho=common.CFG.rho, bucket_s=common.CFG.ev_bucket,
+                jain=True, tenants=True, drop_rate=True, control=True)
         out[name] = row
     return out
 
@@ -316,22 +288,10 @@ def scenario_suite():
         for name in suite["names"]:
             row = {}
             for label, _ in SUITE_STRATEGIES:
-                o = suite[(name, label)]
-                rec = event_recovery(o.acc, common.CFG.ev_bucket)
-                cell = {
-                    "qos_sat_pct": client_qos_satisfaction_stream(
-                        o.acc, common.CFG.rho),
-                    "jain": jain_fairness_stream(o.acc),
-                    "events": len(rec),
-                }
-                if rec:
-                    cell["worst_dip"] = min(r["dip"] for r in rec)
-                    recovered = [r["recovery_s"] for r in rec
-                                 if r["recovered"]]
-                    cell["unrecovered_events"] = len(rec) - len(recovered)
-                    if recovered:
-                        cell["max_recovery_s"] = max(recovered)
-                row[label] = cell
+                row[label] = stream_cell(
+                    suite[(name, label)], rho=common.CFG.rho,
+                    bucket_s=common.CFG.ev_bucket, jain=True,
+                    n_events=True)
             out[name] = row
         out["graceful_degradation"] = _degradation_payload()
         out["closed_loop"] = _control_payload()

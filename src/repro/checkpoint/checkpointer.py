@@ -77,8 +77,16 @@ class Checkpointer:
         self._thread: Optional[threading.Thread] = None
 
     # -- save ---------------------------------------------------------
-    def save(self, step: int, tree: Any, blocking: bool = True) -> str:
-        """Snapshot on the caller thread, write (optionally) async."""
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             meta: Optional[dict] = None) -> str:
+        """Snapshot on the caller thread, write (optionally) async.
+
+        ``meta`` is an optional JSON-serialisable dict stored verbatim
+        in the manifest (``manifest["meta"]``) — run provenance, config
+        hashes, recorder cursors. It is observability payload only:
+        restore ignores it entirely, so old readers and version-2
+        manifests without the key are unaffected.
+        """
         arrays, _ = _flatten(tree)
         manifest = {
             "schema": SCHEMA_VERSION,
@@ -86,6 +94,8 @@ class Checkpointer:
             "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                      for k, v in arrays.items()},
         }
+        if meta is not None:
+            manifest["meta"] = meta
 
         def write():
             final = os.path.join(self.dir, f"step_{step:08d}")

@@ -103,10 +103,14 @@ class StreamOutputs(NamedTuple):
     """``ctrl`` carries the control plane's ``ControlCounters`` when a
     closed-loop config is enabled (``repro.continuum.control``) and is
     ``None`` — an empty pytree subtree — on every open-loop run, so
-    existing consumers and tree maps are untouched."""
+    existing consumers and tree maps are untouched. ``rec`` likewise
+    carries the flight recorder's ``RecorderState`` ring
+    (``repro.obs.recorder``) when ``SimConfig.recorder`` is enabled,
+    else ``None``; decode it with ``repro.obs.recorder_events``."""
     acc: MetricAccumulator
     series: StepSeries
     ctrl: object = None
+    rec: object = None
 
 
 def init_accumulator(K: int, M: int, C: int,
@@ -531,17 +535,33 @@ def event_recovery(acc_or_windows, bucket_s: float,
                    threshold: float = 0.95) -> list[dict]:
     """Per-event adaptation statistics from the recovery windows.
 
-    Returns one dict per real (non-sentinel, data-bearing) event:
-    ``pre`` (baseline QoS ratio in the pre-window), ``dip`` (worst
-    post-bucket ratio, and its time as ``dip_s``), ``steady`` (mean of
-    the last ≤3 data-bearing post buckets), ``recovered`` (whether QoS
-    came back within the observed windows), and ``recovery_s`` — the
-    left edge of the first post bucket at or after the dip with ratio
-    ≥ ``threshold * steady`` (``None`` when it never does), i.e. the
-    Fig 10/11-style time-to-recover, now available for any scenario
-    for free. Ramped events (flash crowds) dip several buckets after
-    their onset mark, which is why recovery is measured from the dip,
-    not from bucket 0.
+    Returns one dict per real (non-sentinel) event: ``pre`` (baseline
+    QoS ratio in the pre-window), ``dip`` (worst post-bucket ratio, and
+    its time as ``dip_s``), ``steady`` (mean of the last ≤3
+    data-bearing post buckets), ``recovered`` (whether QoS came back
+    within the observed windows), and ``recovery_s`` — the left edge of
+    the first post bucket at or after the dip with ratio ≥ ``threshold
+    * steady`` (``None`` when it never does), i.e. the Fig 10/11-style
+    time-to-recover, now available for any scenario for free. Ramped
+    events (flash crowds) dip several buckets after their onset mark,
+    which is why recovery is measured from the dip, not from bucket 0.
+
+    Degenerate windows are NaN-explicit rather than silently absent or
+    spuriously "recovered":
+
+    * an event with *no* data-bearing post bucket (e.g. every
+      post-event request shed, or the event at the horizon edge) still
+      yields a record — ``pre`` from the pre-window (itself ``nan``
+      when the pre-window had no requests), ``dip``/``dip_s``/
+      ``steady`` as ``nan``, ``recovered=False``, ``recovery_s=None``;
+    * a non-positive or non-finite ``steady`` (all-shed tail: every
+      request in the last buckets missed) makes the recovery threshold
+      meaningless — ``ratio >= threshold * 0`` holds vacuously — so the
+      event reports ``recovered=False``/``recovery_s=None`` instead of
+      an instant recovery at the dip.
+
+    Sentinel rows (mark = -1: all-zero windows, no pre *and* no post
+    data) are skipped as before.
     """
     if isinstance(acc_or_windows, MetricAccumulator):
         ev_s = np.asarray(acc_or_windows.ev_succ, np.float64)
@@ -552,19 +572,32 @@ def event_recovery(acc_or_windows, bucket_s: float,
     for e in range(ev_s.shape[0]):
         post_n = ev_n[e, 1:]
         has = post_n > 0
+        pre = (ev_s[e, 0] / ev_n[e, 0]) if ev_n[e, 0] > 0 else float("nan")
         if not has.any():
+            if ev_n[e, 0] <= 0:
+                continue            # sentinel row: no data anywhere
+            out.append({
+                "pre": float(pre),
+                "dip": float("nan"),
+                "dip_s": float("nan"),
+                "steady": float("nan"),
+                "recovered": False,
+                "recovery_s": None,
+            })
             continue
         ratio = ev_s[e, 1:][has] / post_n[has]
-        pre = (ev_s[e, 0] / ev_n[e, 0]) if ev_n[e, 0] > 0 else float("nan")
         steady = float(ratio[-3:].mean())
         dip_idx = int(np.argmin(ratio))
-        rec_mask = ratio[dip_idx:] >= threshold * steady
         bucket_left = np.flatnonzero(has)
-        if rec_mask.any():
-            rec_idx = dip_idx + int(np.argmax(rec_mask))
-            recovery_s = float(bucket_left[rec_idx] * bucket_s)
-        else:                    # still degrading at the window edge
-            recovery_s = None
+        if not np.isfinite(steady) or steady <= 0.0:
+            recovery_s = None       # no meaningful recovery level
+        else:
+            rec_mask = ratio[dip_idx:] >= threshold * steady
+            if rec_mask.any():
+                rec_idx = dip_idx + int(np.argmax(rec_mask))
+                recovery_s = float(bucket_left[rec_idx] * bucket_s)
+            else:                   # still degrading at the window edge
+                recovery_s = None
         out.append({
             "pre": float(pre),
             "dip": float(ratio.min()),

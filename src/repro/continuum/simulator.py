@@ -108,6 +108,7 @@ from repro.core import prand
 from repro.core.kde import normal_cdf
 from repro.core.oracle import step_regret
 from repro.kernels import ops as kernel_ops
+from repro.obs import recorder as obr
 
 
 @dataclass(frozen=True)
@@ -159,6 +160,13 @@ class SimConfig:
     # byte-identical open-loop program — same parity discipline as the
     # resilience knobs above. ---
     control: "qc.ControlConfig | None" = None
+    # --- flight recorder (repro.obs.recorder): a fixed-capacity ring
+    # of structured (step, kind, entity, value) events in the scan
+    # carry — breaker trips/resets, retry exhaustions, control actions,
+    # scenario marks, QoS-miss spikes. None or a disabled
+    # RecorderConfig traces the byte-identical program — same parity
+    # discipline as the resilience and control knobs. ---
+    recorder: "obr.RecorderConfig | None" = None
     # --- fused round megakernel (kernels/ops.round_step): collapse the
     # C-round scan body to one fused call with the bandit block's state
     # resident across rounds (VMEM on the Pallas path, an unrolled
@@ -179,6 +187,10 @@ class SimConfig:
     @property
     def control_on(self) -> bool:
         return qc.control_enabled(self)
+
+    @property
+    def recorder_on(self) -> bool:
+        return obr.recorder_enabled(self)
 
 
 class PlayerSharding(NamedTuple):
@@ -520,10 +532,15 @@ def build_sim_parts(
     disagree with the rows they describe.
 
     The carry is ``(state, queue, prev_active, acc, groups, pids,
-    breaker, control)`` with ``acc=None`` in trace mode,
-    ``breaker=None`` unless the config enables circuit breakers, and
+    breaker, control, recorder)`` with ``acc=None`` in trace mode,
+    ``breaker=None`` unless the config enables circuit breakers,
     ``control=None`` unless ``cfg.control`` enables a closed-loop
-    mechanism.
+    mechanism, and ``recorder=None`` unless ``cfg.recorder`` enables
+    the flight recorder (``repro.obs.recorder`` — a bounded ring of
+    structured events appended at step end from already-computed
+    shard-local quantities; fleet-level lanes are recorded only by the
+    shard holding global player 0, so the players axis costs no new
+    collective).
 
     **Closed-loop control plane** (``cfg.control`` enabled): a
     ``control.ControlCarry`` rides in the scan next to the breaker
@@ -590,6 +607,12 @@ def build_sim_parts(
         raise ValueError(
             "the control plane is streaming-only: closed-loop runs are "
             "fleet-scale by construction (set trace=False)")
+    rcfg = cfg.recorder
+    rec_on = obr.recorder_enabled(cfg)
+    if rec_on and trace:
+        raise ValueError(
+            "the flight recorder is streaming-only: trace=True already "
+            "materializes full trajectories (set trace=False)")
     n_attempts = 1 + (cfg.max_retries if res_on else 0)
     censor = (qb.censored_latency(cfg.attempt_timeout, cfg.tau)
               if res_on else 0.0)
@@ -645,11 +668,14 @@ def build_sim_parts(
         # K here is the LOCAL width: controller token buckets and shed
         # counters are per-player and stay shard-local
         ctl = qc.control_init(ccfg, K, M) if ctl_on else None
+        # the ring is per-shard state: K here is the local width, and
+        # each shard retains its own most-recent `capacity` events
+        rec = obr.recorder_init(rcfg, K, M, brk_on) if rec_on else None
         keys = jax.random.split(k_scan, T)
-        return (s0, q0, active0, acc, groups, pids, brk, ctl), keys
+        return (s0, q0, active0, acc, groups, pids, brk, ctl, rec), keys
 
     def step_fn(rtt, marks, carry, xs):
-        state, q, prev_active, acc, groups, pids, brk, ctl = carry
+        state, q, prev_active, acc, groups, pids, brk, ctl, rec = carry
         t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step, group = xs
         t = t_idx.astype(jnp.float32) * cfg.dt
 
@@ -665,8 +691,17 @@ def build_sim_parts(
         if ctl_on:
             measf = (t_idx >= warmup_steps).astype(jnp.float32)
             nc_sched = nc
+            ctl_cnt_pre = ctl.counters
             ctl, act, nc, s_m, _shed = qc.control_actuate(
                 ccfg, cfg.dt, t, ctl, q, act, nc, s_m, measf)
+            # control actions for the flight recorder: this step's
+            # counter increments (already warmup-gated, replicated
+            # across shards — no collective needed to observe them)
+            ctl_deltas = (
+                ctl.counters.scale_up - ctl_cnt_pre.scale_up,
+                ctl.counters.scale_down - ctl_cnt_pre.scale_down,
+                ctl.counters.migrations - ctl_cnt_pre.migrations,
+            ) if rec_on else None
 
         # --- scenario modulation: effective RTT and service row for
         # THIS step. The partition term is the factored rank-1 AND
@@ -927,6 +962,11 @@ def build_sim_parts(
                 m_all = jnp.transpose(am_r, (2, 0, 1)).reshape(K, C * A)
                 state = strat["record_rings"](state, ch_all, obs_all, t,
                                               m_all)
+        # retry exhaustions for the flight recorder: snapshot the
+        # deadline-dropped counts BEFORE admission sheds are merged
+        # into dropped_kc below (sheds get their own event kind)
+        retry_drop_k = (dropped_kc.astype(jnp.float32).sum(-1)
+                        if rec_on and res_on else None)
         if ctl_on and ccfg.admit:
             # admission-shed slots: issued from the client's view (a
             # denied client is a failed client — shedding can only win
@@ -980,7 +1020,24 @@ def build_sim_parts(
             if pshard is not None:
                 obs = jax.lax.psum(obs, pshard.axis)
             ctl = qc.control_observe(ccfg, ctl, obs, cfg.dt)
-        return (state, q, act, acc, groups, pids, brk, ctl), ys
+        if rec_on:
+            # flight recorder: append this step's events from
+            # quantities the step already computed — per-player lanes
+            # are shard-local, fleet lanes (marks, control actions) are
+            # recorded only by the shard holding global player 0, so
+            # there is no new collective on the players axis.
+            issf_r = issued.astype(jnp.float32)
+            rec = obr.record_step(
+                rcfg, rec, t_idx=t_idx, pids=pids, marks=marks,
+                miss_k=((1.0 - rewards) * issf_r).sum(-1),
+                iss_k=issf_r.sum(-1),
+                retry_drop_k=retry_drop_k,
+                shed_k=(shed_kc.astype(jnp.float32).sum(-1)
+                        if ctl_on and ccfg.admit else None),
+                open_now=(qb.breaker_is_open(brk, t) if brk_on
+                          else None),
+                ctl_deltas=ctl_deltas if ctl_on else None)
+        return (state, q, act, acc, groups, pids, brk, ctl, rec), ys
 
     return init_fn, step_fn
 
@@ -1070,8 +1127,13 @@ def build_sim_fn(
         # decision input is replicated), shed_k is per-player and
         # concatenates like the other (K,) accumulator fields
         ctl = carry[7]
+        # the recorder ring is per-shard state and stays shard-local:
+        # under player sharding the out-spec concatenates the rings
+        # ((cap,) -> (D*cap,)) and pointers ((1,) -> (D,));
+        # obs.recorder.recorder_events decodes either layout.
         return StreamOutputs(acc=acc, series=ys,
-                             ctrl=ctl.counters if ctl is not None else None)
+                             ctrl=ctl.counters if ctl is not None else None,
+                             rec=carry[8])
 
     return run
 
@@ -1205,7 +1267,8 @@ def _mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False):
+def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False,
+                  rec_on: bool = False):
     """``shard_map`` specs for a (possibly vmapped) streaming run.
 
     Resolved per field through the logical rule table
@@ -1262,7 +1325,17 @@ def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False):
             scale_down=spec(),
             migrations=spec(),
             ctrl_up_m=spec(None),                 # fleet-level, replicated
-            steps=spec())))
+            steps=spec())),
+        rec=(None if not rec_on else obr.RecorderState(
+            # each shard keeps its own ring; the out-spec concatenates
+            # them along the players axis ((cap,) -> (D*cap,)) and the
+            # (1,) pointers to (D,) — recorder_events splits them back
+            step=spec("players"),
+            kind=spec("players"),
+            entity=spec("players"),
+            value=spec("players"),
+            ptr=spec("players"),
+            prev_open=spec("players", None))))
     return in_specs, out_specs
 
 
@@ -1339,7 +1412,8 @@ def build_sim_grid_fn(
         return vrun, mesh
 
     in_specs, out_specs = _stream_specs(mesh, lead=("grid",),
-                                        ctrl_on=qc.control_enabled(cfg))
+                                        ctrl_on=qc.control_enabled(cfg),
+                                        rec_on=obr.recorder_enabled(cfg))
     if pshard is None:
         inner = shard_map(vrun, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
@@ -1504,7 +1578,8 @@ def build_sim_players_fn(
                        warmup_steps=warmup_steps,
                        pshard=PlayerSharding("players", Dp), **strategy_kw)
     in_specs, out_specs = _stream_specs(mesh,
-                                        ctrl_on=qc.control_enabled(cfg))
+                                        ctrl_on=qc.control_enabled(cfg),
+                                        rec_on=obr.recorder_enabled(cfg))
     # global player ids ride in as a sharded operand (see
     # build_sim_parts): the shard's identity arrives on the same data
     # path as its rtt rows
@@ -1629,7 +1704,10 @@ def run_sim_stream(
     done: StepSeries | None = None    # host-side series drained so far
     if checkpoint_dir is not None:
         from repro.checkpoint import Checkpointer
+        from repro.obs import provenance as obs_provenance
         ckpt = Checkpointer(checkpoint_dir)
+        ckpt_meta = {"config_hash": obs_provenance.config_hash(cfg),
+                     "horizon_steps": int(T)}
         if resume and ckpt.latest_step() is not None:
             # the carry from init_fn is only a structure template here:
             # leaf shapes/dtypes come from the npz, so the restored
@@ -1670,12 +1748,17 @@ def run_sim_stream(
         chunks_done += 1
         if ckpt is not None and hi < T and chunks_done % checkpoint_every == 0:
             # save() snapshots to numpy before returning, so the async
-            # write never races the next chunk's donation
+            # write never races the next chunk's donation; the manifest
+            # meta identifies the run (restore ignores it)
             ckpt.save(hi, {"carry": carry, "series": drain()},
-                      blocking=False)
+                      blocking=False, meta=ckpt_meta)
     series = drain()
     if ckpt is not None:
         ckpt.wait()
     ctl = carry[7]
+    # the recorder ring rides the chunked carry (and therefore the
+    # checkpoint template above) like any other state — chunked,
+    # checkpointed and resumed runs end with the bit-identical ring
     return StreamOutputs(acc=carry[3], series=series,
-                         ctrl=ctl.counters if ctl is not None else None)
+                         ctrl=ctl.counters if ctl is not None else None,
+                         rec=carry[8])

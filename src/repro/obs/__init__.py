@@ -1,0 +1,50 @@
+"""Observability subsystem: flight recorder, unified metrics registry,
+trace export, provenance.
+
+Only :mod:`repro.obs.recorder` is imported eagerly — it is
+dependency-free (jax + numpy) and is what the simulator needs at import
+time. Everything else (registry, trace, provenance, runlog, report)
+imports ``repro.continuum`` and is exposed lazily to avoid a circular
+import: ``repro.continuum.simulator`` imports ``repro.obs`` while the
+``repro.continuum`` package is itself mid-import.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.obs import recorder
+from repro.obs.recorder import (  # noqa: F401  (re-exported surface)
+    FLEET,
+    KIND_BREAKER_RESET,
+    KIND_BREAKER_TRIP,
+    KIND_MARK,
+    KIND_MIGRATE,
+    KIND_QOS_SPIKE,
+    KIND_RETRY_EXHAUSTED,
+    KIND_SCALE_DOWN,
+    KIND_SCALE_UP,
+    KIND_SHED,
+    KIND_NAMES,
+    Event,
+    RecorderConfig,
+    RecorderState,
+    events_appended,
+    events_dropped,
+    kind_name,
+    recorder_enabled,
+    recorder_events,
+    recorder_init,
+    record_step,
+)
+
+_LAZY = ("registry", "trace", "provenance", "runlog", "report")
+
+__all__ = ["recorder", *_LAZY, "RecorderConfig", "RecorderState", "Event"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        mod = importlib.import_module(f"repro.obs.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

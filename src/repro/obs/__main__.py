@@ -1,0 +1,183 @@
+"""``python -m repro.obs`` — the observability CLI.
+
+* ``report <run_dir>`` renders a run directory written by
+  :func:`repro.obs.runlog.write_run` (timeline, recovery windows,
+  provenance, overhead figures).
+* ``smoke [--out DIR]`` is the CI `obs` lane body: drive the
+  ``retry_storm`` scenario with the flight recorder on, export the
+  full run directory, validate every file against its schema, replay
+  the recorded scenario-mark timeline against the accumulator's
+  event windows, and (when the committed ``bandit_scale`` artifact is
+  present) assert the recorded K=1000×M=50 recorder overhead anchor is
+  under 1.10×.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+
+def _cmd_report(args) -> int:
+    from repro.obs import report
+    print(report.render(args.run_dir))
+    return 0
+
+
+def _cmd_smoke(args) -> int:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.continuum import (compile_scenario, event_recovery,
+                                 get_library, make_topology)
+    from repro.continuum.simulator import SimConfig, run_sim_stream
+    from repro.obs import (KIND_MARK, RecorderConfig, recorder_events,
+                           registry, runlog, trace)
+
+    K, M = 30, 10
+    warm = 50
+    base = dict(horizon=args.horizon, tau=0.150, attempt_timeout=0.090,
+                max_retries=2, retry_backoff=0.002, breaker_threshold=5,
+                breaker_cooldown=1.0)
+    cfg_off = SimConfig(**base)
+    cfg_on = SimConfig(**base, recorder=RecorderConfig(capacity=4096))
+
+    topo = make_topology(jax.random.PRNGKey(1), K, M)
+    rtt = topo.lb_instance_rtt()
+    lib = get_library(cfg_on.horizon, K, M)
+    drv = compile_scenario(lib["retry_storm"], cfg_on,
+                           jax.random.PRNGKey(7))
+    key = jax.random.PRNGKey(11)
+    timeline = trace.HostTimeline()
+
+    def run(cfg, label):
+        with timeline.span(f"run:{label}", "dispatch"):
+            out = run_sim_stream("qedgeproxy", rtt, cfg, key,
+                                 drivers=drv, warmup_steps=warm)
+            jax.block_until_ready(out.acc)
+        return out
+
+    run(cfg_off, "warmup_off")              # compile + warm
+    t0 = time.perf_counter()
+    out_off = run(cfg_off, "recorder_off")
+    off_s = time.perf_counter() - t0
+    run(cfg_on, "warmup_on")
+    t0 = time.perf_counter()
+    out_on = run(cfg_on, "recorder_on")
+    on_s = time.perf_counter() - t0
+    steps = cfg_on.num_steps
+    ratio = on_s / max(off_s, 1e-9)
+    print(f"smoke cell K={K} M={M} T={steps}: recorder off "
+          f"{off_s * 1e6 / steps:.1f} us/step, on "
+          f"{on_s * 1e6 / steps:.1f} us/step "
+          f"(ratio {ratio:.3f}, informational — the gate is the "
+          f"committed anchor)")
+
+    # recorder on/off parity on every accumulator field
+    mismatch = [
+        f for f in out_off.acc._fields
+        if not np.array_equal(np.asarray(getattr(out_off.acc, f)),
+                              np.asarray(getattr(out_on.acc, f)))]
+    if mismatch:
+        print(f"FAIL: recorder changed accumulator fields {mismatch}")
+        return 1
+
+    # replay check: the recorded scenario-mark timeline must match the
+    # accumulator's event windows exactly — same count, same steps
+    evs = recorder_events(out_on.rec)
+    mark_evs = sorted(e.step for e in evs if e.kind == KIND_MARK)
+    marks = sorted(int(m) for m in np.asarray(drv.marks) if m >= 0)
+    recs = event_recovery(out_on.acc, cfg_on.ev_bucket)
+    if mark_evs != marks or len(recs) != len(marks):
+        print(f"FAIL: recorded marks {mark_evs} vs scenario marks "
+              f"{marks} vs {len(recs)} event windows")
+        return 1
+    print(f"replay: {len(mark_evs)} recorded marks == scenario marks "
+          f"== {len(recs)} accumulator event windows")
+
+    # export + validate the run directory
+    out_dir = args.out or tempfile.mkdtemp(prefix="obs_smoke_")
+    ms = registry.collect_stream(out_on, rho=cfg_on.rho, dt=cfg_on.dt,
+                                 bucket_s=cfg_on.ev_bucket)
+    with timeline.span("export", "host"):
+        runlog.write_run(
+            out_dir, metrics=ms, rec=out_on.rec, dt=cfg_on.dt,
+            timeline=timeline, config=cfg_on,
+            manifest_extra={
+                "label": "obs_smoke:retry_storm",
+                "overhead_ratio": ratio,
+                "recorder_us_per_step": on_s * 1e6 / steps,
+                "baseline_us_per_step": off_s * 1e6 / steps,
+            })
+    problems = {f: p for f, p in runlog.validate_run(out_dir).items() if p}
+    if problems:
+        print(f"FAIL: schema validation {problems}")
+        return 1
+    print(f"run dir {out_dir}: all schemas valid")
+
+    # trace replay: the exported Chrome trace must carry the same mark
+    # timeline at the right simulated timestamps
+    with open(os.path.join(out_dir, "trace.json")) as f:
+        doc = json.load(f)
+    tr_marks = sorted(
+        round(e["ts"] / (cfg_on.dt * 1e6))
+        for e in doc["traceEvents"]
+        if e.get("ph") == "i" and e.get("name") == "scenario_mark")
+    if tr_marks != marks:
+        print(f"FAIL: trace marks {tr_marks} != scenario marks {marks}")
+        return 1
+    print(f"trace replay: {len(tr_marks)} scenario_mark instants at the "
+          f"exact mark steps")
+
+    # the committed benchmark anchor is the actual overhead gate: the
+    # K=1000xM=50 scale cell is the hard bound (small cells are noisy
+    # on loaded CI runners and print informationally)
+    if os.path.exists(args.anchor):
+        with open(args.anchor) as f:
+            anchor = json.load(f)
+        cells = {k: v for k, v in anchor.items()
+                 if isinstance(v, dict) and "recorder_overhead" in v}
+        if not cells:
+            print(f"FAIL: {args.anchor} has no recorder_overhead cells")
+            return 1
+        if "K1000_M50" not in cells:
+            print(f"FAIL: {args.anchor} lacks the K1000_M50 anchor cell")
+            return 1
+        for name, cell in sorted(cells.items()):
+            ov = cell["recorder_overhead"]
+            gated = name == "K1000_M50"
+            print(f"anchor {name}: recorder_overhead {ov:.3f}"
+                  + ("" if gated else " (informational)"))
+            if gated and ov >= 1.10:
+                print(f"FAIL: {name} recorder overhead {ov:.3f} >= 1.10")
+                return 1
+    else:
+        print(f"anchor {args.anchor} not present; skipping overhead gate")
+    print("obs smoke OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    pr = sub.add_parser("report", help="render a run directory")
+    pr.add_argument("run_dir")
+    pr.set_defaults(fn=_cmd_report)
+    ps = sub.add_parser("smoke", help="CI obs lane: record, export, "
+                                      "validate, replay")
+    ps.add_argument("--out", default=None, help="run directory to write")
+    ps.add_argument("--horizon", type=float, default=60.0)
+    ps.add_argument("--anchor",
+                    default="results/benchmarks/bandit_scale.json",
+                    help="bandit_scale artifact with the overhead anchor")
+    ps.set_defaults(fn=_cmd_smoke)
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

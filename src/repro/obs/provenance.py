@@ -1,0 +1,134 @@
+"""Provenance stamping for result artifacts.
+
+Every ``results/benchmarks/*.json`` payload gains a ``provenance`` key
+recording what produced it: artifact schema version, git sha, jax
+version, backend, device count and a content hash of the benchmark's
+``SimConfig``. The stamp is additive — keys are merged into the
+existing payload dict, never wrapped around it — so artifact readers
+written before the stamp keep working unchanged.
+
+:func:`validate_artifact`/:func:`validate_all` are the round-trip gate:
+they re-parse an artifact and check its provenance block's presence and
+field types, and CI runs them over the whole results directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+
+ARTIFACT_SCHEMA_VERSION = 1
+
+_FIELDS = {
+    "schema_version": int,
+    "git_sha": str,
+    "jax_version": str,
+    "backend": str,
+    "device_count": int,
+    "config_hash": str,
+}
+
+
+def git_sha(repo_dir: str | None = None) -> str:
+    """HEAD sha of the repo containing this file (or ``repo_dir``);
+    "unknown" outside a git checkout."""
+    if repo_dir is None:
+        repo_dir = os.path.dirname(os.path.abspath(__file__))
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo_dir,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _canonical(obj):
+    """A deterministically-serializable view of configs: dataclasses
+    and NamedTuples flatten to sorted dicts, everything else reprs."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _canonical(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if hasattr(obj, "_asdict"):                       # NamedTuple
+        return {k: _canonical(v) for k, v in obj._asdict().items()}
+    if isinstance(obj, dict):
+        return {str(k): _canonical(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def config_hash(config) -> str:
+    """Stable short hash of a config object (``SimConfig``,
+    ``ControlConfig``, plain dict, ...)."""
+    blob = json.dumps(_canonical(config), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def provenance(config=None, extra: dict | None = None) -> dict:
+    """The provenance block for the current process."""
+    import jax
+    block = {
+        "schema_version": ARTIFACT_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "config_hash": config_hash(config) if config is not None else "",
+    }
+    if extra:
+        block.update(extra)
+    return block
+
+
+def stamp(payload: dict, config=None, extra: dict | None = None) -> dict:
+    """Merge the provenance block into an artifact payload, in place.
+
+    Additive by design: readers indexing the payload's existing keys
+    never see a changed shape."""
+    payload["provenance"] = provenance(config, extra)
+    return payload
+
+
+def validate_artifact(path_or_doc) -> list[str]:
+    """Round-trip one artifact; returns a list of problems."""
+    problems = []
+    if isinstance(path_or_doc, (str, os.PathLike)):
+        try:
+            with open(path_or_doc) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            return [f"unreadable: {e}"]
+    else:
+        doc = path_or_doc
+    if not isinstance(doc, dict):
+        return ["artifact is not a JSON object"]
+    prov = doc.get("provenance")
+    if not isinstance(prov, dict):
+        return ["missing provenance block"]
+    for k, typ in _FIELDS.items():
+        if k not in prov:
+            problems.append(f"provenance missing {k!r}")
+        elif not isinstance(prov[k], typ):
+            problems.append(
+                f"provenance {k!r} is {type(prov[k]).__name__}, "
+                f"want {typ.__name__}")
+    sv = prov.get("schema_version")
+    if isinstance(sv, int) and sv > ARTIFACT_SCHEMA_VERSION:
+        problems.append(f"schema_version {sv} is from the future")
+    return problems
+
+
+def validate_all(results_dir: str) -> dict:
+    """{filename: [problems]} over every ``*.json`` in a directory;
+    empty lists mean valid."""
+    out = {}
+    for name in sorted(os.listdir(results_dir)):
+        if name.endswith(".json"):
+            out[name] = validate_artifact(os.path.join(results_dir, name))
+    return out

@@ -1,0 +1,289 @@
+"""Flight recorder: a bounded ring buffer of structured events inside
+the simulator's scan carry.
+
+The streaming engine answers "what happened at step 37,412?" only by
+re-running with ``trace=True`` at O(T) memory. The recorder closes that
+gap: a fixed-capacity ring of (step, kind, entity, value) records rides
+in the ``lax.scan`` carry and captures the *interesting* steps as they
+happen — breaker trips/resets, retry exhaustions, control-plane actions
+(scale up/down, shed, migrate), scenario event marks, per-player
+QoS-miss spikes — at O(capacity) memory for any horizon.
+
+Design contract (the same bar the resilience and control layers set):
+
+* **Statically gated**: ``SimConfig.recorder=None`` (or a disabled
+  :class:`RecorderConfig`) adds a ``None`` — an empty pytree — to the
+  carry, so the disabled program compiles to byte-identical HLO versus
+  the pre-recorder engine (tests/test_obs_recorder.py).
+* **Shards on the players axis with no new in-loop collectives**: every
+  per-player lane (trips, resets, retry exhaustions, sheds, spikes) is
+  computed from shard-local data and lands in the shard's own ring;
+  fleet-level lanes (scenario marks, control actions) are recorded only
+  by the shard holding global player 0, so a sharded run records each
+  fleet event exactly once. Rings concatenate across shards on readout
+  (``recorder_events`` merges them into one (step, shard, seq)-ordered
+  list). Sharded and unsharded runs record the same event *set*
+  whenever neither ring wrapped (each shard retains its own most-recent
+  ``capacity`` events, so retention under wraparound is per-shard).
+* **Composes with chunking/checkpoint/resume**: the ring is ordinary
+  carry state — it streams through ``run_sim_stream(chunk_steps=...)``
+  and rides the checkpoint bit-exactly.
+
+Append mechanics: each step contributes a fixed set of *candidate*
+lanes (static shapes — jit-friendly); the valid candidates get ring
+positions via an exclusive cumulative sum off the monotone ``ptr``,
+candidates that would be overwritten within the same step's batch are
+masked out (so scatter indices stay distinct and the write is
+deterministic), invalid lanes scatter to an out-of-bounds sentinel slot
+dropped by ``mode="drop"``. ``ptr`` counts every event ever appended;
+``ptr - capacity`` (clamped at 0) is the number overwritten.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Event kinds. Stable small integers: they appear in exported traces
+# and run artifacts, so renumbering is a schema change.
+KIND_MARK = 0             # scenario event onset (entity = mark index)
+KIND_SCALE_UP = 1         # controller spawned standby capacity
+KIND_SCALE_DOWN = 2       # controller killed standby capacity
+KIND_MIGRATE = 3          # cross-region capacity migration fired
+KIND_BREAKER_TRIP = 4     # entity = player id; value = arms newly open
+KIND_BREAKER_RESET = 5    # entity = player id; value = arms newly closed
+KIND_RETRY_EXHAUSTED = 6  # entity = player id; value = dropped requests
+KIND_SHED = 7             # entity = player id; value = requests shed
+KIND_QOS_SPIKE = 8        # entity = player id; value = step miss fraction
+
+KIND_NAMES = {
+    KIND_MARK: "scenario_mark",
+    KIND_SCALE_UP: "scale_up",
+    KIND_SCALE_DOWN: "scale_down",
+    KIND_MIGRATE: "migrate",
+    KIND_BREAKER_TRIP: "breaker_trip",
+    KIND_BREAKER_RESET: "breaker_reset",
+    KIND_RETRY_EXHAUSTED: "retry_exhausted",
+    KIND_SHED: "shed",
+    KIND_QOS_SPIKE: "qos_spike",
+}
+
+FLEET = -1    # entity sentinel for fleet-level events
+
+
+def kind_name(kind: int) -> str:
+    return KIND_NAMES.get(int(kind), f"kind_{int(kind)}")
+
+
+@dataclass(frozen=True)
+class RecorderConfig:
+    """Static recorder knobs (a ``SimConfig`` field, like the control
+    plane's config). ``capacity`` is the ring size per program instance
+    (per shard under player sharding); ``capacity <= 0`` disables the
+    recorder entirely — the carry gains a ``None`` and the program is
+    byte-identical to the pre-recorder engine. ``qos_spike`` is the
+    per-player per-step QoS-miss fraction at or above which a
+    ``KIND_QOS_SPIKE`` event is recorded (players with no issued
+    requests that step never spike)."""
+    capacity: int = 1024
+    qos_spike: float = 0.5
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0
+
+
+def recorder_enabled(cfg) -> bool:
+    """Static gate ``simulator.build_sim_parts`` keys the recorder path
+    on (``cfg`` is a ``SimConfig``)."""
+    rec = getattr(cfg, "recorder", None)
+    return rec is not None and rec.enabled
+
+
+class RecorderState(NamedTuple):
+    """The in-carry ring. ``ptr`` is shaped (1,), not scalar, so the
+    player-sharded out-spec concatenates per-shard pointers into a (D,)
+    vector the readout can split the rings back with. ``prev_open`` is
+    the previous step's breaker-open snapshot ((K, M) when breakers are
+    on, (0, 0) otherwise) — trip/reset events are its step-over-step
+    transitions, which also catches cooldown expiries between steps."""
+    step: jax.Array       # (cap,) i32 global step index of each record
+    kind: jax.Array       # (cap,) i32 event kind (KIND_*)
+    entity: jax.Array     # (cap,) i32 global player id / mark idx / -1
+    value: jax.Array      # (cap,) f32 event magnitude
+    ptr: jax.Array        # (1,) i32 total events ever appended
+    prev_open: jax.Array  # (K, M) bool breaker-open snapshot
+
+
+def recorder_init(rcfg: RecorderConfig, K: int, M: int,
+                  track_breakers: bool) -> RecorderState:
+    cap = int(rcfg.capacity)
+    return RecorderState(
+        step=jnp.full((cap,), -1, jnp.int32),
+        kind=jnp.full((cap,), -1, jnp.int32),
+        entity=jnp.full((cap,), FLEET, jnp.int32),
+        value=jnp.zeros((cap,), jnp.float32),
+        ptr=jnp.zeros((1,), jnp.int32),
+        prev_open=jnp.zeros((K, M) if track_breakers else (0, 0), bool),
+    )
+
+
+def _append(rec: RecorderState, t_idx, kinds, entities, values,
+            valid) -> RecorderState:
+    """Append the valid candidates in lane order. One cumsum + four
+    scatters; indices are distinct by construction (candidates whose
+    position would be overwritten later in the same batch are masked to
+    the drop sentinel), so the write order is immaterial and the result
+    deterministic."""
+    cap = rec.step.shape[0]
+    vi = valid.astype(jnp.int32)
+    n_new = vi.sum()
+    base = rec.ptr[0]
+    pos = base + jnp.cumsum(vi) - vi                     # (E,) exclusive
+    keep = valid & (pos >= base + n_new - cap)
+    slot = jnp.where(keep, pos % cap, cap)               # OOB -> dropped
+    return rec._replace(
+        step=rec.step.at[slot].set(t_idx.astype(jnp.int32), mode="drop"),
+        kind=rec.kind.at[slot].set(kinds, mode="drop"),
+        entity=rec.entity.at[slot].set(entities, mode="drop"),
+        value=rec.value.at[slot].set(values, mode="drop"),
+        ptr=rec.ptr + n_new)
+
+
+def record_step(
+    rcfg: RecorderConfig,
+    rec: RecorderState,
+    *,
+    t_idx: jax.Array,          # scalar i32 global step index
+    pids: jax.Array,           # (K,) global player ids of this shard
+    marks: jax.Array,          # (E,) scenario event-onset steps, -1 pad
+    miss_k: jax.Array,         # (K,) f32 QoS misses this step
+    iss_k: jax.Array,          # (K,) f32 issued requests this step
+    retry_drop_k: jax.Array | None = None,   # (K,) f32 deadline drops
+    shed_k: jax.Array | None = None,         # (K,) f32 admission sheds
+    open_now: jax.Array | None = None,       # (K, M) bool breaker open
+    ctl_deltas: tuple | None = None,         # (up, down, mig) f32 diffs
+) -> RecorderState:
+    """Build this step's candidate-event lanes and append the valid
+    ones. Lane order is fixed (marks, control actions, then the
+    per-player lanes), so records within a step have a deterministic
+    sequence. Fleet-level lanes are gated on ``pids[0] == 0`` — the
+    shard holding global player 0 — so a player-sharded run records
+    each fleet event exactly once, from shard-local data, with no
+    collective."""
+    owner = pids[0] == 0
+    kinds, ents, vals, valids = [], [], [], []
+
+    def lane(kind, ent, val, valid):
+        kinds.append(jnp.full(ent.shape, kind, jnp.int32))
+        ents.append(ent.astype(jnp.int32))
+        vals.append(val.astype(jnp.float32))
+        valids.append(valid)
+
+    # scenario event onsets (entity = mark index, value = onset step)
+    E = marks.shape[0]
+    lane(KIND_MARK, jnp.arange(E, dtype=jnp.int32),
+         marks.astype(jnp.float32),
+         (marks >= 0) & (marks == t_idx) & owner)
+
+    # control-plane actions, detected as counter diffs across this
+    # step's control_actuate call (post-warmup, like the counters)
+    if ctl_deltas is not None:
+        up_d, down_d, mig_d = ctl_deltas
+        fleet = jnp.full((1,), FLEET, jnp.int32)
+        lane(KIND_SCALE_UP, fleet, up_d[None], (up_d > 0)[None] & owner)
+        lane(KIND_SCALE_DOWN, fleet, down_d[None],
+             (down_d > 0)[None] & owner)
+        lane(KIND_MIGRATE, fleet, mig_d[None], (mig_d > 0)[None] & owner)
+
+    # breaker transitions: step-over-step open-mask diff per player
+    if open_now is not None:
+        trips = (open_now & ~rec.prev_open).sum(-1).astype(jnp.float32)
+        resets = (rec.prev_open & ~open_now).sum(-1).astype(jnp.float32)
+        lane(KIND_BREAKER_TRIP, pids, trips, trips > 0)
+        lane(KIND_BREAKER_RESET, pids, resets, resets > 0)
+        rec = rec._replace(prev_open=open_now)
+
+    if retry_drop_k is not None:
+        lane(KIND_RETRY_EXHAUSTED, pids, retry_drop_k, retry_drop_k > 0)
+    if shed_k is not None:
+        lane(KIND_SHED, pids, shed_k, shed_k > 0)
+
+    # per-player QoS-miss spike: miss fraction of this step's issued
+    # requests at or above the configured threshold
+    frac = miss_k / jnp.maximum(iss_k, 1.0)
+    lane(KIND_QOS_SPIKE, pids, frac,
+         (iss_k > 0) & (frac >= rcfg.qos_spike))
+
+    return _append(rec, t_idx, jnp.concatenate(kinds),
+                   jnp.concatenate(ents), jnp.concatenate(vals),
+                   jnp.concatenate(valids))
+
+
+# ---------------------------------------------------------------------------
+# Host-side readout.
+# ---------------------------------------------------------------------------
+
+class Event(NamedTuple):
+    """One decoded record. ``shard`` is the ring it came from (0 for
+    unsharded runs), ``seq`` its per-shard append sequence number."""
+    step: int
+    kind: int
+    entity: int
+    value: float
+    shard: int
+    seq: int
+
+    @property
+    def kind_str(self) -> str:
+        return kind_name(self.kind)
+
+
+def _rings(rec) -> tuple[np.ndarray, ...]:
+    """Split the (possibly shard-concatenated) ring arrays back into
+    (D, cap) views: D = ptr.size, cap = step.size // D."""
+    ptr = np.asarray(rec.ptr).reshape(-1).astype(np.int64)
+    D = max(ptr.shape[0], 1)
+    step = np.asarray(rec.step).reshape(D, -1)
+    kind = np.asarray(rec.kind).reshape(D, -1)
+    entity = np.asarray(rec.entity).reshape(D, -1)
+    value = np.asarray(rec.value).reshape(D, -1)
+    return ptr, step, kind, entity, value
+
+
+def recorder_events(rec) -> list[Event]:
+    """Decode a ``RecorderState`` into chronologically ordered events.
+
+    Handles unsharded ((cap,) arrays, (1,) ptr) and player-sharded
+    ((D·cap,) concatenated arrays, (D,) ptr) states transparently.
+    Events are sorted by (step, shard, seq) — within one shard the ring
+    order is exact append order; across shards same-step events
+    interleave by shard id."""
+    ptr, step, kind, entity, value = _rings(rec)
+    cap = step.shape[1]
+    out = []
+    for d in range(len(ptr)):
+        p = int(ptr[d])
+        for s in range(max(0, p - cap), p):
+            sl = s % cap
+            out.append(Event(int(step[d, sl]), int(kind[d, sl]),
+                             int(entity[d, sl]), float(value[d, sl]),
+                             d, s))
+    out.sort(key=lambda e: (e.step, e.shard, e.seq))
+    return out
+
+
+def events_appended(rec) -> int:
+    """Total events ever appended (across shards), wrapped or not."""
+    ptr = np.asarray(rec.ptr).reshape(-1).astype(np.int64)
+    return int(ptr.sum())
+
+
+def events_dropped(rec) -> int:
+    """Events overwritten by ring wraparound (across shards)."""
+    ptr, step, *_ = _rings(rec)
+    cap = step.shape[1]
+    return int(np.maximum(ptr - cap, 0).sum())

@@ -1,0 +1,81 @@
+"""`python -m repro.obs report <run_dir>` — render a run directory.
+
+Pure host-side formatting over :mod:`repro.obs.runlog` output: the
+provenance header, headline metrics, per-event recovery windows, the
+flight-recorder timeline, and whatever per-device memory / overhead
+figures the producing benchmark put in the manifest.
+"""
+from __future__ import annotations
+
+from repro.obs import runlog as obl
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _timeline(events: list[dict], limit: int = 60) -> list[str]:
+    lines = []
+    shown = events if len(events) <= limit else events[:limit]
+    for e in shown:
+        ent = "fleet" if e["entity"] == -1 else f"player {e['entity']}"
+        lines.append(f"  t={e['t']:9.2f}s  step {e['step']:>8}  "
+                     f"{e['kind']:<16} {ent:<12} value={e['value']:g}")
+    if len(events) > limit:
+        lines.append(f"  ... {len(events) - limit} more "
+                     f"(see events.json)")
+    return lines
+
+
+def render(run_dir: str) -> str:
+    loaded = obl.load_run(run_dir)
+    if not loaded:
+        return f"{run_dir}: not a run directory (no manifest/metrics)"
+    out = [f"run: {run_dir}"]
+
+    man = loaded.get("manifest", {})
+    prov = man.get("provenance", {})
+    if prov:
+        out.append(
+            f"  provenance: git {prov.get('git_sha', '?')[:12]}  "
+            f"jax {prov.get('jax_version', '?')}  "
+            f"{prov.get('backend', '?')}×{prov.get('device_count', '?')}  "
+            f"config {prov.get('config_hash') or '-'}")
+    for key in ("label", "overhead_ratio", "recorder_us_per_step",
+                "baseline_us_per_step", "peak_memory_mb"):
+        if key in man:
+            out.append(f"  {key}: {_fmt_val(man[key])}")
+
+    ms = loaded.get("metrics")
+    if ms is not None:
+        out.append("metrics:")
+        ev_lines = []
+        for name, val in ms.scalars().items():
+            line = f"  {name} = {_fmt_val(val)}"
+            (ev_lines if name.startswith("repro_event_") else out).append(
+                line)
+        if ev_lines:
+            out.append("recovery windows:")
+            out.extend(ev_lines)
+
+    ev = loaded.get("events")
+    if ev is not None:
+        out.append(
+            f"flight recorder: {len(ev['events'])} events retained "
+            f"({ev['appended']} appended, {ev['dropped']} lost to "
+            f"wraparound)")
+        out.extend(_timeline(ev["events"]))
+
+    tr = loaded.get("trace")
+    if tr is not None:
+        n = len(tr.get("traceEvents", []))
+        out.append(f"trace.json: {n} trace events "
+                   f"(load in ui.perfetto.dev or chrome://tracing)")
+
+    probs = obl.validate_run(run_dir)
+    bad = {f: p for f, p in probs.items() if p}
+    out.append("schema validation: "
+               + ("OK" if not bad else f"PROBLEMS {bad}"))
+    return "\n".join(out)

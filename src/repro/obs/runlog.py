@@ -1,0 +1,153 @@
+"""Run-directory writer/loader: one directory per observed run.
+
+Layout (all optional except the manifest):
+
+```
+<run_dir>/
+  manifest.json   # provenance + config echo + index of present files
+  metrics.json    # MetricSet, versioned JSON (registry schema)
+  metrics.prom    # same scalars, Prometheus text exposition format
+  trace.json      # Chrome trace-event JSON (Perfetto-loadable)
+  events.json     # decoded flight-recorder events, one record each
+```
+
+``python -m repro.obs report <run_dir>`` renders any such directory;
+the obs CI lane validates every file against its schema and uploads the
+manifest as a workflow artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs import provenance as obp
+from repro.obs import recorder as obr
+from repro.obs import registry as obreg
+from repro.obs import trace as obt
+
+MANIFEST_SCHEMA_VERSION = 1
+
+
+def write_run(
+    run_dir: str,
+    *,
+    metrics: "obreg.MetricSet | None" = None,
+    rec=None,
+    dt: float | None = None,
+    timeline: "obt.HostTimeline | None" = None,
+    config=None,
+    manifest_extra: dict | None = None,
+) -> dict:
+    """Write a run directory; returns the manifest dict.
+
+    ``rec`` is a ``RecorderState`` (its events become ``events.json``
+    and, together with ``timeline``'s host spans, ``trace.json``;
+    ``dt`` is required to place them on the simulated-time axis).
+    """
+    os.makedirs(run_dir, exist_ok=True)
+    files = {}
+
+    if metrics is not None:
+        obreg.write_metrics(metrics,
+                            json_path=os.path.join(run_dir, "metrics.json"),
+                            prom_path=os.path.join(run_dir, "metrics.prom"))
+        files["metrics"] = "metrics.json"
+        files["prometheus"] = "metrics.prom"
+
+    rec_events = []
+    if rec is not None:
+        if dt is None:
+            raise ValueError("rec needs dt to place events in time")
+        rec_events = obr.recorder_events(rec)
+        with open(os.path.join(run_dir, "events.json"), "w") as f:
+            json.dump({
+                "schema": "repro.obs.events",
+                "schema_version": MANIFEST_SCHEMA_VERSION,
+                "appended": obr.events_appended(rec),
+                "dropped": obr.events_dropped(rec),
+                "events": [{"step": e.step, "t": e.step * dt,
+                            "kind": e.kind_str, "entity": e.entity,
+                            "value": e.value, "shard": e.shard,
+                            "seq": e.seq} for e in rec_events],
+            }, f, indent=1)
+        files["events"] = "events.json"
+
+    if rec is not None or timeline is not None:
+        lists = []
+        if rec is not None:
+            lists.append(obt.recorder_trace_events(rec_events, dt))
+        if timeline is not None:
+            lists.append(timeline.events)
+        obt.write_chrome_trace(os.path.join(run_dir, "trace.json"), *lists)
+        files["trace"] = "trace.json"
+
+    manifest = {
+        "schema": "repro.obs.manifest",
+        "schema_version": MANIFEST_SCHEMA_VERSION,
+        "provenance": obp.provenance(config),
+        "files": files,
+    }
+    if manifest_extra:
+        manifest.update(manifest_extra)
+    with open(os.path.join(run_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def load_run(run_dir: str) -> dict:
+    """Load whatever a run directory holds. Returns a dict with any of
+    ``manifest`` / ``metrics`` (MetricSet) / ``metrics_doc`` /
+    ``events`` / ``trace`` present."""
+    out: dict = {}
+    mpath = os.path.join(run_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            out["manifest"] = json.load(f)
+    jpath = os.path.join(run_dir, "metrics.json")
+    if os.path.exists(jpath):
+        with open(jpath) as f:
+            out["metrics_doc"] = json.load(f)
+        try:
+            out["metrics"] = obreg.metricset_from_json(out["metrics_doc"])
+        except (KeyError, TypeError, ValueError):
+            pass    # corrupt/mismatched doc: validate_run reports it
+    epath = os.path.join(run_dir, "events.json")
+    if os.path.exists(epath):
+        with open(epath) as f:
+            out["events"] = json.load(f)
+    tpath = os.path.join(run_dir, "trace.json")
+    if os.path.exists(tpath):
+        with open(tpath) as f:
+            out["trace"] = json.load(f)
+    ppath = os.path.join(run_dir, "metrics.prom")
+    if os.path.exists(ppath):
+        with open(ppath) as f:
+            out["prometheus"] = f.read()
+    return out
+
+
+def validate_run(run_dir: str) -> dict:
+    """{file: [problems]} for every schema-bearing file present."""
+    out: dict = {}
+    loaded = load_run(run_dir)
+    if "manifest" not in loaded:
+        return {"manifest.json": ["missing"]}
+    man = loaded["manifest"]
+    probs = []
+    if man.get("schema") != "repro.obs.manifest":
+        probs.append("bad manifest schema tag")
+    probs += obp.validate_artifact(man)
+    out["manifest.json"] = probs
+    if "metrics_doc" in loaded:
+        out["metrics.json"] = obreg.validate_metrics_json(
+            loaded["metrics_doc"])
+    if "prometheus" in loaded:
+        out["metrics.prom"] = obreg.validate_prometheus(
+            loaded["prometheus"])
+    if "trace" in loaded:
+        out["trace.json"] = obt.validate_chrome_trace(loaded["trace"])
+    if "events" in loaded:
+        ev = loaded["events"]
+        out["events.json"] = (
+            [] if isinstance(ev.get("events"), list) else ["no events list"])
+    return out

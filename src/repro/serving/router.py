@@ -10,6 +10,12 @@ replica lengthen its batch queue) — exactly the paper's MP-MAB.
 The router is host-side control plane with jitted state updates; the
 error-count cooldown (Alg 2) doubles as straggler mitigation and the
 instance add/remove handlers (Alg 3/4) as the elastic-scaling hooks.
+
+Every membership change (failure, join, resize, explicit active-set
+sync) lands in ``self.events`` — the host-side mirror of the in-loop
+flight recorder — and :meth:`QEdgeRouter.export_trace` writes them as
+a Perfetto-loadable Chrome trace on the same lane conventions as
+``repro.obs.trace``.
 """
 from __future__ import annotations
 
@@ -48,9 +54,15 @@ class QEdgeRouter:
         self._maint = jax.jit(qb.maintenance, static_argnums=1)
         self._sync = jax.jit(qb.sync_active, static_argnums=1)
         self.t0 = time.monotonic()
+        # host-side flight log: (t_seconds, kind, entity, value) per
+        # membership event, in occurrence order
+        self.events: List[tuple] = []
 
     def _now(self) -> float:
         return time.monotonic() - self.t0
+
+    def _log(self, kind: str, entity: int, value: float):
+        self.events.append((self._now(), kind, int(entity), float(value)))
 
     # -- request path -------------------------------------------------
     def route(self) -> np.ndarray:
@@ -73,15 +85,18 @@ class QEdgeRouter:
 
     # -- elastic / fault hooks (paper Alg 3/4) ------------------------
     def replicas_changed(self, active: Sequence[bool]):
-        self.state = self._sync(self.state, self.params,
-                                jnp.asarray(active, bool))
+        act = jnp.asarray(active, bool)
+        self._log("replicas_changed", -1, float(np.asarray(act).sum()))
+        self.state = self._sync(self.state, self.params, act)
 
     def replica_failed(self, idx: int):
+        self._log("replica_failed", idx, 0.0)
         act = np.asarray(self.state.active).copy()
         act[idx] = False
         self.replicas_changed(act)
 
     def replica_joined(self, idx: int):
+        self._log("replica_joined", idx, 1.0)
         act = np.asarray(self.state.active).copy()
         act[idx] = True
         self.replicas_changed(act)
@@ -94,7 +109,33 @@ class QEdgeRouter:
         Growing back to ``M`` rows re-enters replicas through the Alg 3
         zero-weight ramp."""
         from repro.fault.elastic import surviving_replicas
+        self._log("mesh_resized", -1, float(surviving_rows))
         self.replicas_changed(surviving_replicas(self.M, surviving_rows))
+
+    def export_trace(self, path: str) -> dict:
+        """Write the membership flight log as a Chrome trace (one
+        ``router`` process lane, one thread per event kind, instants at
+        host-relative wall time). Loads in Perfetto next to a
+        simulator trace from the same run."""
+        from repro.obs import trace as obs_trace
+        pid, named, evs = 2, set(), []
+        kinds = []
+        for _, kind, _, _ in self.events:
+            if kind not in kinds:
+                kinds.append(kind)
+        for t, kind, entity, value in self.events:
+            tid = kinds.index(kind) + 1
+            if not named:
+                evs.append(obs_trace._meta(pid, 0, "process_name",
+                                           "router"))
+                named.add(None)
+            if kind not in named:
+                evs.append(obs_trace._meta(pid, tid, "thread_name", kind))
+                named.add(kind)
+            evs.append({"ph": "i", "s": "t", "pid": pid, "tid": tid,
+                        "name": kind, "cat": "router", "ts": t * 1e6,
+                        "args": {"entity": entity, "value": value}})
+        return obs_trace.write_chrome_trace(path, evs)
 
     # -- introspection -------------------------------------------------
     @property
