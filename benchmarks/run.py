@@ -35,6 +35,8 @@ ALL = {
     "kde_hotspot": footprint.kde_hotspot,
     # scenario engine: the named non-stationarity library
     "scenario_suite": scenario_suite.scenario_suite,
+    # multi-tenant continuum: S services sharing one fleet
+    "multi_tenant": scenario_suite.multi_tenant,
     # harness + scale-out throughput (perf trajectory)
     "suite_build": common.suite_build,
     "bandit_scale": bandit_scale.bandit_scale,

@@ -40,16 +40,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, strategy_name, timed
-from repro.continuum import (ControlConfig, build_sim_grid_fn,
-                             compile_scenario, get_library, make_topology,
+from repro.continuum import (ControlConfig, TenancyConfig, build_sim_grid_fn,
+                             compile_scenario, compile_tenant_scenario,
+                             get_library, get_tenant_library, make_topology,
                              stack_drivers, with_standby)
-from repro.obs.registry import stream_cell
+from repro.obs.registry import stream_cell, tenant_cell
 
 # contrast pair: the adaptive balancer vs the static-proximity baseline
 SUITE_STRATEGIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
@@ -116,6 +118,19 @@ CONTROL_POLICIES = (
     # controller at all: the capacity ceiling closed loops chase
     ("prewarmed", None),
 )
+
+# multi-tenant lane: S=4 services sharing one fleet, swept over the
+# tenant scenario library. Tenant 0 is the tight-deadline foreground
+# service (the paper's tau=80 ms), tenants 1-2 the mid class, tenant 3
+# the relaxed batch class; base_clients is PER TENANT, so 4 tenants x
+# 30 LBs x 1 client keeps aggregate demand at the library baseline's
+# 1200 req/s (~66% of capacity) and the scenarios create the overloads.
+MT_TENANTS = 4
+MT_TAUS = (0.080, 0.110, 0.110, 0.150)
+MT_INTERFERENCE = 0.3
+MT_BASE_CLIENTS = 1
+MT_POLICIES = (("qedgeproxy", {}), ("proxy_mity_1.0", dict(alpha=1.0)))
+SMOKE_MT_SCENARIOS = ("mt_baseline", "mt_tenant_surge")
 
 _cache = common.register_cache({})
 
@@ -278,6 +293,94 @@ def _control_payload():
                 jain=True, tenants=True, drop_rate=True, control=True)
         out[name] = row
     return out
+
+
+_mt_cache = common.register_cache({})
+
+
+def get_multi_tenant_suite():
+    """{(scenario, label): StreamOutputs} for the S=4 tenant grid.
+
+    One compiled grid per policy (``TenancyConfig`` is a ``SimConfig``
+    static shared by every row), tenant-scenario lanes stacked exactly
+    like the library suite. Each cell's ``acc`` is the S-tuple of
+    per-tenant accumulators; ``tenant_cell`` reads the per-tenant QoS
+    and fairness columns. Run wall-clock per policy lands in the cache
+    under ``grid_steps_per_s`` for the smoke-floor gate.
+    """
+    if _mt_cache:
+        return _mt_cache
+    K, M = common.N_LBS, common.N_INSTANCES
+    cfg = dataclasses.replace(
+        common.CFG, tenancy=TenancyConfig(taus=MT_TAUS,
+                                          interference=MT_INTERFERENCE))
+    lib = get_tenant_library(cfg.horizon, K, M, n_tenants=MT_TENANTS,
+                             base_clients=MT_BASE_CLIENTS)
+    names = [n for n in lib if not common.SMOKE or n in SMOKE_MT_SCENARIOS]
+    topo = make_topology(jax.random.PRNGKey(1), K, M)
+    rtt = topo.lb_instance_rtt()
+    rtts = jnp.broadcast_to(rtt[None], (len(names),) + rtt.shape)
+    drivers = stack_drivers(
+        [compile_tenant_scenario(lib[n], cfg, jax.random.PRNGKey(800 + i))
+         for i, n in enumerate(names)])
+    keys = jnp.broadcast_to(jax.random.PRNGKey(11)[None],
+                            (len(names), 2))
+
+    lowered, mesh = [], None
+    for label, kw in MT_POLICIES:
+        run_grid, mesh = build_sim_grid_fn(
+            strategy_name(label), cfg, K, M, mesh=mesh,
+            warmup_steps=common.WARM, **kw)
+        lowered.append(jax.jit(run_grid).lower(rtts, drivers, keys))
+    steps_per_s = {}
+    for (label, kw), exe in zip(MT_POLICIES, common.compile_all(lowered)):
+        t0 = time.perf_counter()
+        outs = exe(rtts, drivers, keys)
+        jax.block_until_ready(outs)
+        t_run = time.perf_counter() - t0
+        steps_per_s[label] = len(names) * cfg.num_steps / t_run
+        for i, name in enumerate(names):
+            _mt_cache[(name, label)] = jax.tree.map(lambda x: x[i], outs)
+    _mt_cache["names"] = names
+    _mt_cache["grid_steps_per_s"] = steps_per_s
+    return _mt_cache
+
+
+def multi_tenant():
+    """S=4 tenants x tenant-scenario library x policy: per-tenant QoS
+    columns + cross-tenant fairness indices + self-partitioning."""
+    suite = get_multi_tenant_suite()
+
+    def compute():
+        out = {"tenants": MT_TENANTS, "taus": list(MT_TAUS),
+               "interference": MT_INTERFERENCE,
+               "grid_steps_per_s": dict(suite["grid_steps_per_s"])}
+        for name in suite["names"]:
+            row = {}
+            for label, _ in MT_POLICIES:
+                row[label] = tenant_cell(suite[(name, label)],
+                                         rho=common.CFG.rho)
+            out[name] = row
+        return out
+
+    payload, us = timed(compute)
+    derived = " ".join(
+        "{n}:t0={t0:.0f}%/jain={j:.2f}".format(
+            n=n, t0=payload[n]["qedgeproxy"]["tenant_qos_sat_pct"][0],
+            j=payload[n]["qedgeproxy"]["jain_qos"])
+        for n in suite["names"])
+    emit("multi_tenant", us, derived, payload)
+    if common.SMOKE:
+        # same throughput floor as the bandit_scale smoke cells: the
+        # S=4 tenant grid must clear 60 grid-steps/s or CI fails
+        from benchmarks.bandit_scale import SMOKE_FLOOR_STEPS_PER_S
+        slow = {k: v for k, v in suite["grid_steps_per_s"].items()
+                if v < SMOKE_FLOOR_STEPS_PER_S}
+        if slow:
+            raise RuntimeError(
+                f"multi-tenant smoke grid under the "
+                f"{SMOKE_FLOOR_STEPS_PER_S:.0f} grid-steps/s floor: {slow}")
+    return payload
 
 
 def scenario_suite():

@@ -500,6 +500,134 @@ def goodput_offered_series(series: StepSeries, dt: float,
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant fairness (S services on one fleet).
+# ---------------------------------------------------------------------------
+# A tenant run (SimConfig.tenancy with S >= 2) returns a TUPLE of S
+# MetricAccumulators in StreamOutputs.acc — one independent accumulator
+# per service — and (T, S) StepSeries columns. The readouts below take
+# that tuple and answer the multi-tenant questions: per-tenant QoS, how
+# (un)evenly the shared fleet serves the tenants (Gini / Jain /
+# Herfindahl over per-tenant outcomes), and whether the S bandit fleets
+# self-partitioned the instances (pairwise routing overlap).
+
+def gini_index(x) -> float:
+    """Gini coefficient of a non-negative allocation vector.
+
+    0 = perfectly equal, -> 1 = maximally concentrated. Computed via
+    the sorted-rank identity ``2*sum(i*x_(i))/(n*sum(x)) - (n+1)/n``
+    (O(S log S)); ``tests/test_tenancy.py`` locks agreement with the
+    O(S^2) mean-absolute-difference definition. An empty or all-zero
+    vector reads as perfectly equal (0.0)."""
+    x = np.asarray(x, np.float64)
+    n = x.size
+    if n == 0:
+        return 0.0
+    s = x.sum()
+    if s <= 0.0:
+        return 0.0
+    xs = np.sort(x)
+    i = np.arange(1, n + 1, dtype=np.float64)
+    return float(2.0 * (i * xs).sum() / (n * s) - (n + 1.0) / n)
+
+
+def jain_index(x) -> float:
+    """Jain's fairness index ``(sum x)^2 / (n * sum x^2)``.
+
+    1 = perfectly equal, 1/n = one-hot. An empty or all-zero vector
+    reads as perfectly fair (1.0) — nobody is disadvantaged when
+    nobody receives anything."""
+    x = np.asarray(x, np.float64)
+    n = x.size
+    if n == 0:
+        return 1.0
+    s = x.sum()
+    if s <= 0.0:
+        return 1.0
+    return float(s * s / (n * (x * x).sum()))
+
+
+def herfindahl_index(x) -> float:
+    """Herfindahl-Hirschman concentration ``sum (x_i / sum x)^2``.
+
+    1/n = perfectly spread, 1 = one-hot. Related to Jain's index by
+    ``jain = 1 / (n * hhi)`` on any non-degenerate vector. An empty
+    vector reads 0.0; an all-zero vector reads the uniform value
+    1/n."""
+    x = np.asarray(x, np.float64)
+    n = x.size
+    if n == 0:
+        return 0.0
+    s = x.sum()
+    if s <= 0.0:
+        return 1.0 / n
+    p = x / s
+    return float((p * p).sum())
+
+
+def tenant_qos_stream(accs) -> np.ndarray:
+    """(S,) overall post-warmup QoS success ratio per tenant."""
+    return np.array([
+        np.asarray(a.succ_kc, np.float64).sum()
+        / max(np.asarray(a.n_kc, np.float64).sum(), 1.0)
+        for a in accs])
+
+
+def tenant_qos_satisfaction_stream(accs, rho: float) -> np.ndarray:
+    """(S,) per-tenant % of clients with success ratio >= rho (the
+    Fig. 3 statistic, computed within each tenant's client population)."""
+    return np.array([client_qos_satisfaction_stream(a, rho) for a in accs])
+
+
+def tenant_served_stream(accs) -> np.ndarray:
+    """(S,) post-warmup issued-request totals per tenant — the load
+    share the fleet actually carried for each service."""
+    return np.array([np.asarray(a.n_kc, np.float64).sum() for a in accs])
+
+
+def tenant_fairness_stream(accs) -> dict:
+    """Cross-tenant fairness indices over the two allocations that
+    matter: the QoS *outcome* each tenant got (success ratios) and the
+    load *share* each tenant placed. Keys:
+
+    ``gini_qos``/``jain_qos``/``hhi_qos`` over per-tenant QoS ratios;
+    ``gini_load``/``jain_load``/``hhi_load`` over per-tenant served
+    totals."""
+    qos = tenant_qos_stream(accs)
+    load = tenant_served_stream(accs)
+    return {
+        "gini_qos": gini_index(qos),
+        "jain_qos": jain_index(qos),
+        "hhi_qos": herfindahl_index(qos),
+        "gini_load": gini_index(load),
+        "jain_load": jain_index(load),
+        "hhi_load": herfindahl_index(load),
+    }
+
+
+def tenant_partition_stream(accs) -> dict:
+    """Did the S bandit fleets self-partition the shared instances?
+
+    Each tenant's routing profile is its per-instance share of issued
+    requests (``choice_counts`` summed over players, normalized). The
+    pairwise overlap ``sum_m min(P_i[m], P_j[m])`` is 1.0 when two
+    tenants spread identically and 0.0 when they use disjoint
+    instances. Returns ``mean_overlap`` (mean over tenant pairs; 1.0
+    for S < 2) and ``partition_index = 1 - mean_overlap``."""
+    profiles = []
+    for a in accs:
+        c = np.asarray(a.choice_counts, np.float64).sum(0)   # (M,)
+        profiles.append(c / max(c.sum(), 1.0))
+    S = len(profiles)
+    if S < 2:
+        return {"mean_overlap": 1.0, "partition_index": 0.0}
+    overlaps = [np.minimum(profiles[i], profiles[j]).sum()
+                for i in range(S) for j in range(i + 1, S)]
+    mean_overlap = float(np.mean(overlaps))
+    return {"mean_overlap": mean_overlap,
+            "partition_index": 1.0 - mean_overlap}
+
+
+# ---------------------------------------------------------------------------
 # Event-relative recovery (scenario engine).
 # ---------------------------------------------------------------------------
 

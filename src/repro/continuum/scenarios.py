@@ -497,3 +497,140 @@ def compile_scenario(scn: Scenario, cfg, key) -> Drivers:
             np.maximum(arrs["s_m"], MIN_SERVICE_TIME), jnp.float32),
         marks=jnp.asarray(marks_arr, jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant scenarios: S per-tenant timelines merged onto ONE fleet.
+#
+# The tenant engine (simulator._build_tenant_parts) consumes the same
+# Drivers pytree with one change: ``n_clients`` gains a tenant axis —
+# (T, S, K), one client schedule per service. All shared-infrastructure
+# fields stay (T, ·): tenants ride the same instances, links and
+# hardware, so each tenant timeline's infra events merge pessimally
+# (any tenant's kill/slowdown/partition hits the shared fleet) while
+# its load events stay scoped to that tenant's own clients.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantScenario:
+    """S per-tenant :class:`Scenario` timelines over one shared fleet.
+
+    Every tenant timeline must target the same (n_nodes, n_instances)
+    topology; each tenant's ``base_clients`` and load events shape its
+    own ``n_clients[:, s, :]`` slice, and infra events from any tenant
+    apply fleet-wide (``tenant_drivers`` merge rules).
+    """
+    name: str
+    tenants: tuple[Scenario, ...]
+    description: str = ""
+
+
+def broadcast_tenants(drv: Drivers, S: int) -> Drivers:
+    """Give all S tenants one shared (T, K) client schedule: the
+    single-tenant drivers with ``n_clients`` broadcast to (T, S, K).
+    Shared-infrastructure fields pass through untouched. Note demand
+    multiplies by S — size ``base_clients`` accordingly."""
+    if drv.n_clients.ndim != 2:
+        raise ValueError(
+            f"broadcast_tenants expects single-tenant (T, K) n_clients, "
+            f"got {drv.n_clients.shape}")
+    T, K = drv.n_clients.shape
+    return drv._replace(n_clients=jnp.broadcast_to(
+        drv.n_clients[:, None, :], (T, S, K)))
+
+
+def tenant_neutral_drivers(cfg, S: int, K: int, M: int,
+                           base_clients: int = 1,
+                           service_time: float | None = None) -> Drivers:
+    """Neutral multi-tenant drivers: every tenant runs ``base_clients``
+    constant clients per LB on an undisturbed fleet (the S-tenant
+    analogue of ``neutral_drivers``; note total demand is S x
+    base_clients x K x 1/dt req/s)."""
+    return broadcast_tenants(
+        neutral_drivers(cfg, K, M, base_clients=base_clients,
+                        service_time=service_time), S)
+
+
+def tenant_drivers(per_tenant: Sequence[Drivers]) -> Drivers:
+    """Merge S single-tenant driver sets onto one shared fleet.
+
+    * ``n_clients`` stacks into (T, S, K) — load stays tenant-scoped.
+    * ``active`` ANDs: an instance any tenant's timeline kills is dead
+      for everyone (it is one physical instance).
+    * ``rtt_scale`` / ``rtt_cut_k`` / ``rtt_cut_m`` take the
+      elementwise max: congestion and partitions are link properties,
+      so the worst modulation any timeline applies is what the shared
+      fabric exhibits.
+    * ``s_m`` takes the elementwise max: a slowdown throttles the
+      instance itself.
+    * ``marks`` union (sorted, -1-padded to MAX_MARKS) so recovery
+      windows key off every tenant's event onsets.
+
+    The pessimal merge keeps per-tenant timelines composable without a
+    cross-tenant event algebra; scope infra events to tenant 0's
+    timeline when only one copy is intended.
+    """
+    S = len(per_tenant)
+    if S < 1:
+        raise ValueError("tenant_drivers needs at least one tenant")
+    shapes = {d.n_clients.shape for d in per_tenant}
+    if len(shapes) != 1 or per_tenant[0].n_clients.ndim != 2:
+        raise ValueError(
+            f"per-tenant drivers must share one (T, K) n_clients "
+            f"shape, got {sorted(shapes)}")
+    if len({d.active.shape for d in per_tenant}) != 1:
+        raise ValueError("per-tenant drivers must share one fleet shape")
+
+    def npf(x):
+        return np.asarray(x)
+
+    active = np.logical_and.reduce([npf(d.active) for d in per_tenant])
+    if not active.any(axis=1).all():
+        dead = int(np.argmin(active.any(axis=1)))
+        raise ValueError(
+            f"merged tenant timelines leave no instance alive at step "
+            f"{dead} — fix the kill/restore timelines")
+    mk = np.concatenate([npf(d.marks) for d in per_tenant])
+    mk = np.unique(mk[mk >= 0])
+    if len(mk) > MAX_MARKS:
+        warnings.warn(
+            f"merged tenant timelines carry {len(mk)} event marks; "
+            f"recovery windows only cover the first {MAX_MARKS}",
+            stacklevel=2)
+        mk = mk[:MAX_MARKS]
+    marks_arr = np.full((MAX_MARKS,), -1, np.int64)
+    marks_arr[:len(mk)] = mk
+    return Drivers(
+        n_clients=jnp.stack([d.n_clients for d in per_tenant], axis=1),
+        active=jnp.asarray(active),
+        rtt_scale=jnp.asarray(np.maximum.reduce(
+            [npf(d.rtt_scale) for d in per_tenant]), jnp.float32),
+        rtt_cut_k=jnp.asarray(np.maximum.reduce(
+            [npf(d.rtt_cut_k) for d in per_tenant]), jnp.float32),
+        rtt_cut_m=jnp.asarray(np.maximum.reduce(
+            [npf(d.rtt_cut_m) for d in per_tenant]), jnp.float32),
+        s_m=jnp.asarray(np.maximum.reduce(
+            [npf(d.s_m) for d in per_tenant]), jnp.float32),
+        marks=jnp.asarray(marks_arr, jnp.int32),
+    )
+
+
+def compile_tenant_scenario(tscn: TenantScenario, cfg, key) -> Drivers:
+    """Compile each tenant's timeline and merge onto the shared fleet.
+
+    Tenant s compiles under ``fold_in(key, s)``, so its stochastic
+    events (LB picks, churn walks) are independent across tenants and
+    stable when other tenants' timelines change.
+    """
+    base = tscn.tenants[0]
+    for s in tscn.tenants[1:]:
+        if (s.n_nodes, s.n_instances) != (base.n_nodes,
+                                          base.n_instances):
+            raise ValueError(
+                f"tenant scenario {tscn.name!r}: every tenant timeline "
+                f"must target the same shared fleet "
+                f"(got {(s.n_nodes, s.n_instances)} vs "
+                f"{(base.n_nodes, base.n_instances)})")
+    return tenant_drivers([
+        compile_scenario(s, cfg, jax.random.fold_in(key, i))
+        for i, s in enumerate(tscn.tenants)])

@@ -99,6 +99,7 @@ import numpy as np
 from repro.continuum import control as qc
 from repro.continuum import metrics as qm
 from repro.continuum import scenarios as qs
+from repro.continuum import tenancy as qt
 from repro.continuum.metrics import (MetricAccumulator, StepSeries,
                                      StreamOutputs)
 from repro.continuum.scenarios import Drivers
@@ -175,10 +176,22 @@ class SimConfig:
     # a feature needs the per-round structure (resilience attempts,
     # player sharding's per-round arrival psum, sequential strategies).
     fused_round: bool = True
+    # --- multi-tenant continuum (repro.continuum.tenancy): S services
+    # sharing the one instance fleet, each with its own QoS deadline
+    # tau_s, client population and bandit fleet; the queue recursion
+    # gains a leading (S,) service axis and cross-service interference
+    # folds into the effective service row. ``None`` — or a degenerate
+    # S=1 config — keeps the engine on the untouched single-service
+    # path (byte-identical HLO; tests/test_tenancy.py). ---
+    tenancy: "qt.TenancyConfig | None" = None
 
     @property
     def num_steps(self) -> int:
         return int(round(self.horizon / self.dt))
+
+    @property
+    def tenancy_on(self) -> bool:
+        return qt.tenancy_enabled(self)
 
     @property
     def resilience_on(self) -> bool:
@@ -225,12 +238,20 @@ class SimOutputs(NamedTuple):
     dropped: jax.Array      # (T, K, C) deadline exhausted without completing
 
 
-def _true_mu(rtt, q, cfg: SimConfig, service_time):
-    """Closed-form P(rtt + (q+1) s Z <= tau), Z ~ LogNormal(0, sigma^2)."""
-    margin = (cfg.tau - rtt) / ((q[None, :] + 1.0) * service_time)
+def _true_mu_tau(rtt, q, tau, sigma, service_time):
+    """Closed-form P(rtt + (q+1) s Z <= tau), Z ~ LogNormal(0, sigma^2).
+
+    Parameterized on the deadline so the multi-tenant engine can score
+    each tenant against its own tau_s; ``_true_mu`` is the
+    single-service view (identical traced ops)."""
+    margin = (tau - rtt) / ((q[None, :] + 1.0) * service_time)
     safe = jnp.maximum(margin, 1e-9)
-    mu = normal_cdf(jnp.log(safe) / cfg.proc_sigma)
+    mu = normal_cdf(jnp.log(safe) / sigma)
     return jnp.where(margin > 0, mu, 0.0)
+
+
+def _true_mu(rtt, q, cfg: SimConfig, service_time):
+    return _true_mu_tau(rtt, q, cfg.tau, cfg.proc_sigma, service_time)
 
 
 # ---------------------------------------------------------------------------
@@ -582,7 +603,33 @@ def build_sim_parts(
     per-attempt draws keyed by global player id), so it shards on the
     ``players`` axis with no new in-loop collectives: retry arrivals
     fold into the SAME per-round (M,) arrival psum.
+
+    **Multi-tenant continuum** (``cfg.tenancy`` with S >= 2): the
+    engine dispatches to ``_build_tenant_parts`` — the same carry
+    layout and scan contract, with the strategy state and accumulator
+    slots holding S-tuples and the queue a shared (S, M) backlog.
+    ``tenancy=None`` or a degenerate S=1 config never reaches that
+    path: this function's single-service body is literally the code
+    that runs, so the pre-tenant program lowers byte-identically
+    (tests/test_tenancy.py).
     """
+    tn = cfg.tenancy
+    if tn is not None and not tn.enabled:
+        # degenerate S=1 config: stays on the single-service path
+        # below, so it must not silently disagree with the scalar
+        # knobs that path reads
+        if abs(tn.taus[0] - cfg.tau) > 1e-12:
+            raise ValueError(
+                f"S=1 TenancyConfig tau {tn.taus[0]} != cfg.tau "
+                f"{cfg.tau}: the single-tenant path reads cfg.tau")
+        if tn.scales[0] != 1.0:
+            raise ValueError(
+                "S=1 TenancyConfig needs a neutral service_scale: the "
+                "single-tenant path reads drivers.s_m unscaled")
+    if qt.tenancy_enabled(cfg):
+        return _build_tenant_parts(
+            strategy_name, cfg, K, M, fused=fused, trace=trace,
+            warmup_steps=warmup_steps, pshard=pshard, **strategy_kw)
     if pshard is not None and pshard.shards == 1:
         pshard = None
     if pshard is not None:
@@ -1042,6 +1089,269 @@ def build_sim_parts(
     return init_fn, step_fn
 
 
+# PRNG salt separating tenant round-key folds from every other fold the
+# engine makes off the round key (resilience uses 101 and 1000+a, but
+# never composes with tenancy anyway). Folding per tenant makes tenant
+# s's draw stream a pure function of (step key, round, tenant, global
+# player id) — invariant to S and to how the player axis is sharded.
+_TENANT_SALT = 7001
+
+
+def _build_tenant_parts(
+    strategy_name: str,
+    cfg: SimConfig,
+    K: int,
+    M: int,
+    fused: bool = True,
+    trace: bool = True,
+    warmup_steps: int = 0,
+    pshard: PlayerSharding | None = None,
+    **strategy_kw,
+):
+    """The multi-tenant engine: S services on one shared fleet.
+
+    Same ``(init_fn, step_fn)`` contract and 9-slot carry layout as
+    ``build_sim_parts`` — the strategy-state and accumulator slots hold
+    S-tuples (one independent bandit fleet and one
+    ``MetricAccumulator`` per tenant) and the queue is the shared
+    (S, M) per-tenant backlog; the chunked/checkpointed drivers index
+    the carry positionally and work unchanged.
+
+    Queue model: a request's position in line is the TOTAL instance
+    backlog ``q.sum(0)`` (tenants share single-worker queues), its
+    service draw uses the tenant's effective row ``s_eff[s]``
+    (``tenancy.TenancyConfig``: per-tenant demand scale + cross-service
+    interference proportional to the backlog share OTHER tenants hold),
+    and the per-round drain is work-conserving processor sharing: the
+    round's ``dt/C`` seconds of capacity retire the same fraction of
+    every tenant's backlog (``work = sum_s q[s]*s_eff[s]`` seconds
+    outstanding; each instance completes ``min(1, (dt/C)/work)`` of
+    it). At S=1 this reduces exactly to the single-service drain — but
+    S=1 configs never trace this path (``build_sim_parts`` dispatch).
+
+    Sharding: per-tenant bandit state is per-player and shards on the
+    ``players`` axis like the single-service engine; the one in-loop
+    collective stays one psum per round, now of the stacked (S, M)
+    arrival matrix. Tenant draws fold ``_TENANT_SALT + s`` off the
+    round key and then key per-player noise by global id, so sharded
+    and unsharded multi-tenant runs match on counting statistics
+    exactly. The resilience / control / recorder layers do not compose
+    with tenancy yet (statically refused); the fused-round megakernel
+    is single-service and falls back to the round scan.
+    """
+    tn = cfg.tenancy
+    S = tn.S
+    if trace:
+        raise ValueError(
+            "the multi-tenant engine is streaming-only: per-tenant "
+            "trajectories are O(S*T*K*...) (set trace=False)")
+    if cfg.resilience_on or cfg.max_retries or cfg.breaker_threshold:
+        raise ValueError(
+            "tenancy does not compose with the resilience layer yet: "
+            "run multi-tenant configs with attempt_timeout=0, "
+            "max_retries=0, breaker_threshold=0")
+    if qc.control_enabled(cfg):
+        raise ValueError(
+            "tenancy does not compose with the control plane yet: "
+            "run multi-tenant configs with control=None")
+    if obr.recorder_enabled(cfg):
+        raise ValueError(
+            "tenancy does not compose with the flight recorder yet: "
+            "run multi-tenant configs with recorder=None")
+    if "params" in strategy_kw:
+        raise ValueError(
+            "explicit params= would share one tau across tenants; "
+            "per-tenant params are derived from TenancyConfig.taus")
+    if pshard is not None and pshard.shards == 1:
+        pshard = None
+    if pshard is not None and K % pshard.shards:
+        raise ValueError(
+            f"K={K} players must be a multiple of the "
+            f"{pshard.shards}-way '{pshard.axis}' mesh axis")
+    K_glob = K
+    K = K if pshard is None else K // pshard.shards
+    T, C = cfg.num_steps, cfg.max_clients
+    taus = tuple(float(x) for x in tn.taus)
+    scales = jnp.asarray(tn.scales, jnp.float32)
+    xi = float(tn.interference)
+    # one independent strategy instance per tenant, each built against
+    # the tenant's own deadline (BanditParams/DecSarsaParams bake tau)
+    strats = tuple(
+        make_strategy(strategy_name,
+                      dataclasses.replace(cfg, tau=taus[s]), K, M,
+                      pshard=pshard, **strategy_kw)
+        for s in range(S))
+    batched_record = fused and strats[0].get("record_rings") is not None
+    subset_maint = fused and strats[0].get("maintain_subset") is not None
+    n_phases = max(cfg.maint_every, 1)
+    n_blocks = -(-K_glob // n_phases)
+    group_width = (n_blocks if pshard is None
+                   else min(n_blocks, -(-K // n_phases) + 1))
+    ev_pre_steps = max(1, int(round(cfg.ev_pre / cfg.dt)))
+    ev_bucket_steps = max(1, int(round(cfg.ev_bucket / cfg.dt)))
+
+    def eff_service(q, s_m):
+        """(S, M) effective service row at the current (S, M) backlog:
+        per-tenant demand scale, plus interference inflating a tenant's
+        service time by xi per unit share of backlog held by OTHERS."""
+        base = s_m[None, :] * scales[:, None]
+        if xi == 0.0:
+            return jnp.broadcast_to(base, (S, M))
+        q_tot = q.sum(0)
+        other = (q_tot[None, :] - q) / (1.0 + q_tot[None, :])
+        return base * (1.0 + xi * other)
+
+    def init_fn(rtt, active0, key, pids=None):
+        if pids is None:
+            if pshard is not None:
+                raise ValueError(
+                    "player-sharded init needs the shard's global "
+                    "player ids (pids) as a sharded operand")
+            pids = jnp.arange(K, dtype=jnp.int32)
+        k_init, k_phase, k_scan = jax.random.split(key, 3)
+        s0 = tuple(
+            strats[s]["init"](rtt, active0,
+                              jax.random.fold_in(k_init, s), pids)
+            for s in range(S))
+        q0 = jnp.zeros((S, M), jnp.float32)
+        groups = _stagger_groups(k_phase, K_glob, n_phases, group_width,
+                                 pids[0], K)
+        accs = tuple(
+            qm.init_accumulator(K, M, C, n_marks=qs.MAX_MARKS,
+                                ev_buckets=cfg.ev_buckets)
+            for _ in range(S))
+        keys = jax.random.split(k_scan, T)
+        return (s0, q0, active0, accs, groups, pids,
+                None, None, None), keys
+
+    def step_fn(rtt, marks, carry, xs):
+        states, q, prev_active, accs, groups, pids, _b, _c, _r = carry
+        t_idx, nc, act, rtt_scale, cut_k, cut_m, s_m, k_step, group = xs
+        # nc is the (S, K) per-tenant client schedule for this step
+        t = t_idx.astype(jnp.float32) * cfg.dt
+        rtt_t = rtt * rtt_scale[None, :] + jnp.minimum(
+            cut_k[:, None], cut_m[None, :])
+
+        changed = jnp.any(act != prev_active)
+        states = tuple(
+            jax.lax.cond(
+                changed,
+                lambda st, _s=s: strats[_s]["on_activity"](st, act,
+                                                           rtt_t, t),
+                lambda st: st, states[s])
+            for s in range(S))
+        if subset_maint:
+            states = tuple(
+                strats[s]["maintain_subset"](states[s], rtt_t, t, group)
+                for s in range(S))
+        else:
+            lb_mask = jnp.zeros((K,), bool).at[group].set(
+                True, mode="drop")
+            states = tuple(
+                strats[s]["maintain"](states[s], rtt_t, t, lb_mask)
+                for s in range(S))
+
+        # oracle + regret per tenant at step start, against the
+        # step-start TOTAL backlog and the tenant's effective row
+        q_tot0 = q.sum(0)
+        s_eff0 = eff_service(q, s_m)
+        mu_s = tuple(
+            _true_mu_tau(rtt_t, q_tot0, taus[s], cfg.proc_sigma,
+                         s_eff0[s])
+            for s in range(S))
+        reg_s = tuple(
+            step_regret(strats[s]["weights"](states[s]), mu_s[s], act)
+            for s in range(S))
+        mask_s = tuple(jnp.arange(C)[None, :] < nc[s][:, None]
+                       for s in range(S))
+        kidx = jnp.arange(K)
+
+        def round_body(rc, r):
+            states, q, arrivals = rc
+            q_tot = q.sum(0)
+            s_eff = eff_service(q, s_m)
+            k_r = jax.random.fold_in(k_step, r)
+            new_states, arr_rows, outs = [], [], []
+            for s in range(S):
+                k_t = jax.random.fold_in(k_r, _TENANT_SALT + s)
+                k_sel, k_noise = jax.random.split(k_t)
+                mask = r < nc[s]
+                choice, st = strats[s]["select"](states[s], k_sel, t,
+                                                 act, pids)
+                z = jnp.exp(cfg.proc_sigma
+                            * prand.player_normal(k_noise, pids))
+                # position in line is the TOTAL backlog: the queue is
+                # shared; only the service draw is tenant-specific
+                proc = (q_tot[choice] + 1.0) * s_eff[s][choice] * z
+                lat = rtt_t[kidx, choice] + proc
+                if batched_record:
+                    st = strats[s]["record_feedback"](st, choice, lat,
+                                                      t, mask)
+                else:
+                    st = strats[s]["record"](st, choice, lat, t, mask)
+                arr_rows.append(jax.ops.segment_sum(
+                    mask.astype(jnp.float32), choice, num_segments=M))
+                new_states.append(st)
+                outs.append((choice, lat, proc))
+            arr_sm = jnp.stack(arr_rows)               # (S, M) local
+            # still ONE psum per round: the stacked per-tenant arrival
+            # matrix crosses the players axis in a single collective
+            arr_all = (arr_sm if pshard is None
+                       else jax.lax.psum(arr_sm, pshard.axis))
+            # work-conserving processor-sharing drain: this round's
+            # dt/C seconds retire the same fraction f of every
+            # tenant's backlog (work = seconds outstanding per
+            # instance at the round-start effective rows)
+            b = q + arr_all
+            work = (b * s_eff).sum(0)
+            f = jnp.minimum(1.0, (cfg.dt / C) / jnp.maximum(work, 1e-9))
+            q = b * (1.0 - f[None, :])
+            return (tuple(new_states), q, arrivals + arr_sm), \
+                tuple(outs)
+
+        (states, q, arr_sm), ys_r = jax.lax.scan(
+            round_body, (states, q, jnp.zeros((S, M), jnp.float32)),
+            jnp.arange(C))
+
+        new_states, new_accs = [], []
+        succ_v, iss_v, reg_v = [], [], []
+        for s in range(S):
+            ch_r, lat_r, proc_r = ys_r[s]
+            choices, lats, procs = ch_r.T, lat_r.T, proc_r.T   # (K, C)
+            st = states[s]
+            if batched_record:
+                st = strats[s]["record_rings"](st, choices, lats, t,
+                                               mask_s[s])
+            rewards = (lats <= taus[s]).astype(jnp.float32)
+            issued = mask_s[s]
+            acc = qm.update_accumulator(
+                accs[s], rewards=rewards, issued=issued,
+                choices=choices, procs=procs, arrivals=arr_sm[s],
+                regret=reg_s[s], mu=mu_s[s], t_idx=t_idx,
+                warmup_steps=warmup_steps, marks=marks,
+                ev_pre_steps=ev_pre_steps,
+                ev_bucket_steps=ev_bucket_steps,
+                attempts=issued.astype(jnp.int32),
+                dropped=jnp.zeros_like(issued), brk_open=None,
+                served=None)
+            issf = issued.astype(jnp.float32)
+            succ_v.append((rewards * issf).sum())
+            iss_v.append(issf.sum())
+            reg_v.append(reg_s[s].sum())
+            new_states.append(st)
+            new_accs.append(acc)
+        # per-step series carry one scalar PER TENANT: the streamed
+        # StepSeries fields come out (T, S)
+        ys = StepSeries(succ=jnp.stack(succ_v),
+                        issued=jnp.stack(iss_v),
+                        regret=jnp.stack(reg_v),
+                        attempts=jnp.stack(iss_v))
+        return (tuple(new_states), q, act, tuple(new_accs), groups,
+                pids, None, None, None), ys
+
+    return init_fn, step_fn
+
+
 def build_sim_fn(
     strategy_name: str,
     cfg: SimConfig,
@@ -1088,11 +1398,19 @@ def build_sim_fn(
     reference point for benchmarks/bandit_scale.py.
     """
     T = cfg.num_steps
+    tn_S = qt.tenancy_size(cfg)
     init_fn, step_fn = build_sim_parts(
         strategy_name, cfg, K, M, fused=fused, trace=trace,
         warmup_steps=warmup_steps, pshard=pshard, **strategy_kw)
 
     def run(rtt, drivers, key, service_time=None, pids=None):
+        if tn_S and (drivers.n_clients.ndim != 3
+                     or drivers.n_clients.shape[-2] != tn_S):
+            raise ValueError(
+                f"multi-tenant run needs a (T, S={tn_S}, K) n_clients "
+                f"schedule (got {drivers.n_clients.shape}): compile "
+                "with scenarios.compile_tenant_scenario / "
+                "tenant_neutral_drivers / broadcast_tenants")
         if service_time is not None:
             drivers = drivers._replace(s_m=jnp.broadcast_to(
                 jnp.asarray(service_time, jnp.float32), drivers.s_m.shape))
@@ -1117,10 +1435,17 @@ def build_sim_fn(
             # function of t_idx — already replicated, no reduction.
             def allsum(x):
                 return jax.lax.psum(x, pshard.axis)
-            acc = acc._replace(arrivals_m=allsum(acc.arrivals_m),
-                               proc_hist=allsum(acc.proc_hist),
-                               ev_succ=allsum(acc.ev_succ),
-                               ev_n=allsum(acc.ev_n))
+
+            def reduce_acc(a):
+                return a._replace(arrivals_m=allsum(a.arrivals_m),
+                                  proc_hist=allsum(a.proc_hist),
+                                  ev_succ=allsum(a.ev_succ),
+                                  ev_n=allsum(a.ev_n))
+
+            # the tenant engine carries one accumulator per tenant;
+            # each reduces its fleet-level partials independently
+            acc = (tuple(reduce_acc(a) for a in acc) if tn_S
+                   else reduce_acc(acc))
             ys = StepSeries(*(allsum(y) for y in ys))
         # control counters ride out with the stream: fleet-level fields
         # are replicated across player shards by construction (every
@@ -1206,6 +1531,11 @@ def _resolve_drivers(cfg, K, M, drivers, n_clients, active):
         return drivers, ()
     fresh = n_clients is None and active is None
     drv = qs.neutral_drivers(cfg, K, M, n_clients=n_clients, active=active)
+    if qt.tenancy_enabled(cfg):
+        # module-built single-tenant schedules broadcast to every
+        # tenant; explicitly-passed Drivers (above) must already carry
+        # the (T, S, K) tenant axis — run() checks and says how
+        drv = qs.broadcast_tenants(drv, cfg.tenancy.S)
     return drv, ((1,) if fresh else ())
 
 
@@ -1256,7 +1586,10 @@ def run_sim_batch(
     """
     S, K, M = rtts.shape
     drv, donate = _resolve_drivers(cfg, K, M, drivers, n_clients, active)
-    batched = drv.n_clients.ndim == 3
+    # lane-batched detection keys off `active` ((T, M) unbatched,
+    # (S, T, M) batched): the tenant engine's UNBATCHED n_clients is
+    # already (T, S_tenants, K) = ndim 3, so n_clients can't tell
+    batched = drv.active.ndim == 3
     run = build_sim_fn(strategy_name, cfg, K, M, **strategy_kw)
     with _quiet_donation():
         return jax.jit(jax.vmap(run, in_axes=(0, 0 if batched else None, 0)),
@@ -1268,7 +1601,7 @@ def _mesh_axis_sizes(mesh) -> dict:
 
 
 def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False,
-                  rec_on: bool = False):
+                  rec_on: bool = False, tn_S: int = 0):
     """``shard_map`` specs for a (possibly vmapped) streaming run.
 
     Resolved per field through the logical rule table
@@ -1281,6 +1614,13 @@ def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False,
     ``("grid",)`` for the lane axis of the evaluation grid. Mesh axes
     absent from ``mesh`` drop out, so the same specs serve the 1-D grid
     mesh and the 2-D (``data``, ``players``) continuum mesh.
+
+    ``tn_S`` > 0 is the multi-tenant layout: ``n_clients`` carries a
+    replicated (S,) tenant axis between T and K, the accumulator slot
+    is an S-tuple of per-tenant accumulator specs, and the series
+    scalars gain a trailing replicated tenant axis. The tenant axis is
+    NEVER sharded — tenants share the fleet, so every device simulates
+    all S services for its players/lanes.
     """
     from repro.sharding import logical_to_spec
 
@@ -1290,7 +1630,8 @@ def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False,
     in_specs = (
         spec("players", None),                    # rtt (K, M)
         Drivers(
-            n_clients=spec(None, "players"),      # (T, K)
+            n_clients=(spec(None, None, "players") if tn_S
+                       else spec(None, "players")),   # (T[, S], K)
             active=spec(None, None),              # (T, M) — replicated
             rtt_scale=spec(None, None),
             rtt_cut_k=spec(None, "players"),      # (T, K)
@@ -1299,25 +1640,32 @@ def _stream_specs(mesh, lead: tuple = (), ctrl_on: bool = False,
             marks=spec(None)),
         spec(None),                               # key (2,)
     )
+    acc_spec = qm.MetricAccumulator(
+        succ_kc=spec("players", None),
+        n_kc=spec("players", None),
+        arrivals_m=spec(None),                    # psum-reduced
+        choice_counts=spec("players", None),
+        proc_hist=spec(None, None),               # psum-reduced
+        regret_k=spec("players"),
+        vb_k=spec("players"),
+        prev_mu=spec("players", None),
+        steps_measured=spec(),                    # replicated by design
+        ev_succ=spec(None, None),                 # psum-reduced
+        ev_n=spec(None, None),                    # psum-reduced
+        att_k=spec("players"),
+        timeout_k=spec("players"),
+        drop_k=spec("players"),
+        open_km=spec("players", None))
+    series_spec = (
+        StepSeries(succ=spec(None, None), issued=spec(None, None),
+                   regret=spec(None, None), attempts=spec(None, None))
+        if tn_S else
+        StepSeries(succ=spec(None), issued=spec(None),
+                   regret=spec(None), attempts=spec(None)))
     out_specs = StreamOutputs(
-        acc=qm.MetricAccumulator(
-            succ_kc=spec("players", None),
-            n_kc=spec("players", None),
-            arrivals_m=spec(None),                # psum-reduced
-            choice_counts=spec("players", None),
-            proc_hist=spec(None, None),           # psum-reduced
-            regret_k=spec("players"),
-            vb_k=spec("players"),
-            prev_mu=spec("players", None),
-            steps_measured=spec(),                # replicated by design
-            ev_succ=spec(None, None),             # psum-reduced
-            ev_n=spec(None, None),                # psum-reduced
-            att_k=spec("players"),
-            timeout_k=spec("players"),
-            drop_k=spec("players"),
-            open_km=spec("players", None)),
-        series=StepSeries(succ=spec(None), issued=spec(None),
-                          regret=spec(None), attempts=spec(None)),
+        acc=(tuple(acc_spec for _ in range(tn_S)) if tn_S
+             else acc_spec),
+        series=series_spec,
         ctrl=(None if not ctrl_on else qc.ControlCounters(
             shed_k=spec("players"),               # per-player, shard-local
             admit_frac_sum=spec(),                # replicated by design
@@ -1413,7 +1761,8 @@ def build_sim_grid_fn(
 
     in_specs, out_specs = _stream_specs(mesh, lead=("grid",),
                                         ctrl_on=qc.control_enabled(cfg),
-                                        rec_on=obr.recorder_enabled(cfg))
+                                        rec_on=obr.recorder_enabled(cfg),
+                                        tn_S=qt.tenancy_size(cfg))
     if pshard is None:
         inner = shard_map(vrun, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
@@ -1507,11 +1856,11 @@ def run_sim_grid(
             return jnp.concatenate([x, jnp.repeat(x[-1:], pad, 0)])
         rtts = _pad(rtts)
         keys = _pad(keys)
-        if drv.n_clients.ndim == 3:
+        if drv.active.ndim == 3:        # lane-batched (see run_sim_batch)
             drv = jax.tree.map(_pad, drv)
     S_run = S + pad
     fn = run_grid
-    if drv.n_clients.ndim == 2:
+    if drv.active.ndim == 2:
         # shared schedule -> one lane per scenario; broadcast INSIDE
         # the traced program so the host never materializes S copies
         # of identical (T, ·) buffers
@@ -1579,7 +1928,8 @@ def build_sim_players_fn(
                        pshard=PlayerSharding("players", Dp), **strategy_kw)
     in_specs, out_specs = _stream_specs(mesh,
                                         ctrl_on=qc.control_enabled(cfg),
-                                        rec_on=obr.recorder_enabled(cfg))
+                                        rec_on=obr.recorder_enabled(cfg),
+                                        tn_S=qt.tenancy_size(cfg))
     # global player ids ride in as a sharded operand (see
     # build_sim_parts): the shard's identity arrives on the same data
     # path as its rtt rows

@@ -351,6 +351,58 @@ def stream_cell(outs, *, rho: float, bucket_s: float,
     return cell
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant collectors (StreamOutputs.acc is a tuple of S accumulators).
+# ---------------------------------------------------------------------------
+
+def collect_tenants(outs, *, rho: float) -> MetricSet:
+    """Per-tenant QoS + cross-tenant fairness from a tenant run
+    (``SimConfig.tenancy`` with S >= 2, where ``outs.acc`` is a tuple
+    of per-service accumulators)."""
+    accs = outs.acc
+    if not isinstance(accs, tuple):
+        raise TypeError("collect_tenants expects a tenant run "
+                        "(StreamOutputs.acc must be a tuple of per-"
+                        "tenant MetricAccumulators)")
+    ms = MetricSet()
+    sat = qm.tenant_qos_satisfaction_stream(accs, rho)
+    qos = qm.tenant_qos_stream(accs)
+    served = qm.tenant_served_stream(accs)
+    for s in range(len(accs)):
+        ms.add("repro_tenant_qos_satisfaction_pct", float(sat[s]),
+               help="tenant clients with success ratio >= rho, %",
+               tenant=s)
+        ms.add("repro_tenant_qos_ratio", float(qos[s]),
+               help="tenant overall QoS success ratio", tenant=s)
+        ms.add("repro_tenant_requests", float(served[s]), "counter",
+               help="tenant post-warmup issued requests", tenant=s)
+    for k, v in qm.tenant_fairness_stream(accs).items():
+        ms.add(f"repro_fairness_{k}", v,
+               help=f"cross-tenant fairness index: {k.replace('_', ' ')}")
+    part = qm.tenant_partition_stream(accs)
+    ms.add("repro_tenant_partition_index", part["partition_index"],
+           help="1 - mean pairwise routing overlap between tenants")
+    ms.add("repro_tenant_mean_overlap", part["mean_overlap"],
+           help="mean pairwise min-overlap of tenant routing profiles")
+    return ms
+
+
+def tenant_cell(outs, *, rho: float) -> dict:
+    """One multi-tenant benchmark-cell dict: per-tenant QoS columns
+    (index = tenant id) plus the cross-tenant fairness and
+    self-partitioning scalars — the ``multi_tenant`` lane's schema."""
+    accs = outs.acc
+    cell = {
+        "tenant_qos_sat_pct": [
+            float(v) for v in qm.tenant_qos_satisfaction_stream(accs, rho)],
+        "tenant_qos_ratio": [float(v) for v in qm.tenant_qos_stream(accs)],
+        "tenant_requests": [float(v) for v in qm.tenant_served_stream(accs)],
+    }
+    cell.update(qm.tenant_fairness_stream(accs))
+    cell.update(qm.tenant_partition_stream(accs))
+    return cell
+
+
 def write_metrics(ms: MetricSet, json_path=None, prom_path=None) -> None:
     if json_path is not None:
         with open(json_path, "w") as f:

@@ -1,0 +1,53 @@
+"""Repository hygiene locks.
+
+Compiled-python artifacts were committed once in this repo's history;
+the tracked set was since cleaned and ``.gitignore`` covers the
+patterns, but nothing STOPPED a re-introduction — ``git add .`` happily
+re-stages an already-tracked ``.pyc``. These tests make the invariant
+durable: the index must never contain bytecode or packaging artifacts,
+and ``.gitignore`` must keep covering the patterns that let them creep
+in. Skipped gracefully outside a git checkout (e.g. an sdist).
+"""
+import fnmatch
+import os
+import subprocess
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# anything matching these must never be tracked
+FORBIDDEN = ("*.pyc", "*.pyo", "*.pyd", "*/__pycache__/*", "__pycache__/*",
+             "*.egg-info/*", "*/.pytest_cache/*", ".coverage", "*.prof")
+# and .gitignore must keep covering the generators of the mess
+REQUIRED_IGNORES = ("__pycache__/", "*.py[cod]", ".pytest_cache/")
+
+
+def _tracked_files():
+    try:
+        out = subprocess.run(["git", "ls-files", "-z"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    return [f for f in out.stdout.split("\0") if f]
+
+
+def test_no_tracked_bytecode_or_build_artifacts():
+    files = _tracked_files()
+    assert files, "git ls-files returned nothing — broken checkout?"
+    bad = sorted(f for f in files
+                 if any(fnmatch.fnmatch(f, pat) for pat in FORBIDDEN))
+    assert not bad, (
+        f"{len(bad)} forbidden artifact(s) tracked in git: {bad[:10]} — "
+        f"run `git rm --cached` on them; .gitignore already excludes "
+        f"the patterns")
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(REPO_ROOT, ".gitignore")) as f:
+        lines = {ln.strip() for ln in f if ln.strip()
+                 and not ln.startswith("#")}
+    missing = [pat for pat in REQUIRED_IGNORES if pat not in lines]
+    assert not missing, f".gitignore lost required patterns: {missing}"

@@ -1,0 +1,535 @@
+"""Multi-tenant continuum: S services on one shared fleet — and the
+degenerate-parity contract the tenant axis ships under.
+
+Four invariant families:
+
+1. **S=1 degenerate parity** — ``tenancy=None`` and a degenerate
+   ``TenancyConfig(taus=(cfg.tau,))`` lower to the byte-identical HLO
+   for every strategy x {plain, resilient, controlled} x fused/unfused
+   (the gate is Python-level static config, not a traced branch), the
+   degenerate program reproduces the committed HEAD golden
+   (``tests/data/neutral_stream_ref.npz``) bit-for-bit including
+   through the chunked streaming loop, and (subprocess) the
+   player-sharded program text stays byte-identical at 8/2/1-way.
+2. **S>1 execution parity** — player-sharded tenant runs reproduce the
+   unsharded stream exactly on every counting stat at 8/2/1-way,
+   chunked == unchunked bit-for-bit, and killed-and-resumed
+   checkpoint streams match the uninterrupted run on every per-tenant
+   accumulator field.
+3. **Tenant-engine semantics** — per-tenant issued counts follow the
+   per-tenant client schedules, cross-service interference and
+   per-tenant service scales degrade QoS monotonically, and the
+   compositions the engine statically refuses (trace mode, resilience,
+   control plane, flight recorder, explicit params) raise.
+4. **Fairness indices** — Gini/Jain/Herfindahl property tests: bounds,
+   permutation and scale invariance, all-equal and one-hot degenerate
+   cases, the Jain = 1/(n*HHI) identity, and agreement with the O(S^2)
+   mean-absolute-difference Gini reference. Driven by ``hypothesis``
+   when installed, and by a seeded 300-vector random sweep through the
+   SAME property checkers when it is not (this container ships no
+   hypothesis), so the properties are exercised either way.
+"""
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_sub
+from repro.continuum import (SimConfig, TenancyConfig, broadcast_tenants,
+                             compile_tenant_scenario, get_tenant_library,
+                             gini_index, herfindahl_index, jain_index,
+                             make_topology, neutral_drivers, run_sim_stream,
+                             tenant_drivers, tenant_neutral_drivers)
+from repro.continuum import metrics as qm
+from repro.continuum import scenarios as qs
+from repro.continuum.control import ControlConfig
+from repro.continuum.simulator import build_sim_fn
+from repro.obs import RecorderConfig
+
+K, M = 10, 4
+CFG = SimConfig(horizon=12.0)
+WARM = 30
+STRATEGIES = (("qedgeproxy", {}), ("proxy_mity", dict(alpha=0.9)),
+              ("dec_sarsa", {}))
+REF = os.path.join(os.path.dirname(__file__), "data",
+                   "neutral_stream_ref.npz")
+# the engine-layer variants the degenerate config must not perturb
+VARIANTS = (
+    ("plain", {}),
+    ("resilient", dict(attempt_timeout=0.090, max_retries=2,
+                       retry_backoff=0.002, breaker_threshold=5,
+                       breaker_cooldown=1.0)),
+    ("controlled", dict(control=ControlConfig(
+        managed=2, warmup=0.5, up_queue=2.0, down_queue=0.3, hold=0.3,
+        action_cooldown=1.0, batch=1, admit=True, target_queue=3.0,
+        admit_floor=0.3))),
+)
+# an honestly multi-tenant config: tight foreground + relaxed batch
+TN2 = TenancyConfig(taus=(CFG.tau, 0.150), interference=0.3)
+CFG2 = dataclasses.replace(CFG, tenancy=TN2)
+
+
+def _inputs():
+    rtt = make_topology(jax.random.PRNGKey(2), K, M).lb_instance_rtt()
+    return rtt, jax.random.PRNGKey(5)
+
+
+def _tenant_qos(acc) -> float:
+    return (np.asarray(acc.succ_kc, np.float64).sum()
+            / max(np.asarray(acc.n_kc, np.float64).sum(), 1.0))
+
+
+# -- invariant 1: S=1 degenerate parity ---------------------------------
+
+def test_tenancy_config_validation():
+    assert TenancyConfig(taus=(0.08,)).S == 1
+    assert not TenancyConfig(taus=(0.08,)).enabled
+    assert TenancyConfig(taus=(0.08, 0.15)).enabled
+    assert TenancyConfig(taus=(0.08, 0.15)).scales == (1.0, 1.0)
+    assert not SimConfig().tenancy_on
+    assert not dataclasses.replace(
+        CFG, tenancy=TenancyConfig(taus=(CFG.tau,))).tenancy_on
+    assert CFG2.tenancy_on
+    with pytest.raises(ValueError, match="at least one"):
+        TenancyConfig(taus=())
+    with pytest.raises(ValueError, match="positive"):
+        TenancyConfig(taus=(0.08, -0.1))
+    with pytest.raises(ValueError, match="service_scale"):
+        TenancyConfig(taus=(0.08, 0.15), service_scale=(1.0,))
+    with pytest.raises(ValueError, match="interference"):
+        TenancyConfig(taus=(0.08,), interference=-0.5)
+
+
+def test_degenerate_s1_must_match_scalar_knobs():
+    """An S=1 config that disagrees with the scalar tau/s_m the
+    single-service path reads is refused, not silently ignored."""
+    rtt, key = _inputs()
+    for tn in (TenancyConfig(taus=(0.999,)),
+               TenancyConfig(taus=(CFG.tau,), service_scale=(2.0,))):
+        cfg = dataclasses.replace(CFG, tenancy=tn)
+        with pytest.raises(ValueError, match="S=1 TenancyConfig"):
+            build_sim_fn("qedgeproxy", cfg, K, M, trace=False,
+                         warmup_steps=WARM)
+
+
+@pytest.mark.parametrize("fused", (False, True), ids=("scan", "fusedround"))
+@pytest.mark.parametrize("vlabel,vkw", VARIANTS, ids=[v for v, _ in VARIANTS])
+@pytest.mark.parametrize("strat,kw", STRATEGIES,
+                         ids=[s for s, _ in STRATEGIES])
+def test_neutral_hlo_byte_identity(strat, kw, vlabel, vkw, fused):
+    """``tenancy=None`` and the degenerate S=1 TenancyConfig lower to
+    the SAME program text across strategies x engine variants x
+    fused/unfused: parity is structural, not numerical luck."""
+    rtt, key = _inputs()
+    drv = neutral_drivers(CFG, K, M)
+    texts = []
+    for tn in (None, TenancyConfig(taus=(CFG.tau,))):
+        cfg = dataclasses.replace(CFG, tenancy=tn, **vkw)
+        run = build_sim_fn(strat, cfg, K, M, fused=fused, trace=False,
+                           warmup_steps=WARM, **kw)
+        texts.append(jax.jit(run).lower(rtt, drv, key).as_text())
+    assert texts[0] == texts[1], f"{strat}/{vlabel}/fused={fused}"
+
+
+@pytest.mark.parametrize("strat,kw", STRATEGIES,
+                         ids=[s for s, _ in STRATEGIES])
+def test_degenerate_bit_identity_vs_head(strat, kw):
+    """The degenerate S=1 program reproduces the committed HEAD golden
+    bit-for-bit — also through the chunked streaming loop — and keeps
+    the single-service output shape (one accumulator, (T,) series)."""
+    rtt, key = _inputs()
+    ref = np.load(REF)
+    cfg = dataclasses.replace(CFG, tenancy=TenancyConfig(taus=(CFG.tau,)))
+    for chunk in (None, 25):
+        out = run_sim_stream(strat, rtt, cfg, key, warmup_steps=WARM,
+                             chunk_steps=chunk, **kw)
+        assert isinstance(out.acc, qm.MetricAccumulator)
+        assert np.asarray(out.series.succ).ndim == 1
+        for f in out.acc._fields:
+            if f"{strat}.acc.{f}" in ref.files:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(out.acc, f)),
+                    ref[f"{strat}.acc.{f}"],
+                    err_msg=f"{strat} chunk={chunk} acc.{f}")
+        for f in out.series._fields:
+            if f"{strat}.series.{f}" in ref.files:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(out.series, f)),
+                    ref[f"{strat}.series.{f}"],
+                    err_msg=f"{strat} chunk={chunk} series.{f}")
+
+
+@pytest.mark.slow
+def test_degenerate_sharded_hlo_byte_identity_8dev():
+    """The player-sharded program text stays byte-identical between
+    ``tenancy=None`` and the degenerate S=1 config at 8-, 2- and 1-way
+    player sharding: the static gate composes with shard_map."""
+    out = run_sub("""
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from repro.continuum import (SimConfig, TenancyConfig,
+                                     make_topology, neutral_drivers)
+        from repro.continuum.simulator import build_sim_players_fn
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, WARM = 16, 4, 10
+        cfg0 = SimConfig(horizon=3.0)
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        drv = neutral_drivers(cfg0, K, M)
+        for D in (8, 2, 1):
+            mesh = make_continuum_mesh(players=D,
+                                       devices=jax.devices()[:D])
+            texts = []
+            for tn in (None, TenancyConfig(taus=(cfg0.tau,))):
+                cfg = dataclasses.replace(cfg0, tenancy=tn)
+                run, _ = build_sim_players_fn("qedgeproxy", cfg, K, M,
+                                              mesh=mesh,
+                                              warmup_steps=WARM)
+                texts.append(
+                    jax.jit(run).lower(rtt, drv, key).as_text())
+            assert texts[0] == texts[1], f"D={D} sharded HLO differs"
+            print(f"D={D} identical")
+        print("OK degenerate sharded parity")
+    """)
+    assert "OK degenerate sharded parity" in out
+
+
+# -- invariant 2: S>1 execution parity ----------------------------------
+
+def test_tenant_chunked_matches_unchunked():
+    rtt, key = _inputs()
+    drv = tenant_neutral_drivers(CFG2, 2, K, M, base_clients=1)
+    full = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                          warmup_steps=WARM)
+    chun = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                          warmup_steps=WARM, chunk_steps=25)
+    assert isinstance(full.acc, tuple) and len(full.acc) == 2
+    for s, (a_full, a_chun) in enumerate(zip(full.acc, chun.acc)):
+        for f in a_full._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a_chun, f)),
+                np.asarray(getattr(a_full, f)),
+                err_msg=f"tenant {s} acc.{f}")
+    for f in full.series._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(chun.series, f)),
+            np.asarray(getattr(full.series, f)), err_msg=f"series.{f}")
+
+
+def test_tenant_checkpoint_resume_exact(tmp_path):
+    """Killed-and-resumed == uninterrupted with the per-tenant bandit
+    fleets and the (S, M) queue in the carry — including under a
+    different resumed chunk length."""
+    rtt, key = _inputs()
+    drv = tenant_neutral_drivers(CFG2, 2, K, M, base_clients=1)
+    d = str(tmp_path / "ck")
+    full = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                          warmup_steps=WARM, chunk_steps=40)
+    part = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                          warmup_steps=WARM, chunk_steps=40,
+                          checkpoint_dir=d, stop_at_step=80)
+    assert len(np.asarray(part.series.succ)) == 80
+    res = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                         warmup_steps=WARM, chunk_steps=25,
+                         checkpoint_dir=d, resume=True)
+    for s, (a_full, a_res) in enumerate(zip(full.acc, res.acc)):
+        for f in a_full._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a_res, f)),
+                np.asarray(getattr(a_full, f)),
+                err_msg=f"tenant {s} acc.{f}")
+    for f in full.series._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.series, f)),
+            np.asarray(getattr(full.series, f)), err_msg=f"series.{f}")
+    shutil.rmtree(d)
+
+
+@pytest.mark.slow
+def test_tenant_sharded_matches_unsharded_8dev():
+    """Player-sharded S=2 tenant runs reproduce the unsharded stream:
+    every counting stat exact at 8/2/1-way (float fields to f32
+    reassociation tolerance) — per-player noise is keyed by global
+    player id and the single per-round psum carries the stacked (S, M)
+    arrival matrix, so shard width never changes the round."""
+    out = run_sub("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.continuum import (SimConfig, TenancyConfig,
+                                     compile_tenant_scenario,
+                                     get_tenant_library, make_topology,
+                                     run_sim_players, run_sim_stream)
+        from repro.launch.mesh import make_continuum_mesh
+
+        K, M, WARM = 16, 6, 10
+        tn = TenancyConfig(taus=(0.080, 0.150), interference=0.3)
+        cfg = SimConfig(horizon=4.0, tenancy=tn)
+        rtt = make_topology(jax.random.PRNGKey(0), K, M).lb_instance_rtt()
+        key = jax.random.PRNGKey(7)
+        lib = get_tenant_library(cfg.horizon, K, M, n_tenants=2)
+        drv = compile_tenant_scenario(lib["mt_tenant_surge"], cfg,
+                                      jax.random.PRNGKey(3))
+        COUNTS = {"succ_kc", "n_kc", "arrivals_m", "choice_counts",
+                  "proc_hist", "steps_measured", "ev_succ", "ev_n",
+                  "att_k", "timeout_k", "drop_k", "open_km"}
+        for strat, kw in (("qedgeproxy", {}), ("dec_sarsa", {}),
+                          ("proxy_mity", dict(alpha=0.9))):
+            ref = run_sim_stream(strat, rtt, cfg, key, drivers=drv,
+                                 warmup_steps=WARM, **kw)
+            for D in (8, 2, 1):
+                mesh = make_continuum_mesh(
+                    players=D, devices=jax.devices()[:D])
+                got = run_sim_players(
+                    strat, rtt, cfg, key, drivers=drv,
+                    warmup_steps=WARM, mesh=mesh, **kw)
+                for s in range(2):
+                    for name in ref.acc[s]._fields:
+                        a = np.asarray(getattr(ref.acc[s], name))
+                        b = np.asarray(getattr(got.acc[s], name))
+                        if name in COUNTS:
+                            np.testing.assert_array_equal(
+                                b, a,
+                                err_msg=f"{strat} D{D} t{s} {name}")
+                        else:
+                            np.testing.assert_allclose(
+                                b, a, rtol=2e-5, atol=2e-5,
+                                err_msg=f"{strat} D{D} t{s} {name}")
+                np.testing.assert_array_equal(
+                    np.asarray(got.series.issued),
+                    np.asarray(ref.series.issued),
+                    err_msg=f"{strat} D{D} series.issued")
+            print(strat, "tenant parity ok")
+        print("OK tenant parity")
+    """)
+    assert "OK tenant parity" in out
+
+
+# -- invariant 3: tenant-engine semantics -------------------------------
+
+def test_tenant_counts_follow_schedules():
+    """Each tenant's issued/arrival totals follow ITS client schedule,
+    and the (T, S) series columns agree with the per-tenant accs."""
+    rtt, key = _inputs()
+    drv = tenant_neutral_drivers(CFG2, 2, K, M, base_clients=1)
+    # give tenant 1 twice the clients of tenant 0
+    nc = np.asarray(drv.n_clients).copy()
+    nc[:, 1, :] *= 2
+    drv = drv._replace(n_clients=jnp.asarray(nc))
+    out = run_sim_stream("qedgeproxy", rtt, CFG2, key, drivers=drv,
+                         warmup_steps=WARM)
+    T_meas = CFG2.num_steps - WARM
+    issued = [float(np.asarray(a.n_kc).sum()) for a in out.acc]
+    assert issued[0] == T_meas * K * 1
+    assert issued[1] == T_meas * K * 2
+    for s, a in enumerate(out.acc):
+        assert float(np.asarray(a.arrivals_m).sum()) == issued[s]
+    # series columns are per-tenant: full-horizon totals dominate the
+    # post-warmup accumulator totals, in the same 1:2 ratio
+    col = np.asarray(out.series.issued)
+    assert col.shape == (CFG2.num_steps, 2)
+    np.testing.assert_array_equal(col.sum(0),
+                                  [CFG2.num_steps * K, CFG2.num_steps * K * 2])
+
+
+def test_interference_degrades_qos_monotonically():
+    rtt, key = _inputs()
+    qos = []
+    for xi in (0.0, 1.0):
+        cfg = dataclasses.replace(
+            CFG, tenancy=TenancyConfig(taus=(CFG.tau, CFG.tau),
+                                       interference=xi))
+        drv = tenant_neutral_drivers(cfg, 2, K, M, base_clients=2)
+        out = run_sim_stream("qedgeproxy", rtt, cfg, key, drivers=drv,
+                             warmup_steps=WARM)
+        qos.append(np.mean([_tenant_qos(a) for a in out.acc]))
+    assert qos[1] < qos[0], qos
+
+
+def test_service_scale_slows_heavy_tenant():
+    """Same tau, but tenant 1's requests are 4x heavier: its QoS must
+    come out no better — and the shared queue drags tenant 0 too, so
+    both sit below the all-light baseline."""
+    rtt, key = _inputs()
+    base_tn = TenancyConfig(taus=(CFG.tau, CFG.tau))
+    heavy_tn = TenancyConfig(taus=(CFG.tau, CFG.tau),
+                             service_scale=(1.0, 4.0))
+    qos = {}
+    for name, tn in (("base", base_tn), ("heavy", heavy_tn)):
+        cfg = dataclasses.replace(CFG, tenancy=tn)
+        drv = tenant_neutral_drivers(cfg, 2, K, M, base_clients=2)
+        out = run_sim_stream("qedgeproxy", rtt, cfg, key, drivers=drv,
+                             warmup_steps=WARM)
+        qos[name] = [_tenant_qos(a) for a in out.acc]
+    assert qos["heavy"][1] <= qos["base"][1]
+    assert np.mean(qos["heavy"]) < np.mean(qos["base"])
+
+
+def test_tenant_composition_refusals():
+    rtt, key = _inputs()
+    with pytest.raises(ValueError, match="streaming-only"):
+        build_sim_fn("qedgeproxy", CFG2, K, M, trace=True)
+    with pytest.raises(ValueError, match="resilience"):
+        build_sim_fn("qedgeproxy",
+                     dataclasses.replace(CFG2, attempt_timeout=0.09,
+                                         max_retries=2),
+                     K, M, trace=False)
+    with pytest.raises(ValueError, match="control"):
+        build_sim_fn("qedgeproxy",
+                     dataclasses.replace(CFG2, control=ControlConfig(
+                         admit=True)),
+                     K, M, trace=False)
+    with pytest.raises(ValueError, match="recorder"):
+        build_sim_fn("qedgeproxy",
+                     dataclasses.replace(CFG2, recorder=RecorderConfig(
+                         capacity=64)),
+                     K, M, trace=False)
+    with pytest.raises(ValueError, match="params"):
+        from repro.core.bandit import BanditParams
+        build_sim_fn("qedgeproxy", CFG2, K, M, trace=False,
+                     params=BanditParams(tau=CFG.tau))
+    # tenant configs need tenant-axis drivers: a (T, K) schedule from
+    # the single-service path is refused with guidance
+    run = build_sim_fn("qedgeproxy", CFG2, K, M, trace=False,
+                       warmup_steps=WARM)
+    with pytest.raises(ValueError, match="tenant"):
+        run(rtt, neutral_drivers(CFG2, K, M), key)
+
+
+def test_tenant_driver_merge():
+    """``tenant_drivers`` stacks client schedules on axis 1, ANDs the
+    activity masks, and takes the pessimal (max) modulation rows."""
+    cfg = dataclasses.replace(CFG2, horizon=2.0)
+    base = qs.neutral_drivers(cfg, K, M, base_clients=1)
+    a = np.asarray(base.active).copy()
+    a[:, 0] = False
+    other = base._replace(
+        active=jnp.asarray(a),
+        rtt_scale=base.rtt_scale * 2.0,
+        n_clients=base.n_clients * 3)
+    drv = tenant_drivers([base, other])
+    assert drv.n_clients.shape == (cfg.num_steps, 2, K)
+    np.testing.assert_array_equal(np.asarray(drv.n_clients[:, 1]),
+                                  np.asarray(other.n_clients))
+    assert not np.asarray(drv.active)[:, 0].any()
+    np.testing.assert_array_equal(np.asarray(drv.rtt_scale),
+                                  np.asarray(other.rtt_scale))
+    # ANDing to a dead fleet is refused
+    dead = base._replace(active=jnp.zeros_like(base.active, bool))
+    with pytest.raises(ValueError, match="no instance"):
+        tenant_drivers([base, dead])
+    # broadcast_tenants replicates a (T, K) schedule per tenant
+    b = broadcast_tenants(base, 3)
+    assert b.n_clients.shape == (cfg.num_steps, 3, K)
+    with pytest.raises(ValueError, match="tenant"):
+        broadcast_tenants(b, 2)
+
+
+def test_tenant_library_compiles():
+    cfg = dataclasses.replace(CFG2, horizon=3.0)
+    lib = get_tenant_library(cfg.horizon, K, M, n_tenants=2)
+    assert set(lib) == {"mt_baseline", "mt_tenant_surge",
+                       "mt_noisy_neighbor", "mt_priority_inversion"}
+    for name, tscn in lib.items():
+        drv = compile_tenant_scenario(tscn, cfg, jax.random.PRNGKey(0))
+        assert drv.n_clients.shape == (cfg.num_steps, 2, K), name
+        assert drv.active.shape == (cfg.num_steps, M), name
+    with pytest.raises(ValueError, match="tenants"):
+        get_tenant_library(cfg.horizon, K, M, n_tenants=1)
+
+
+# -- invariant 4: fairness-index properties -----------------------------
+
+def _gini_reference(x: np.ndarray) -> float:
+    """O(S^2) mean-absolute-difference definition."""
+    x = np.asarray(x, np.float64)
+    n = x.size
+    mu = x.mean()
+    if n == 0 or mu <= 0:
+        return 0.0
+    return float(np.abs(x[:, None] - x[None, :]).sum() / (2 * n * n * mu))
+
+
+def _check_fairness_properties(x: np.ndarray, rng: np.random.Generator):
+    """The full property battery on one non-negative vector — shared by
+    the hypothesis harness and the seeded fallback sweep."""
+    n = x.size
+    g, j, h = gini_index(x), jain_index(x), herfindahl_index(x)
+    # bounds
+    assert 0.0 <= g <= 1.0 + 1e-9
+    assert 1.0 / n - 1e-9 <= j <= 1.0 + 1e-9
+    assert 1.0 / n - 1e-9 <= h <= 1.0 + 1e-9
+    # permutation invariance
+    p = rng.permutation(x)
+    assert gini_index(p) == pytest.approx(g, abs=1e-9)
+    assert jain_index(p) == pytest.approx(j, abs=1e-9)
+    assert herfindahl_index(p) == pytest.approx(h, abs=1e-9)
+    # scale invariance
+    for c in (7.5, 1e-3):
+        assert gini_index(c * x) == pytest.approx(g, rel=1e-6, abs=1e-9)
+        assert jain_index(c * x) == pytest.approx(j, rel=1e-6, abs=1e-9)
+        assert herfindahl_index(c * x) == pytest.approx(h, rel=1e-6,
+                                                       abs=1e-9)
+    # O(S^2) Gini reference
+    assert g == pytest.approx(_gini_reference(x), abs=1e-7)
+    # Jain = 1/(n*HHI) on non-degenerate vectors
+    if x.sum() > 0:
+        assert j == pytest.approx(1.0 / (n * h), rel=1e-9)
+
+
+def test_fairness_degenerate_cases():
+    for n in (1, 2, 5, 64):
+        eq = np.full(n, 3.7)
+        assert gini_index(eq) == pytest.approx(0.0, abs=1e-9)
+        assert jain_index(eq) == pytest.approx(1.0)
+        assert herfindahl_index(eq) == pytest.approx(1.0 / n)
+        hot = np.zeros(n)
+        hot[0] = 1.0
+        assert gini_index(hot) == pytest.approx(1.0 - 1.0 / n, abs=1e-9)
+        assert jain_index(hot) == pytest.approx(1.0 / n)
+        assert herfindahl_index(hot) == pytest.approx(1.0)
+    # zero/empty conventions
+    assert gini_index([]) == 0.0
+    assert jain_index([]) == 1.0
+    assert herfindahl_index([]) == 0.0
+    assert gini_index(np.zeros(4)) == 0.0
+    assert jain_index(np.zeros(4)) == 1.0
+    assert herfindahl_index(np.zeros(4)) == pytest.approx(0.25)
+
+
+def test_fairness_properties_seeded_sweep():
+    """300 seeded random vectors through the property battery — the
+    always-on counterpart of the hypothesis harness below."""
+    rng = np.random.default_rng(0)
+    for i in range(300):
+        n = int(rng.integers(1, 40))
+        kind = i % 3
+        if kind == 0:
+            x = rng.uniform(0.0, 100.0, n)
+        elif kind == 1:
+            x = rng.exponential(5.0, n)     # heavy-tailed
+        else:
+            x = np.where(rng.uniform(size=n) < 0.5, 0.0,
+                         rng.uniform(0.0, 10.0, n))  # sparse
+        _check_fairness_properties(x, rng)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                          # container has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(hst.lists(hst.floats(min_value=0.0, max_value=1e6,
+                                allow_nan=False, allow_infinity=False),
+                     min_size=1, max_size=64))
+    def test_fairness_properties_hypothesis(xs):
+        _check_fairness_properties(np.asarray(xs, np.float64),
+                                   np.random.default_rng(1))
